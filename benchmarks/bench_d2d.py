@@ -1,0 +1,36 @@
+"""Fig. 13: D2D-link behaviour — (a) linear bandwidth degradation as lanes
+are disabled, (b) effective bandwidth vs transfer size.
+
+The TPU analogue of the D2D link is the pod axis. (a) maps to the elastic
+re-mesh contract (throughput ~ surviving data-parallel ranks); (b) to the
+ring-collective efficiency model from core/topology (latency-vs-bandwidth
+regime, like the paper's 96% utilization at 16 kB transfers).
+"""
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.topology import POD_LINK_BW, collective_seconds
+
+LINK_LATENCY = 1e-6  # per-hop launch overhead (the paper's 61-cycle analogue)
+
+
+def run():
+    # (a) lane disabling -> linear degradation (38 PHYs in the paper)
+    lanes = 38
+    for disabled in (0, 8, 16, 24):
+        frac = (lanes - disabled) / lanes
+        row(f"fig13a_d2d_disable_{disabled}", LINK_LATENCY,
+            f"{frac * POD_LINK_BW / 1e9:.2f} GB/s;linear_frac={frac:.2f}")
+
+    # (b) effective bandwidth vs transfer size (latency-bound -> bw-bound)
+    for size in (1024, 4096, 16384, 65536, 262144, 1048576):
+        t = LINK_LATENCY + size / POD_LINK_BW
+        eff = size / t
+        row(f"fig13b_d2d_xfer_{size}B", t,
+            f"{eff / 1e9:.2f} GB/s;util={eff / POD_LINK_BW:.2%}")
+
+    # pod-axis gradient all-reduce cost (the framework's real D2D traffic)
+    for gbytes in (0.1, 1.0, 2.45):  # up to grok-1's per-device param bytes
+        t = collective_seconds("all_reduce", gbytes * 1e9, "pod", 2)
+        row(f"fig13_pod_allreduce_{gbytes}GB", t,
+            f"{2 * gbytes / t:.1f} GB/s effective")

@@ -1,0 +1,28 @@
+"""Fig. 11: GCN layer (144x144 features) on citation-style graphs — the
+paper's mixed dense + sparse-dense ML inference workload."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import sparse as sp
+from repro.models import gcn
+
+GRAPHS = [("webkb", 877, 1.8), ("cora", 2708, 2.0), ("citeseer", 3327, 1.4)]
+F = 144
+
+
+def run():
+    rng = np.random.default_rng(0)
+    params = gcn.init_params(jax.random.PRNGKey(0), [F, F])
+    for name, n, deg in GRAPHS:
+        L = max(int(round(deg)) + 1, 2)
+        cols = rng.integers(0, n, (n, L)).astype(np.int32)
+        cols[:, 0] = np.arange(n)
+        adj = sp.EllMatrix(np.full((n, L), 1.0 / L, np.float32), cols, (n, n))
+        feats = jnp.asarray(rng.standard_normal((n, F)), jnp.float32)
+        fn = jax.jit(lambda av, ac, x: gcn.forward(params, av, ac, x))
+        t = timeit(fn, jnp.asarray(adj.values), jnp.asarray(adj.cols), feats)
+        flops = 2 * n * F * F + 2 * adj.values.size * F
+        row(f"fig11_gcn_{name}", t,
+            f"{flops / t / 1e9:.2f} GFLOP/s;nodes={n}")

@@ -1,0 +1,49 @@
+"""Fig. 9a (dense LA) + Fig. 10 (multi-precision GEMM, expanding accum).
+
+The paper sweeps FP64->FP8 with expanding accumulation; our sweep is
+fp32/bf16/fp8 (DESIGN.md §6.3). CPU timing exercises the jitted xla path;
+`derived` reports measured GFLOP/s and the per-precision TPU peak the
+roofline uses.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import precision
+from repro.kernels import ops
+
+
+def run():
+    rng = np.random.default_rng(0)
+    m = k = n = 512
+    a32 = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b32 = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    flops = 2 * m * k * n
+
+    gemm = jax.jit(lambda a, b: ops.gemm(a, b, impl="xla"))
+    t = timeit(gemm, a32, b32)
+    row("fig9a_gemm_512", t, f"{flops / t / 1e9:.2f} GFLOP/s")
+
+    # Fig. 10 sweep: numerics at each precision + projected TPU peak
+    exact = np.asarray(a32 @ b32)
+    for pol in ("fp32", "bf16", "fp8"):
+        p = precision.POLICIES[pol]
+        out = precision.expanding_gemm(a32, b32, pol, impl="ref")
+        rel = float(np.linalg.norm(np.asarray(out, np.float32) - exact)
+                    / np.linalg.norm(exact))
+        peak = precision.peak_flops(pol)
+        row(
+            f"fig10_gemm_{pol}", t,
+            f"rel_err={rel:.1e};tpu_peak={peak/1e12:.0f}TFLOP/s",
+        )
+
+    # blocked double-buffered GEMM (C4) at a memory-capped tile size
+    from repro.core.pipeline import tiled_gemm
+
+    big_a = jnp.asarray(rng.standard_normal((2048, 512)), jnp.float32)
+    tg = jax.jit(lambda a, b: tiled_gemm(a, b, tile_m=512,
+                                         gemm_fn=lambda x, y: ops.gemm(x, y, impl="xla")))
+    t = timeit(tg, big_a, b32)
+    row("fig9a_tiled_gemm_2048x512", t,
+        f"{2 * 2048 * 512 * 512 / t / 1e9:.2f} GFLOP/s")

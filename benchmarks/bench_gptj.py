@@ -1,0 +1,25 @@
+"""Fig. 12: GPT-J inference in non-autoregressive (= prefill) mode, token
+rate vs sequence length; attention runs the FlashAttention-2 dataflow."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.configs.base import get_config
+from repro.models import registry
+
+CFG = get_config("occamy-gptj", reduced=True).replace(
+    num_layers=4, d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+    d_ff=1024, vocab_size=8192,
+)
+
+
+def run():
+    params = registry.init_params(CFG, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    fwd = jax.jit(lambda p, b: registry.forward(p, CFG, b)[0])
+    for seq in (128, 256, 512, 1024):
+        tokens = jnp.asarray(rng.integers(0, CFG.vocab_size, (1, seq)),
+                             jnp.int32)
+        t = timeit(fwd, params, {"tokens": tokens})
+        row(f"fig12_gptj_prefill_s{seq}", t, f"{seq / t:.1f} tok/s")

@@ -1,0 +1,45 @@
+"""Fig. 9b: stencil codes via indirect offset streams (SARIS analogue).
+
+Paper grids: 64^2 tiles (2D) and 16^3 tiles (3D); shapes include j2d5pt,
+j3d7pt, j3d27pt and higher-radius stars.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.kernels import ops
+
+
+def star(radius, dims=3):
+    offs = [[0, 0, 0]]
+    for a in range(dims):
+        for r in range(1, radius + 1):
+            for s in (1, -1):
+                o = [0, 0, 0]
+                o[a] = s * r
+                offs.append(o)
+    return np.asarray(offs)
+
+
+BOX27 = np.asarray([[dx, dy, dz] for dx in (-1, 0, 1) for dy in (-1, 0, 1)
+                    for dz in (-1, 0, 1)])
+
+
+def run():
+    rng = np.random.default_rng(0)
+    cases = {
+        "j2d5pt_64x64": ((64, 64, 1), star(1, 2)),
+        "j2d9pt_64x64": ((64, 64, 1), star(2, 2)),
+        "j3d7pt_16c": ((16, 16, 16), star(1, 3)),
+        "j3d13pt_16c": ((16, 16, 16), star(2, 3)),
+        "j3d27pt_16c": ((16, 16, 16), BOX27),
+    }
+    for name, (shape, offs) in cases.items():
+        g = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        w = rng.standard_normal(len(offs)).astype(np.float32)
+        fn = jax.jit(lambda x, offs=offs, w=w: ops.stencil(x, offs, w, impl="xla"))
+        t = timeit(fn, g)
+        flops = 2 * g.size * len(offs)
+        row(f"fig9b_{name}", t,
+            f"{flops / t / 1e9:.2f} GFLOP/s;{len(offs)}pt")

@@ -1,0 +1,35 @@
+"""Benchmark plumbing: timing + CSV emission.
+
+Each module reproduces one paper table/figure on the framework's kernels.
+The container is CPU-only, so wall-times are CPU numbers; every row also
+carries a `derived` column with the figure-of-merit the paper reports
+(GFLOP/s, GCOMP/s, tok/s, GB/s) computed from the measured time, plus
+TPU-peak projections where the metric is roofline-derived.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def timeit(fn, *args, reps: int = 5, warmup: int = 1) -> float:
+    """Median wall-time per call in seconds (jit included via warmup)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, seconds: float, derived: str):
+    ROWS.append((name, seconds * 1e6, derived))
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

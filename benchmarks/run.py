@@ -1,0 +1,19 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py for the
+CPU-timing caveats and the derived figure-of-merit definitions).
+"""
+
+
+def main() -> None:
+    from benchmarks import (bench_d2d, bench_gcn, bench_gemm, bench_gptj,
+                            bench_spmm, bench_spmspm, bench_stencil)
+
+    print("name,us_per_call,derived")
+    for mod in (bench_gemm, bench_stencil, bench_spmm, bench_spmspm,
+                bench_gcn, bench_gptj, bench_d2d):
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Double-buffered tiling (paper C4, Fig. 4d) at the framework level.
+
+Inside a Pallas kernel, double buffering is automatic (two in-flight block
+copies per operand — the DMA core's job). This module provides the same
+discipline for *HBM-capacity-bound* computations above the kernel level:
+process a large operand in tiles under a scan so peak memory stays at
+O(tile), while XLA overlaps the gather of tile i+1 with compute on tile i
+(latency-tolerant bulk transfer + fine-grain compute, Sec. III-B).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def tiled_map(fn: Callable, x: jax.Array, tile: int, axis: int = 0):
+    """Apply fn tile-by-tile along `axis` with O(tile) live memory."""
+    n = x.shape[axis]
+    assert n % tile == 0, (n, tile)
+    xt = jnp.moveaxis(x, axis, 0).reshape(n // tile, tile, *(
+        s for i, s in enumerate(x.shape) if i != axis
+    ))
+    ys = jax.lax.map(fn, xt)
+    out = ys.reshape(n // tile * ys.shape[1], *ys.shape[2:])
+    return jnp.moveaxis(
+        out.reshape(n, *ys.shape[2:]), 0, axis
+    ) if axis else out.reshape(n, *ys.shape[2:])
+
+
+def tiled_gemm(a: jax.Array, b: jax.Array, tile_m: int = 1024,
+               gemm_fn: Callable | None = None):
+    """C = A @ B streaming A in row tiles (double-buffered against compute)."""
+    from repro.kernels import ops
+
+    gemm_fn = gemm_fn or ops.gemm
+    return tiled_map(lambda at: gemm_fn(at, b), a, tile_m, axis=0)
+
+
+def microbatched(step_fn: Callable, n_micro: int):
+    """Gradient-accumulation wrapper: split the batch into n_micro tiles and
+    scan, double-buffering batch tiles against fwd/bwd compute. Returns a
+    step with identical signature operating on the full batch."""
+
+    def wrapped(params, batch):
+        def split(x):
+            b = x.shape[0]
+            assert b % n_micro == 0
+            return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            loss, grads = step_fn(params, mb)
+            return jax.tree.map(jnp.add, acc, (loss, grads)), None
+
+        zero_loss = jnp.float32(0.0)
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (loss, grads), _ = jax.lax.scan(
+            body, (zero_loss, zero_grads), micro
+        )
+        scale = 1.0 / n_micro
+        return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+
+    return wrapped

@@ -1,0 +1,57 @@
+"""Multi-precision policies with expanding accumulation (paper C6, Fig. 10).
+
+Occamy's FPU scales 1x/2x/4x/8x from FP64 to FP8 with widening sum-dot-product
+accumulation. TPU analogue: fp32 -> bf16 -> fp8 on the MXU, with
+``preferred_element_type`` providing the expanding accumulate. FP64 has no MXU
+support (DESIGN.md §6.3): fp32 is the top precision and the Fig. 10 sweep maps
+to fp32/bf16/fp8.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topology import PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    name: str
+    compute_dtype: jnp.dtype
+    accum_dtype: jnp.dtype  # the EXPanding accumulator
+    flop_multiplier: float  # MXU throughput relative to bf16
+
+
+POLICIES = {
+    # paper analogue:            FP64            FP32/FP16 EXP    FP8 EXP
+    "fp32": Precision("fp32", jnp.float32, jnp.float32, 0.5),
+    "bf16": Precision("bf16", jnp.bfloat16, jnp.float32, 1.0),
+    "fp8": Precision("fp8", jnp.float8_e4m3fn, jnp.float32, 2.0),
+    "fp8_e5m2": Precision("fp8_e5m2", jnp.float8_e5m2, jnp.float32, 2.0),
+}
+
+
+def peak_flops(policy: str | Precision) -> float:
+    p = POLICIES[policy] if isinstance(policy, str) else policy
+    return PEAK_FLOPS_BF16 * p.flop_multiplier
+
+
+def cast_gemm_operands(a: jax.Array, b: jax.Array, policy: str | Precision):
+    p = POLICIES[policy] if isinstance(policy, str) else policy
+    return a.astype(p.compute_dtype), b.astype(p.compute_dtype), p
+
+
+def expanding_gemm(a, b, policy: str | Precision = "bf16", impl=None):
+    """GEMM at the given precision with expanding accumulation (Fig. 10)."""
+    from repro.kernels import ops
+
+    p = POLICIES[policy] if isinstance(policy, str) else policy
+    return ops.gemm(
+        a.astype(p.compute_dtype),
+        b.astype(p.compute_dtype),
+        out_dtype=p.accum_dtype,
+        accum_dtype=p.accum_dtype,
+        impl=impl,
+    )

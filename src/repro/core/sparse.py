@@ -1,0 +1,120 @@
+"""Sparse tensor formats (paper Sec. II-A: value/index-pair major axes).
+
+The SUs accept "any sparse tensor format whose major axis is given by a
+value-index array pair". We provide the two TPU-idiomatic members:
+
+- **ELL** (padded value/index rows): the direct value-index pair, used by the
+  spmm/spmspm XLA paths, GCN, and the intersection kernel. Padding entries
+  carry value 0 (they contribute nothing) and index 0.
+- **BSR** (block-sparse rows): the MXU adaptation — unstructured sparsity is
+  exploited at (bm x bk)-tile granularity, with scalar-prefetched tile
+  coordinates playing the role of the SU index stream (DESIGN.md §6.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class EllMatrix:
+    """Padded ELL rows: values/cols (R, L); logical shape (R, C)."""
+
+    values: np.ndarray
+    cols: np.ndarray
+    shape: tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int((self.values != 0).sum())
+
+    def todense(self) -> np.ndarray:
+        R, C = self.shape
+        out = np.zeros((R, C), self.values.dtype)
+        np.add.at(out, (np.arange(R)[:, None], self.cols), self.values)
+        return out
+
+
+def dense_to_ell(dense: np.ndarray, max_nnz: int | None = None) -> EllMatrix:
+    R, C = dense.shape
+    L = max_nnz or max(int((dense != 0).sum(1).max()), 1)
+    values = np.zeros((R, L), dense.dtype)
+    cols = np.zeros((R, L), np.int32)
+    for r in range(R):
+        (nz,) = np.nonzero(dense[r])
+        nz = nz[:L]
+        values[r, : len(nz)] = dense[r, nz]
+        cols[r, : len(nz)] = nz
+    return EllMatrix(values, cols, (R, C))
+
+
+def random_ell(
+    rng: np.random.Generator, R: int, C: int, density: float, dtype=np.float32
+) -> EllMatrix:
+    """Unstructured random sparse matrix (paper Fig. 9c/d operands)."""
+    L = max(int(round(C * density)), 1)
+    cols = np.sort(
+        np.argsort(rng.random((R, C)), axis=1)[:, :L].astype(np.int32), axis=1
+    )
+    values = rng.standard_normal((R, L)).astype(dtype)
+    return EllMatrix(values, cols, (R, C))
+
+
+@dataclasses.dataclass
+class BsrMatrix:
+    """Block-sparse rows: tiles sorted by (row, col) coordinate.
+
+    Every row-block owns >= 1 tile (empty row-blocks get a zero tile) so the
+    spmm kernel's output blocks are always initialized.
+    """
+
+    tile_values: np.ndarray  # (T, bm, bk)
+    tile_rows: np.ndarray  # (T,) int32, block-row index, sorted
+    tile_cols: np.ndarray  # (T,) int32, block-col index
+    shape: tuple[int, int]
+
+    @property
+    def block_shape(self) -> tuple[int, int]:
+        return self.tile_values.shape[1], self.tile_values.shape[2]
+
+    @property
+    def density(self) -> float:
+        bm, bk = self.block_shape
+        total = (self.shape[0] // bm) * (self.shape[1] // bk)
+        return len(self.tile_rows) / max(total, 1)
+
+    def todense(self) -> np.ndarray:
+        bm, bk = self.block_shape
+        out = np.zeros(self.shape, self.tile_values.dtype)
+        for t in range(len(self.tile_rows)):
+            r, c = self.tile_rows[t] * bm, self.tile_cols[t] * bk
+            out[r : r + bm, c : c + bk] += self.tile_values[t]
+        return out
+
+
+def dense_to_bsr(dense: np.ndarray, bm: int = 8, bk: int = 128) -> BsrMatrix:
+    R, C = dense.shape
+    assert R % bm == 0 and C % bk == 0, (R, C, bm, bk)
+    nr, nc = R // bm, C // bk
+    tiles, rows, cols = [], [], []
+    blocked = dense.reshape(nr, bm, nc, bk).transpose(0, 2, 1, 3)
+    for i in range(nr):
+        found = False
+        for j in range(nc):
+            tile = blocked[i, j]
+            if np.any(tile != 0):
+                tiles.append(tile)
+                rows.append(i)
+                cols.append(j)
+                found = True
+        if not found:  # keep output blocks initialized
+            tiles.append(np.zeros((bm, bk), dense.dtype))
+            rows.append(i)
+            cols.append(0)
+    return BsrMatrix(
+        np.stack(tiles),
+        np.asarray(rows, np.int32),
+        np.asarray(cols, np.int32),
+        (R, C),
+    )

@@ -1,0 +1,107 @@
+"""Streaming-unit programming model (paper C1/C2) as a Pallas front-end.
+
+Occamy's SUs map *streams* — ≤4D affine address sequences or index-driven
+indirect sequences — onto FP register reads/writes, so the issue slots carry
+only compute. The TPU translation: a stream is a (block_shape, index_map)
+pair; the Pallas grid pipeline performs the address generation and the
+double-buffered HBM->VMEM copies, and the kernel body carries only compute.
+
+This module makes that correspondence explicit and first-class:
+
+  AffineStream(block, loop)    ~ SU 4D affine stream descriptor (Fig. 4a)
+  IndirectStream(block, idx)   ~ SU indirect stream (Fig. 4b): a scalar-
+                                 prefetched index array drives the index_map
+  stream_compute(...)          ~ FREP + SU setup: launches the kernel with
+                                 streams bound to its operands
+
+The production kernels (kernels/*.py) are hand-scheduled instances of this
+model; stream_compute is the generic entry point used by examples and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@dataclasses.dataclass(frozen=True)
+class AffineStream:
+    """≤4D affine stream: block_shape + an index_map over the grid ids."""
+
+    block_shape: tuple
+    index_map: Callable  # (*grid_ids) -> block coords
+
+    def spec(self, n_prefetch: int = 0) -> pl.BlockSpec:
+        if n_prefetch == 0:
+            return pl.BlockSpec(self.block_shape, self.index_map)
+        # scalar-prefetch grids pass the prefetch refs after the grid ids
+        fn = self.index_map
+        return pl.BlockSpec(
+            self.block_shape, lambda *a: fn(*a[: len(a) - n_prefetch])
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class IndirectStream:
+    """Index-driven stream: `index_map` may read the scalar-prefetched index
+    arrays (passed as trailing args), Occamy's 8/16/32-bit index streams."""
+
+    block_shape: tuple
+    index_map: Callable  # (*grid_ids, *prefetch_refs) -> block coords
+
+    def spec(self, n_prefetch: int) -> pl.BlockSpec:
+        return pl.BlockSpec(self.block_shape, self.index_map)
+
+
+def stream_compute(
+    body: Callable,
+    *,
+    grid: tuple,
+    in_streams: Sequence[AffineStream | IndirectStream],
+    out_stream: AffineStream,
+    out_shape: jax.ShapeDtypeStruct,
+    index_args: Sequence[jax.Array] = (),
+    scratch: Sequence = (),
+    interpret: bool = False,
+):
+    """Run `body` with operands bound to streams (the FREP+SU launch).
+
+    index_args are scalar-prefetched (SMEM-resident) index arrays available
+    to every IndirectStream's index_map and to the body as leading refs.
+    """
+    n_pre = len(index_args)
+    in_specs = [s.spec(n_pre) for s in in_streams]
+    out_specs = out_stream.spec(n_pre)
+    if n_pre:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=n_pre,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=list(scratch),
+        )
+        return pl.pallas_call(
+            body, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret
+        )(*index_args)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=list(scratch),
+        interpret=interpret,
+    )
+
+
+def gemm_streams(M: int, N: int, K: int, bm: int, bn: int, bk: int):
+    """The paper's Fig. 4a GEMM loop nest as three affine streams."""
+    a = AffineStream((bm, bk), lambda i, j, k: (i, k))
+    b = AffineStream((bk, bn), lambda i, j, k: (k, j))
+    o = AffineStream((bm, bn), lambda i, j, k: (i, j))
+    grid = (M // bm, N // bn, K // bk)
+    return grid, [a, b], o

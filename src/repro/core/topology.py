@@ -1,0 +1,74 @@
+"""Hierarchy mapping: Occamy levels <-> TPU mesh axes (paper C5) + a
+bandwidth model used for collective cost estimates in §Perf analysis.
+
+Occamy:  core(3 SUs) -> cluster(8+1 cores, 128KiB SPM) -> group(4 clusters)
+         -> chiplet(6 groups, HBM2E 381GiB/s) -> system(2 chiplets, D2D 8GiB/s)
+TPU pod: MXU/VPU -> chip(VMEM ~128MiB, HBM 819GB/s) -> ICI axis `model`
+         -> ICI axis `data` -> inter-pod `pod` (DCN/optical)
+
+Both hierarchies share the property the paper calls *symmetry*: constant
+architectural bandwidth per level, so code written level-agnostically (pjit
+specs here, cluster-agnostic C there) performs predictably.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# task-spec hardware constants (TPU v5e class)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_LINK_BW = 50e9  # per link
+POD_LINK_BW = 25e9  # inter-pod (D2D analogue): half ICI
+
+
+@dataclasses.dataclass(frozen=True)
+class Level:
+    name: str
+    occamy_analogue: str
+    fanout: int
+    bw: float  # bytes/s available to one participant at this level
+
+
+def levels(multi_pod: bool = False):
+    lv = [
+        Level("chip", "cluster (SPM+DMA)", 1, HBM_BW),
+        Level("model", "chiplet crossbar", 16, ICI_LINK_BW),
+        Level("data", "group interconnect", 16, ICI_LINK_BW),
+    ]
+    if multi_pod:
+        lv.append(Level("pod", "D2D link", 2, POD_LINK_BW))
+    return lv
+
+
+def axis_bw(axis: str) -> float:
+    return POD_LINK_BW if axis == "pod" else ICI_LINK_BW
+
+
+def collective_seconds(kind: str, nbytes: float, axis: str, n: int) -> float:
+    """Ring-algorithm time for `nbytes` (per-device buffer) over axis size n."""
+    bw = axis_bw(axis)
+    if n <= 1:
+        return 0.0
+    frac = (n - 1) / n
+    if kind == "all_reduce":
+        return 2 * frac * nbytes / bw
+    if kind in ("all_gather", "reduce_scatter", "all_to_all"):
+        return frac * nbytes / bw
+    if kind == "permute":
+        return nbytes / bw
+    raise ValueError(kind)
+
+
+def dp_allreduce_seconds(param_bytes_per_device: float, mesh_axes: dict) -> float:
+    """Gradient all-reduce cost across the data (and pod) axes — the step's
+    D2D-link analogue term."""
+    t = collective_seconds(
+        "all_reduce", param_bytes_per_device, "data", mesh_axes.get("data", 1)
+    )
+    if mesh_axes.get("pod", 1) > 1:
+        t += collective_seconds(
+            "all_reduce", param_bytes_per_device, "pod", mesh_axes["pod"]
+        )
+    return t

@@ -1,0 +1,132 @@
+"""FlashAttention-2 forward kernel (paper Sec. V-C uses FA-2 inside GPT-J).
+
+Online-softmax over KV blocks with the running (m, l, acc) statistics held in
+VMEM scratch across the innermost grid dimension. The KV block stream is the
+paper's C4 double-buffered DMA tile stream; causal/window masking is applied
+with iota position comparisons, and fully-masked blocks skip their compute
+(pl.when) — the control-flow analogue of the SUs skipping dead iterations.
+Supports GQA (H = K * G) via the k/v index maps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale, causal, window, q_offset, sk, bq, bk, nk,
+):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = q_offset + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # block-level early-out: skip fully-masked KV blocks
+    run = None
+    if causal:  # block strictly above the causal diagonal
+        run = ik * bk <= q_offset + (iq + 1) * bq - 1
+    if window:  # block entirely older than every q row's window
+        in_window = (ik + 1) * bk - 1 > q_offset + iq * bq - window
+        run = in_window if run is None else jnp.logical_and(run, in_window)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        mask = k_pos < sk
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        # fully-masked rows: exp(NEG - NEG) == 1, zero them via the mask
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p, v_ref[0, 0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    if run is None:
+        _compute()
+    else:
+        pl.when(run)(_compute)
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, K, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    bq, bk = min(bq, Sq), min(bk, Sk)
+    pq, pk_ = (-Sq) % bq, (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk_:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk_), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk_), (0, 0)))
+    nq, nk = (Sq + pq) // bq, (Sk + pk_) // bk
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fa_kernel, scale=scale, causal=causal, window=window,
+            q_offset=q_offset, sk=Sk, bq=bq, bk=bk, nk=nk,
+        ),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

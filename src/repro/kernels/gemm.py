@@ -1,0 +1,74 @@
+"""Tiled multi-precision GEMM kernel (paper Fig. 9a / Fig. 10).
+
+The (grid, BlockSpec) pair is the TPU analogue of the paper's 4D affine SU
+streams: three grid loops (M, N, K tiles) + the MXU's internal unroll mirror
+the GEMM mapping described in Sec. II-A. Accumulation is *expanding* (fp8/bf16
+inputs, fp32 accumulator) like the paper's EXP sum-dot-product kernels; the
+Pallas pipeline double-buffers HBM->VMEM tile copies exactly as the cluster
+DMA double-buffers SPM tiles (C4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, out_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=acc_ref.dtype
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm_pallas(
+    a: jax.Array,  # (M, K)
+    b: jax.Array,  # (K, N)
+    *,
+    out_dtype=None,
+    accum_dtype=jnp.float32,
+    bm: int = 256,
+    bk: int = 256,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    out_dtype = out_dtype or a.dtype
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+
+    pm, pk, pn = (-M) % bm, (-K) % bk, (-N) % bn
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    Mp, Kp, Np = M + pm, K + pk, N + pn
+    nk = Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, nk=nk, out_dtype=out_dtype),
+        grid=(Mp // bm, Np // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), accum_dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a, b)
+    return out[:M, :N]

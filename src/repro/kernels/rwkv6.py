@@ -1,0 +1,134 @@
+"""Chunked linear-attention kernel with data-dependent decay (RWKV6 / SSD).
+
+Implements S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T in chunks: the recurrent
+state lives in VMEM scratch across the sequential chunk grid dimension (the
+TPU analogue of Occamy keeping the accumulator resident in the FPU register
+file while SUs stream operands). Intra-chunk work is two MXU matmuls; the
+cumulative-decay cumsum is computed as a lower-triangular matmul so the whole
+kernel is MXU-resident. Handles both the RWKV read-out (u-bonus, o_t from
+S_{t-1}) and the SSD read-out (o_t from S_t).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _la_kernel(
+    r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sout_ref, s_ref,
+    *, ssd, nc, chunk,
+):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    C = chunk
+    r = r_ref[0].astype(jnp.float32)  # (C, N)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)  # (C, M)
+    wl = w_ref[0].astype(jnp.float32)  # (C, N)
+
+    # inclusive cumsum as lower-triangular matmul (MXU-resident)
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    ).astype(jnp.float32)
+    inc = jax.lax.dot(tri, wl, preferred_element_type=jnp.float32)
+    exc = inc - wl
+    e = inc if ssd else exc
+    total = inc[-1:, :]  # (1, N)
+
+    S = s_ref[...]
+    r_dec = r * jnp.exp(e)
+    o = jax.lax.dot(r_dec, S, preferred_element_type=jnp.float32)  # (C, M)
+
+    k_dec = k * jnp.exp(-inc)
+    scores = jax.lax.dot_general(
+        r_dec, k_dec, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (C, C)
+    t_i = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    s_i = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    mask = (t_i >= s_i) if ssd else (t_i > s_i)
+    scores = jnp.where(mask, scores, 0.0)
+    o = o + jax.lax.dot(scores, v, preferred_element_type=jnp.float32)
+    if not ssd:  # rwkv diagonal bonus
+        u = u_ref[0].astype(jnp.float32)  # (1, N) broadcast row
+        o = o + jnp.sum(r * u * k, axis=-1, keepdims=True) * v
+
+    k_tail = k * jnp.exp(total - inc)
+    s_new = jnp.exp(total).T * S + jax.lax.dot_general(
+        k_tail, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_ref[...] = s_new
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    @pl.when(c == nc - 1)
+    def _flush():
+        sout_ref[0] = s_new
+
+
+def linear_attention_pallas(
+    r, k, v, w_log, u=None, s0=None, *, chunk: int = 32, interpret: bool = False
+):
+    """r,k,w_log: (B,H,T,N); v: (B,H,T,M); u: (H,N) or None; s0: (B,H,N,M)."""
+    B, H, T, N = r.shape
+    M = v.shape[-1]
+    ssd = u is None
+    pad = (-T) % chunk
+    if pad:
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r, k, v, w_log = zp(r), zp(k), zp(v), zp(w_log)
+    Tp = T + pad
+    nc = Tp // chunk
+    BH = B * H
+
+    flat = lambda x: x.reshape(BH, Tp, x.shape[-1])
+    rf, kf, vf, wf = flat(r), flat(k), flat(v), flat(w_log)
+    uf = (
+        jnp.zeros((BH, 1, N), jnp.float32)
+        if ssd
+        else jnp.tile(u[None, :, None, :], (B, 1, 1, 1)).reshape(BH, 1, N)
+    )
+    s0f = (
+        jnp.zeros((BH, N, M), jnp.float32)
+        if s0 is None
+        else s0.reshape(BH, N, M).astype(jnp.float32)
+    )
+
+    o, s_out = pl.pallas_call(
+        functools.partial(_la_kernel, ssd=ssd, nc=nc, chunk=chunk),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, M), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, N), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, N, M), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, M), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, N, M), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Tp, M), v.dtype),
+            jax.ShapeDtypeStruct((BH, N, M), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, M), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf, s0f)
+    return (
+        o.reshape(B, H, Tp, M)[:, :, :T],
+        s_out.reshape(B, H, N, M),
+    )

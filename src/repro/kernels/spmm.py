@@ -1,0 +1,127 @@
+"""Sparse-dense matmul kernels (paper Fig. 9c).
+
+Two forms:
+
+1. ``spmm_pallas`` — ELL value/index rows. The column-index stream is scalar-
+   prefetched into SMEM and drives the dense operand's BlockSpec index_map —
+   the literal TPU translation of the paper's indirect SU stream (indices
+   generate addresses in "hardware", the compute loop issues only FMAs).
+   Grid: (row blocks, nnz position); each step gathers one dense *row block*
+   per ELL slot via the index stream and accumulates a rank-1 update... on the
+   MXU this degenerates, so the production path is:
+
+2. ``bsr_spmm_pallas`` — block-sparse rows. Unstructured sparsity exploited at
+   (bm x bk) tile granularity: scalar-prefetched tile coordinates select which
+   dense K-blocks to stream (index stream -> address generation), and each
+   step is a dense MXU matmul. Empty tiles are never visited: compute scales
+   with nnz blocks, exactly the paper's "compute only on nonzeros" economy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# ELL spmm: in-kernel gather (VPU form, used for narrow dense operands)
+# ---------------------------------------------------------------------------
+
+
+def _ell_kernel(values_ref, cols_ref, dense_ref, o_ref, *, L):
+    vals = values_ref[...]  # (bm, L)
+    cols = cols_ref[...]  # (bm, L)
+    acc = jnp.zeros_like(o_ref, dtype=jnp.float32)
+    for l in range(L):  # static unroll: L is the padded nnz/row
+        rows = dense_ref[cols[:, l]]  # (bm, F) gather from VMEM
+        acc += vals[:, l : l + 1].astype(jnp.float32) * rows.astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def spmm_pallas(values, cols, dense, *, bm: int = 128, interpret: bool = False):
+    """values/cols: (R, L); dense: (C, F) — dense must fit VMEM per block."""
+    R, L = values.shape
+    C, F = dense.shape
+    bm = min(bm, R)
+    pad = (-R) % bm
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        cols = jnp.pad(cols, ((0, pad), (0, 0)))
+    Rp = R + pad
+    out = pl.pallas_call(
+        functools.partial(_ell_kernel, L=L),
+        grid=(Rp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, L), lambda i: (i, 0)),
+            pl.BlockSpec((bm, L), lambda i: (i, 0)),
+            pl.BlockSpec((C, F), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, F), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, F), dense.dtype),
+        interpret=interpret,
+    )(values, cols, dense)
+    return out[:R]
+
+
+# ---------------------------------------------------------------------------
+# BSR spmm: scalar-prefetched tile coordinates drive the dense index_map
+# ---------------------------------------------------------------------------
+
+
+def _bsr_kernel(rows_ref, cols_ref, vals_ref, dense_ref, o_ref, *, nt):
+    t = pl.program_id(1)
+    row = rows_ref[t]
+    prev_row = rows_ref[jnp.maximum(t - 1, 0)]
+    is_first = jnp.logical_or(t == 0, row != prev_row)
+
+    @pl.when(is_first)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot(
+        vals_ref[0], dense_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def bsr_spmm_pallas(
+    tile_values,  # (T, bm, bk) nonzero tiles, sorted by (row, col)
+    tile_rows,  # (T,) int32 block-row ids (every row id present)
+    tile_cols,  # (T,) int32 block-col ids
+    dense,  # (K, F)
+    num_rows: int,
+    *,
+    bf: int = 512,
+    interpret: bool = False,
+):
+    T, bm, bk = tile_values.shape
+    K, F = dense.shape
+    bf = min(bf, F)
+    pad = (-F) % bf
+    if pad:
+        dense = jnp.pad(dense, ((0, 0), (0, pad)))
+    Fp = F + pad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Fp // bf, T),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda f, t, rows, cols: (t, 0, 0)),
+            pl.BlockSpec((bk, bf), lambda f, t, rows, cols: (cols[t], f)),
+        ],
+        out_specs=pl.BlockSpec(
+            (bm, bf), lambda f, t, rows, cols: (rows[t], f)
+        ),
+    )
+    out = pl.pallas_call(
+        functools.partial(_bsr_kernel, nt=T),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_rows, Fp), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(tile_rows, tile_cols, tile_values, dense)
+    return out[:, :F]

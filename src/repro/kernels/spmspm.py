@@ -1,0 +1,71 @@
+"""Sparse-sparse matmul by index intersection (paper Fig. 9d, SU C3).
+
+Occamy's SUs advance two sorted index streams with per-element comparators.
+The TPU has no data-dependent stream advance, so the intersection is
+*blocked* (DESIGN.md §6.2): a (bm x La) tile of A-row indices is compared
+all-pairs against a (bn x Lb) tile of B-column indices on the VPU; matching
+pairs contribute val_a * val_b to out[m, n]. Comparisons per tile =
+bm*bn*La*Lb — the paper's GCOMP figure of merit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmspm_kernel(av_ref, ac_ref, bv_ref, br_ref, o_ref):
+    a_vals = av_ref[...].astype(jnp.float32)  # (bm, La)
+    a_cols = ac_ref[...]
+    b_vals = bv_ref[...].astype(jnp.float32)  # (bn, Lb)
+    b_rows = br_ref[...]
+    # all-pairs comparator: (bm, La, bn, Lb)
+    eq = a_cols[:, :, None, None] == b_rows[None, None, :, :]
+    contrib = jnp.where(
+        eq, a_vals[:, :, None, None] * b_vals[None, None, :, :], 0.0
+    )
+    o_ref[...] = contrib.sum(axis=(1, 3)).astype(o_ref.dtype)
+
+
+def spmspm_pallas(
+    a_values,  # (R, La) ELL rows
+    a_cols,
+    b_values,  # (C, Lb) ELL columns (CSC-like)
+    b_rows,
+    contraction_dim: int,
+    *,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+):
+    R, La = a_values.shape
+    C, Lb = b_values.shape
+    bm, bn = min(bm, R), min(bn, C)
+    pr, pc = (-R) % bm, (-C) % bn
+    if pr:
+        a_values = jnp.pad(a_values, ((0, pr), (0, 0)))
+        a_cols = jnp.pad(a_cols, ((0, pr), (0, 0)))
+    if pc:
+        b_values = jnp.pad(b_values, ((0, pc), (0, 0)))
+        b_rows = jnp.pad(b_rows, ((0, pc), (0, 0)))
+
+    out = pl.pallas_call(
+        _spmspm_kernel,
+        grid=((R + pr) // bm, (C + pc) // bn),
+        in_specs=[
+            pl.BlockSpec((bm, La), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, La), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, Lb), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, Lb), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R + pr, C + pc), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(a_values, a_cols, b_values, b_rows)
+    return out[:R, :C]

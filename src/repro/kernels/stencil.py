@@ -1,0 +1,68 @@
+"""Stencil kernel with offset streams (paper Fig. 9b; SARIS [36] analogue).
+
+SARIS stores per-point offset index arrays and streams them through the
+indirect SUs in ideal processing order. TPU adaptation: offsets become static
+block-relative addresses; the kernel receives THREE views of the grid (the
+previous/current/next x-blocks, selected by index_map arithmetic — periodic
+boundary) and applies each offset as a static slice + lane rotate, so the
+inner loop issues only multiply-accumulates. Supports any star/box stencil
+with |dx| <= block size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stencil_kernel(prev_ref, cur_ref, next_ref, o_ref, *, offsets, weights, bx):
+    buf = jnp.concatenate(
+        [prev_ref[...], cur_ref[...], next_ref[...]], axis=0
+    ).astype(jnp.float32)  # (3*bx, Y, Z)
+    acc = jnp.zeros_like(o_ref, dtype=jnp.float32)
+    for p in range(offsets.shape[0]):
+        dx, dy, dz = (int(d) for d in offsets[p])
+        sl = buf[bx + dx : 2 * bx + dx]  # static x-offset slice
+        if dy or dz:
+            sl = jnp.roll(sl, (-dy, -dz), axis=(1, 2))  # periodic y/z rotate
+        acc += float(weights[p]) * sl
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def stencil_pallas(
+    grid: jax.Array,  # (X, Y, Z)
+    offsets: np.ndarray,  # (P, 3) static int offsets
+    weights,  # (P,) static
+    *,
+    bx: int = 8,
+    interpret: bool = False,
+):
+    X, Y, Z = grid.shape
+    bx = min(bx, X)
+    assert X % bx == 0, (X, bx)
+    assert int(np.abs(offsets[:, 0]).max(initial=0)) <= bx, "dx exceeds block"
+    weights = np.asarray(weights)
+    nb = X // bx
+
+    out = pl.pallas_call(
+        functools.partial(
+            _stencil_kernel, offsets=np.asarray(offsets), weights=weights, bx=bx
+        ),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bx, Y, Z), lambda i: ((i - 1) % nb, 0, 0)),
+            pl.BlockSpec((bx, Y, Z), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bx, Y, Z), lambda i: ((i + 1) % nb, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bx, Y, Z), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((X, Y, Z), grid.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)
+        ),
+        interpret=interpret,
+    )(grid, grid, grid)
+    return out

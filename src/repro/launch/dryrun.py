@@ -1,0 +1,367 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# isort: split  -- the two lines above MUST precede any jax-importing module
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, all_arch_ids, get_config, shape_applicable
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.parallel import sharding as sh
+from repro.runtime import train_loop
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 host
+devices stand in for 2 pods x 256 chips. Emits memory_analysis(),
+cost_analysis() and the parsed collective schedule per cell (EXPERIMENTS.md
+§Dry-run reads these)."""
+
+
+def _mem_stats(compiled):
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
+    return out
+
+
+def _cost_stats(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()} if ca else {}
+
+
+def _build_and_lower(cfg, shape, mesh, donate: bool = True):
+    mode = "train" if shape.kind == "train" else "serve"
+    param_tree = registry.param_shapes(cfg)
+    pspecs = sh.param_specs(cfg, param_tree, mesh, mode)
+    batch_tree = registry.input_specs(cfg, shape)
+    bspecs = sh.batch_specs(cfg, batch_tree, mesh)
+    act_specs = sh.default_activation_specs(cfg, mesh, shape.kind)
+
+    with sh.activation_sharding(act_specs):
+        if shape.kind == "train":
+            state_tree = train_loop.train_state_struct(cfg)
+            state_specs = {
+                "params": pspecs,
+                "opt": {"m": pspecs, "v": pspecs, "step": P()},
+            }
+            fn = train_loop.make_train_step(cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(sh.named(mesh, state_specs), sh.named(mesh, bspecs)),
+                out_shardings=(
+                    sh.named(mesh, state_specs),
+                    None,
+                ),
+                donate_argnums=(0,) if donate else (),
+            )
+            lowered = jitted.lower(state_tree, batch_tree)
+        elif shape.kind == "prefill":
+            fn = train_loop.make_prefill_step(cfg)
+            dp = sh.dp_axes(mesh)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(sh.named(mesh, pspecs), sh.named(mesh, bspecs)),
+                out_shardings=NamedSharding(mesh, P(dp, None, "model")),
+            )
+            lowered = jitted.lower(param_tree, batch_tree)
+        else:  # decode
+            cache_tree = registry.cache_spec(cfg, shape.global_batch, shape.seq_len)
+            cspecs = sh.cache_specs(cfg, cache_tree, mesh)
+            fn = train_loop.make_decode_step(cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(
+                    sh.named(mesh, pspecs),
+                    sh.named(mesh, cspecs),
+                    sh.named(mesh, bspecs),
+                ),
+                out_shardings=(None, sh.named(mesh, cspecs)),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(param_tree, cache_tree, batch_tree)
+
+    return lowered
+
+
+_COST_KEYS = ("flops", "hbm_bytes", "coll_bytes")
+
+
+def _cost_point(cfg, shape, mesh, n_layers: int, seq: int | None = None,
+                num_global: int | None = None) -> dict:
+    """FLOP/byte/collective counts from a small UNROLLED variant.
+
+    XLA's cost analysis counts while-loop bodies once regardless of trip
+    count; small unrolled lowers give exact probe points for the polynomial
+    cost model below."""
+    import dataclasses as _dc
+
+    from repro.kernels import ops as kops
+
+    cfg2 = cfg.replace(
+        num_layers=n_layers,
+        scan_unroll=n_layers,
+        encoder_layers=n_layers if cfg.encoder_layers else 0,
+        **({"num_global_layers": num_global} if num_global is not None else {}),
+    )
+    shape2 = _dc.replace(shape, seq_len=seq) if seq else shape
+    with kops.unrolled_inner():
+        lowered = _build_and_lower(cfg2, shape2, mesh, donate=False)
+        compiled = lowered.compile()
+    cost = _cost_stats(compiled)
+    coll = roofline.collective_bytes(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "hbm_bytes": cost.get("bytes accessed", 0.0),
+        "coll_bytes": coll["total"],
+        "coll_by_kind": coll["by_kind"],
+        "coll_counts": coll["counts"],
+    }
+
+
+def _positivity_fallback(out, c_hi, hi, L):
+    """XLA occasionally changes fusion strategy between probe sizes; if the
+    affine fit goes non-physical (<= 0), fall back to proportional scaling."""
+    for key in _COST_KEYS:
+        if out[key] <= 0:
+            out[key] = c_hi[key] * (L / hi)
+            out[key + "_per_layer"] = c_hi[key] / hi
+            out.setdefault("fallback", []).append(key)
+
+
+def _layer_extrapolate(c_lo, c_hi, lo, hi, L):
+    out = {}
+    for key in _COST_KEYS:
+        per_layer = (c_hi[key] - c_lo[key]) / (hi - lo)
+        out[key] = c_lo[key] + (L - lo) * per_layer
+        out[key + "_per_layer"] = per_layer
+    out["coll_by_kind"] = {
+        k: c_lo["coll_by_kind"][k]
+        + (L - lo) * (c_hi["coll_by_kind"][k] - c_lo["coll_by_kind"][k]) / (hi - lo)
+        for k in c_lo["coll_by_kind"]
+    }
+    out["coll_counts_per_layer"] = {
+        k: (c_hi["coll_counts"][k] - c_lo["coll_counts"][k]) / (hi - lo)
+        for k in c_lo["coll_counts"]
+    }
+    _positivity_fallback(out, c_hi, hi, L)
+    return out
+
+
+def _costs_chunked_seq(cfg, shape, mesh) -> dict:
+    """ssm/hybrid train+prefill: the chunked linear-attention scan makes
+    full-seq unrolled lowers explode (T/32 bodies), so probe small (L, T) and
+    fit. Every term is bilinear in (L, T) for SWA/SSM layers; hybrid global-
+    attention layers add a per-layer quadratic in T, fitted from ng-deltas.
+    Exact because all costs are polynomial (deg<=2 in T, deg<=1 in L)."""
+    T = shape.seq_len
+    T1 = min(1024, T)
+    T2 = min(2048, T)
+    if T2 == T1:  # tiny shapes: plain L-extrapolation
+        return _layer_extrapolate(
+            _cost_point(cfg, shape, mesh, 2), _cost_point(cfg, shape, mesh, 4),
+            2, 4, cfg.num_layers,
+        )
+    ng_true = cfg.num_global_layers if cfg.family == "hybrid" else 0
+    a = _cost_point(cfg, shape, mesh, 2, T1, num_global=0)
+    b = _cost_point(cfg, shape, mesh, 3, T1, num_global=0)
+    c = _cost_point(cfg, shape, mesh, 2, T2, num_global=0)
+    d = _cost_point(cfg, shape, mesh, 3, T2, num_global=0)
+
+    def bilinear(key_get):
+        pl1 = key_get(b) - key_get(a)  # per-layer at T1
+        pl2 = key_get(d) - key_get(c)  # per-layer at T2
+        pl_slope = (pl2 - pl1) / (T2 - T1)
+        per_layer_T = pl1 + pl_slope * (T - T1)
+        base1 = key_get(a) - 2 * pl1
+        base2 = key_get(c) - 2 * pl2
+        base_T = base1 + (base2 - base1) / (T2 - T1) * (T - T1)
+        return base_T, per_layer_T
+
+    glob_delta = {k: 0.0 for k in _COST_KEYS}
+    if ng_true:
+        # quadratic fit of the (global - swa) per-layer delta over T
+        Ts = sorted({min(t, T) for t in (1024, 2048, 4096)})
+        deltas = {k: [] for k in _COST_KEYS}
+        for t in Ts:
+            g = _cost_point(cfg, shape, mesh, 2, t, num_global=1)
+            s = (
+                a if t == T1 else c if t == T2 else
+                _cost_point(cfg, shape, mesh, 2, t, num_global=0)
+            )
+            for k in _COST_KEYS:
+                deltas[k].append(g[k] - s[k])
+        import numpy as _np
+
+        for k in _COST_KEYS:
+            deg = min(2, len(Ts) - 1)
+            coef = _np.polyfit(_np.asarray(Ts, float), deltas[k], deg)
+            glob_delta[k] = float(_np.polyval(coef, T))
+
+    L = cfg.num_layers
+    out = {}
+    for k in _COST_KEYS:
+        base, per = bilinear(lambda p, kk=k: p[kk])
+        out[k] = base + L * per + ng_true * glob_delta[k]
+        out[k + "_per_layer"] = per
+    out["coll_by_kind"] = {
+        kind: bilinear(lambda p, kk=kind: p["coll_by_kind"][kk])[0]
+        + L * bilinear(lambda p, kk=kind: p["coll_by_kind"][kk])[1]
+        for kind in a["coll_by_kind"]
+    }
+    out["coll_counts_per_layer"] = {
+        kind: float(b["coll_counts"][kind] - a["coll_counts"][kind])
+        for kind in a["coll_counts"]
+    }
+    _positivity_fallback(out, d, 3, cfg.num_layers)
+    return out
+
+
+def extrapolated_costs(cfg, shape, mesh, points=(2, 4)) -> dict:
+    if cfg.family in ("ssm", "hybrid") and shape.kind in ("train", "prefill"):
+        return _costs_chunked_seq(cfg, shape, mesh)
+    if cfg.family == "audio":
+        # enc-dec probes carry 2x the unrolled attention bodies: use the
+        # cheapest probe pair (positivity fallback guards instability)
+        points = (1, 2)
+    lo, hi = points
+    c_lo = _cost_point(cfg, shape, mesh, lo)
+    c_hi = _cost_point(cfg, shape, mesh, hi)
+    return _layer_extrapolate(c_lo, c_hi, lo, hi, cfg.num_layers)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               save_hlo: str | None = None, donate: bool = True,
+               cfg_override=None, skip_full: bool = False,
+               with_cost: bool = True) -> dict:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": reason,
+                "mesh": "2x16x16" if multi_pod else "16x16"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+    }
+
+    # 1) the deliverable: full-depth scan compile (sharding + memory proof)
+    if not skip_full:
+        t0 = time.time()
+        lowered = _build_and_lower(cfg, shape, mesh, donate=donate)
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t0, 1)
+        result["memory"] = _mem_stats(compiled)
+        hlo = compiled.as_text()
+        result["hlo_bytes"] = len(hlo)
+        result["collective_full_hlo"] = roofline.collective_bytes(hlo)["counts"]
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+        del compiled, lowered
+
+    # 2) roofline terms from unrolled small-depth extrapolation
+    # (§Roofline is single-pod only; multi-pod passes prove the pod axis)
+    if not with_cost:
+        return result
+    t0 = time.time()
+    costs = extrapolated_costs(cfg, shape, mesh)
+    result["cost_compile_s"] = round(time.time() - t0, 1)
+    terms = roofline.roofline_terms(
+        costs["flops"], costs["hbm_bytes"], costs["coll_bytes"]
+    )
+    floor = roofline.min_bytes_per_device(cfg, shape, n_dev)
+    terms["memory_floor_s"] = floor / roofline.HBM_BW
+    terms["memory_efficiency"] = (
+        floor / costs["hbm_bytes"] if costs["hbm_bytes"] else 0.0
+    )
+    mf = roofline.model_flops(cfg, shape)
+    result.update(
+        {
+            "flops_per_device": costs["flops"],
+            "hbm_bytes_per_device": costs["hbm_bytes"],
+            "coll_bytes_per_device": costs["coll_bytes"],
+            "coll_by_kind": costs["coll_by_kind"],
+            "coll_counts_per_layer": costs["coll_counts_per_layer"],
+            "roofline": terms,
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / n_dev,
+            "useful_flops_ratio": (mf / n_dev) / costs["flops"]
+            if costs["flops"]
+            else 0.0,
+        }
+    )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSON lines here")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--no-cost", action="store_true",
+                    help="skip roofline-cost extraction (compile proof only)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else all_arch_ids()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    res = lower_cell(arch, shape, mp, save_hlo=args.save_hlo,
+                                     with_cost=not (args.no_cost or mp))
+                except Exception as e:  # a failure here is a bug in the system
+                    res = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "error": f"{type(e).__name__}: {e}",
+                    }
+                    failures += 1
+                line = json.dumps(res)
+                print(line, flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(line + "\n")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# isort: split
+import argparse
+import json
+
+from repro.configs.base import get_config
+from repro.launch.dryrun import lower_cell
+
+"""§Perf hillclimb driver: re-lower one cell with config-override variants and
+report the roofline-term deltas vs the recorded baseline.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch grok-1-314b \
+      --shape train_4k --set tp_reduce_bf16=True --set microbatches=2
+"""
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg overrides, e.g. tp_reduce_bf16=True")
+    ap.add_argument("--skip-full", action="store_true",
+                    help="cost probes only (skip the full-depth compile)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    overrides = dict(parse_override(s) for s in args.set)
+    cfg = get_config(args.arch).replace(**overrides)
+    res = lower_cell(args.arch, args.shape, multi_pod=False,
+                     cfg_override=cfg, skip_full=args.skip_full)
+    res["overrides"] = overrides
+    line = json.dumps(res)
+    print(line)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(line + "\n")
+
+
+if __name__ == "__main__":
+    main()

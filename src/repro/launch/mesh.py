@@ -1,0 +1,28 @@
+"""Production mesh construction (Occamy hierarchy -> TPU mesh axes).
+
+Axis mapping (DESIGN.md C5): `model` = intra-chiplet crossbar (TP),
+`data` = group level (DP/FSDP/SP), `pod` = D2D link (second DP axis).
+A FUNCTION, not a module constant: importing this module never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """Arbitrary meshes (tests, elastic re-meshing, hillclimb variants)."""
+    return jax.make_mesh(shape, axes)
+
+
+def host_device_mesh(tp: int = 1):
+    """Whatever devices exist locally, as (data, model)."""
+    n = len(jax.devices())
+    assert n % tp == 0
+    return jax.make_mesh((n // tp, tp), ("data", "model"))

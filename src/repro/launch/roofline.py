@@ -1,0 +1,143 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = collective_bytes_per_device / LINK_BW
+
+collective_bytes is NOT in cost_analysis(): we parse the post-SPMD HLO text
+and sum operand/result sizes of every collective op (with ring-algorithm byte
+multipliers). Hardware constants: TPU v5e-class, from the task spec.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_DEF_RE = re.compile(
+    r"%?([\w.-]+)\s*=\s*(?:\()?(\w+)\[([\d,]*)\]"
+)
+_COLL_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+# multiplier on result bytes: ring all-reduce moves ~2x the buffer;
+# gather/scatter/a2a/permute move ~1x
+_FACTOR = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,  # applied to the *operand* (the big side)
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives, by op kind."""
+    sizes: dict[str, int] = {}
+    totals = {k: 0.0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if not m:
+            continue
+        name, dtype, dims = m.groups()
+        nbytes = _shape_bytes(dtype, dims)
+        sizes[name] = nbytes
+        for kind in _COLL_KINDS:
+            # match op kind as a word: "all-gather(", "all-gather-start("
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                if kind == "reduce-scatter":
+                    # operand is result * shard count; find first operand name
+                    ops = re.findall(r"\(([^)]*)\)", line)
+                    opbytes = nbytes
+                    if ops:
+                        first = ops[-1].split(",")[0].strip().lstrip("%")
+                        opbytes = sizes.get(first, nbytes)
+                    totals[kind] += _FACTOR[kind] * max(opbytes, nbytes)
+                else:
+                    totals[kind] += _FACTOR[kind] * nbytes
+                counts[kind] += 1
+                break
+    totals_all = sum(totals.values())
+    return {"by_kind": totals, "counts": counts, "total": totals_all}
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float) -> dict:
+    t_comp = flops / PEAK_FLOPS
+    t_mem = hbm_bytes / HBM_BW
+    t_coll = coll_bytes / LINK_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(t_comp, t_mem, t_coll)
+    terms["dominant"] = dom
+    terms["roofline_fraction"] = t_comp / bound if bound > 0 else 0.0
+    return terms
+
+
+def min_bytes_per_device(cfg, shape, n_dev: int, tp: int = 16) -> float:
+    """Analytic lower bound on HBM traffic per device per step — the floor
+    the memory roofline term is judged against (catches re-read waste).
+
+    train:  params read twice (fwd + remat bwd) + grad write (bf16) +
+            optimizer m/v read+write (fp32) + param write + saved layer
+            activations (write + read) + logits.
+    prefill: params read once (TP-sharded) + activations + logits.
+    decode:  params read once + KV/state cache read + tiny writes.
+    """
+    p = cfg.num_params()
+    bf2 = 2
+    B, S = shape.global_batch, shape.seq_len
+    d, L_ = cfg.d_model, cfg.num_layers
+    if shape.kind == "train":
+        param_traffic = p * (2 * bf2 + 2 * bf2 + bf2 + bf2) + p * 4 * 4  # r/w
+        acts = 2 * L_ * B * S * d * bf2  # boundary save + bwd read
+        logits = 2 * B * S * cfg.vocab_size * bf2
+        return (param_traffic + acts + logits) / n_dev
+    p_active = cfg.num_active_params()
+    tp_eff = n_dev if cfg.weights_2d_tp else tp
+    if shape.kind == "prefill":
+        acts = L_ * B * S * d * bf2
+        logits = B * S * cfg.vocab_size * bf2
+        return p * bf2 / tp_eff + (acts + logits) / n_dev
+    # decode: weights + cache stream per token
+    hd = cfg.resolved_head_dim()
+    cache = 2 * L_ * B * cfg.num_kv_heads * S * hd * bf2 if not cfg.attention_free else 0
+    if cfg.family in ("ssm", "hybrid"):
+        nh = cfg.resolved_d_inner() // max(cfg.ssm_head_dim, 1) if cfg.family == "hybrid" else cfg.d_model // hd
+        cache += L_ * B * nh * cfg.ssm_state * max(cfg.ssm_head_dim, hd) * 4
+        if cfg.family == "hybrid":
+            cache += 2 * L_ * B * cfg.num_kv_heads * S * hd * bf2
+    return p * bf2 / tp_eff + cache / n_dev
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (train) or 2*N*D (inference) with N = active params."""
+    n = cfg.num_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,36 @@
+"""GCN layer (paper Sec. V-C, Fig. 11): sparse-dense aggregation + dense
+feature recombination — the paper's mixed dense/sparse ML workload.
+
+H' = act( Â (H W) ) with Â in the ELL value/index format and the aggregation
+executed through the spmm kernel (the SU-indirection analogue).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+def init_params(rng, feature_dims: list[int], dtype=jnp.float32):
+    kg = L.KeyGen(rng)
+    return [
+        L.dense_init(kg(), (fi, fo), dtype=dtype)
+        for fi, fo in zip(feature_dims[:-1], feature_dims[1:])
+    ]
+
+
+def gcn_layer(w, adj_values, adj_cols, feats, *, activate=True, impl=None):
+    """One layer: recombine (dense GEMM) then aggregate (SpMM)."""
+    h = ops.gemm(feats, w, impl=impl)  # dense recombination
+    h = ops.spmm(adj_values, adj_cols, h, impl=impl)  # sparse aggregation
+    return jax.nn.relu(h) if activate else h
+
+
+def forward(params, adj_values, adj_cols, feats, *, impl=None):
+    h = feats
+    for i, w in enumerate(params):
+        h = gcn_layer(w, adj_values, adj_cols, h,
+                      activate=i < len(params) - 1, impl=impl)
+    return h

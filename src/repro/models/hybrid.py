@@ -1,0 +1,238 @@
+"""Hymba-style hybrid blocks: parallel attention + mamba(SSD) heads.
+
+Each block feeds one normed input to BOTH a GQA attention path (sliding
+window, a few global layers) and a mamba/SSD path (data-dependent scalar
+decay per head via the shared chunked linear-attention kernel); the two
+normalized outputs are averaged (arXiv:2411.13676). Meta-tokens and the
+depthwise conv of the reference model are omitted (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel.sharding import constrain
+
+
+def ssm_heads(cfg) -> int:
+    return cfg.resolved_d_inner() // cfg.ssm_head_dim
+
+
+def global_layer_mask(cfg) -> jnp.ndarray:
+    """(L,) bool — which layers use full attention (first/middle/last...)."""
+    nl, ng = cfg.num_layers, cfg.num_global_layers
+    if ng <= 0:
+        return jnp.zeros((nl,), bool)
+    idx = jnp.round(jnp.linspace(0, nl - 1, ng)).astype(jnp.int32)
+    return jnp.zeros((nl,), bool).at[idx].set(True)
+
+
+def init_params(cfg, rng):
+    kg = L.KeyGen(rng)
+    dtype = jnp.dtype(cfg.dtype)
+    d, f, nl = cfg.d_model, cfg.d_ff, cfg.num_layers
+    hd = cfg.resolved_head_dim()
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    di, N = cfg.resolved_d_inner(), cfg.ssm_state
+    nh = ssm_heads(cfg)
+    fm = 2 if L.is_gated(cfg.activation) else 1
+    vp = L.padded_vocab(cfg.vocab_size)
+
+    layers = {
+        "attn_norm": jnp.ones((nl, d), dtype),
+        "wq": L.dense_init(kg(), (nl, d, H * hd), dtype=dtype),
+        "wk": L.dense_init(kg(), (nl, d, K * hd), dtype=dtype),
+        "wv": L.dense_init(kg(), (nl, d, K * hd), dtype=dtype),
+        "wo": L.dense_init(kg(), (nl, H * hd, d),
+                           scale=1.0 / math.sqrt(H * hd), dtype=dtype),
+        "ssm_in": L.dense_init(kg(), (nl, d, 2 * di), dtype=dtype),
+        "ssm_dt": L.dense_init(kg(), (nl, d, nh), dtype=dtype),
+        "ssm_bc": L.dense_init(kg(), (nl, d, 2 * N), dtype=dtype),
+        "ssm_out": L.dense_init(kg(), (nl, di, d),
+                                scale=1.0 / math.sqrt(di), dtype=dtype),
+        "dt_bias": jnp.zeros((nl, nh), jnp.float32),
+        "ssm_D": jnp.ones((nl, nh), jnp.float32),
+        "attn_out_norm": jnp.ones((nl, d), dtype),
+        "ssm_out_norm": jnp.ones((nl, d), dtype),
+        "mlp_norm": jnp.ones((nl, d), dtype),
+        "wi": L.dense_init(kg(), (nl, d, f), dtype=dtype),
+        "wg": L.dense_init(kg(), (nl, d, f), dtype=dtype),
+        "wo_mlp": L.dense_init(kg(), (nl, f, d),
+                               scale=1.0 / math.sqrt(f), dtype=dtype),
+    }
+    return {
+        "embed": L.dense_init(kg(), (vp, d), scale=0.02, dtype=dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dtype),
+        "lm_head": L.dense_init(kg(), (d, vp), dtype=dtype),
+    }
+
+
+def _ssd_inputs(p, cfg, x):
+    """x: (B,S,d) -> (r, k, v, w_log) in (B, nh, S, ...) layout + (z, x_ssm)."""
+    B, S, _ = x.shape
+    di, N = cfg.resolved_d_inner(), cfg.ssm_state
+    hd, nh = cfg.ssm_head_dim, ssm_heads(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["ssm_in"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    x_ssm, z = jnp.split(xz, 2, axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["ssm_dt"],
+                   preferred_element_type=jnp.float32) + p["dt_bias"]
+    )  # (B,S,nh) fp32
+    bc = jnp.einsum("bsd,dn->bsn", x, p["ssm_bc"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)  # (B,S,N) shared across heads
+    v = x_ssm.reshape(B, S, nh, hd) * dt[..., None].astype(x.dtype)
+    v = v.transpose(0, 2, 1, 3)  # (B,nh,S,hd)
+    r = jnp.broadcast_to(Cm[:, None], (B, nh, S, N))
+    k = jnp.broadcast_to(Bm[:, None], (B, nh, S, N))
+    w_log = jnp.broadcast_to(
+        -dt.transpose(0, 2, 1)[..., None], (B, nh, S, N)
+    )
+    return r, k, v, w_log, z, x_ssm
+
+
+def mamba_path(p, cfg, x, state=None):
+    B, S, _ = x.shape
+    di = cfg.resolved_d_inner()
+    hd, nh = cfg.ssm_head_dim, ssm_heads(cfg)
+    r, k, v, w_log, z, x_ssm = _ssd_inputs(p, cfg, x)
+    o, S_out = ops.linear_attention(r, k, v, w_log, u=None, s0=state)
+    o = o + p["ssm_D"][None, :, None, None].astype(o.dtype) * (
+        x_ssm.reshape(B, S, nh, hd).transpose(0, 2, 1, 3)
+    )
+    y = o.transpose(0, 2, 1, 3).reshape(B, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["ssm_out"],
+                      preferred_element_type=jnp.float32).astype(x.dtype), S_out
+
+
+def block(p, cfg, h, cos, sin, is_global):
+    n = L.rms_norm(h, p["attn_norm"], cfg.norm_eps)
+    attn = lambda w: T.attention(p, cfg, n, cos, sin, window=w)
+    a = jax.lax.cond(
+        is_global,
+        lambda: attn(0),
+        lambda: attn(cfg.sliding_window),
+    )
+    m, _ = mamba_path(p, cfg, n)
+    fused = 0.5 * (
+        L.rms_norm(a, p["attn_out_norm"], cfg.norm_eps)
+        + L.rms_norm(m, p["ssm_out_norm"], cfg.norm_eps)
+    )
+    h = h + fused
+    n = L.rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+    h = h + L.mlp(T._mlp_p(p), n, cfg.activation)
+    return constrain(h, "residual")
+
+
+def forward(params, cfg, batch, *, q_offset=0):
+    h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    h = constrain(h, "residual")
+    S = h.shape[1]
+    hd = cfg.resolved_head_dim()
+    cos, sin = L.rope_cos_sin(jnp.arange(S) + q_offset, hd, cfg.rope_theta)
+    blk = T.remat_wrap(cfg, functools.partial(block, cfg=cfg))
+
+    def body(h, xs):
+        lp, g = xs
+        return blk(lp, h=h, cos=cos, sin=sin, is_global=g), None
+
+    h, _ = jax.lax.scan(body, h, (params["layers"], global_layer_mask(cfg)),
+                        unroll=cfg.scan_unroll)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", h, params["lm_head"], preferred_element_type=jnp.float32
+    ).astype(h.dtype)
+    return constrain(logits, "logits"), jnp.float32(0.0)
+
+
+def loss_fn(params, cfg, batch, *, q_offset=0):
+    logits, aux = forward(params, cfg, batch, q_offset=q_offset)
+    return L.cross_entropy_loss(logits, batch["labels"], cfg.vocab_size) + aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim()
+    K, nl = cfg.num_kv_heads, cfg.num_layers
+    nh, N, sd = ssm_heads(cfg), cfg.ssm_state, cfg.ssm_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jax.ShapeDtypeStruct((nl, batch, K, max_len, hd), dt),
+        "v": jax.ShapeDtypeStruct((nl, batch, K, max_len, hd), dt),
+        "ssm_state": jax.ShapeDtypeStruct((nl, batch, nh, N, sd), jnp.float32),
+    }
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, max_len)
+    )
+
+
+def decode_step(params, cfg, cache, batch):
+    tokens, position = batch["token"], batch["position"]
+    hd = cfg.resolved_head_dim()
+    sd, nh, N = cfg.ssm_head_dim, ssm_heads(cfg), cfg.ssm_state
+    h = jnp.take(params["embed"], tokens, axis=0)
+    cos, sin = L.rope_cos_sin(position, hd, cfg.rope_theta)
+
+    def body(h, xs):
+        lp, kc, vc, S, is_global = xs
+        n = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        a, kc, vc = jax.lax.cond(
+            is_global,
+            lambda: T.attention_decode(
+                lp, cfg, n, cos, sin, kc, vc, position, window=0
+            ),
+            lambda: T.attention_decode(
+                lp, cfg, n, cos, sin, kc, vc, position,
+                window=cfg.sliding_window,
+            ),
+        )
+        # mamba step
+        r, k, v, w_log, z, x_ssm = _ssd_inputs(lp, cfg, n[:, None, :])
+        o, S = ops.linear_attention_step(
+            r[:, :, 0], k[:, :, 0], v[:, :, 0], w_log[:, :, 0], None, S
+        )
+        o = o + lp["ssm_D"][None, :, None].astype(o.dtype) * x_ssm.reshape(
+            -1, nh, sd
+        )
+        y = o.reshape(-1, nh * sd) * jax.nn.silu(
+            z[:, 0].astype(jnp.float32)
+        ).astype(o.dtype)
+        m = (y @ lp["ssm_out"]).astype(h.dtype)
+        fused = 0.5 * (
+            L.rms_norm(a, lp["attn_out_norm"], cfg.norm_eps)
+            + L.rms_norm(m, lp["ssm_out_norm"], cfg.norm_eps)
+        )
+        h = h + fused
+        n = L.rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+        mo = L.mlp(T._mlp_p(lp), n[:, None, :], cfg.activation)[:, 0]
+        h = h + mo
+        return h, (kc, vc, S)
+
+    h, (ks, vs, Ss) = jax.lax.scan(
+        body,
+        h,
+        (params["layers"], cache["k"], cache["v"], cache["ssm_state"],
+         global_layer_mask(cfg)),
+        unroll=cfg.scan_unroll,
+    )
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bd,dv->bv", h, params["lm_head"], preferred_element_type=jnp.float32
+    )
+    return logits, {"k": ks, "v": vs, "ssm_state": Ss}

@@ -1,0 +1,224 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, encoder_seq, d_model); a learned projection
+adapts them. Backbone dims (layers/heads/d_ff/vocab) are exact; norm and
+positional encoding are unified to RMSNorm+RoPE (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel.sharding import constrain
+
+
+def _attn_mlp_params(kg, cfg, nl, dtype, cross: bool = False):
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.resolved_head_dim()
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    pre = "c" if cross else ""
+    p = {
+        pre + "wq": L.dense_init(kg(), (nl, d, H * hd), dtype=dtype),
+        pre + "wk": L.dense_init(kg(), (nl, d, K * hd), dtype=dtype),
+        pre + "wv": L.dense_init(kg(), (nl, d, K * hd), dtype=dtype),
+        pre + "wo": L.dense_init(kg(), (nl, H * hd, d),
+                                 scale=1.0 / math.sqrt(H * hd), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p[pre + "bq"] = jnp.zeros((nl, H * hd), dtype)
+        p[pre + "bk"] = jnp.zeros((nl, K * hd), dtype)
+        p[pre + "bv"] = jnp.zeros((nl, K * hd), dtype)
+    return p
+
+
+def init_params(cfg, rng):
+    kg = L.KeyGen(rng)
+    dtype = jnp.dtype(cfg.dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    fm = 2 if L.is_gated(cfg.activation) else 1
+    vp = L.padded_vocab(cfg.vocab_size)
+    nl, ne = cfg.num_layers, cfg.encoder_layers
+
+    def mlp_params(n):
+        p = {
+            "mlp_norm": jnp.ones((n, d), dtype),
+            "wi": L.dense_init(kg(), (n, d, f), dtype=dtype),
+            "wo_mlp": L.dense_init(kg(), (n, f, d),
+                                   scale=1.0 / math.sqrt(f), dtype=dtype),
+        }
+        if fm == 2:
+            p["wg"] = L.dense_init(kg(), (n, d, f), dtype=dtype)
+        return p
+
+    enc_layers = {"attn_norm": jnp.ones((ne, d), dtype)}
+    enc_layers.update(_attn_mlp_params(kg, cfg, ne, dtype))
+    enc_layers.update(mlp_params(ne))
+
+    dec_layers = {
+        "attn_norm": jnp.ones((nl, d), dtype),
+        "cross_norm": jnp.ones((nl, d), dtype),
+    }
+    dec_layers.update(_attn_mlp_params(kg, cfg, nl, dtype))
+    dec_layers.update(_attn_mlp_params(kg, cfg, nl, dtype, cross=True))
+    dec_layers.update(mlp_params(nl))
+
+    return {
+        "frontend_proj": L.dense_init(kg(), (d, d), dtype=dtype),
+        "enc_layers": enc_layers,
+        "enc_final_norm": jnp.ones((d,), dtype),
+        "embed": L.dense_init(kg(), (vp, d), scale=0.02, dtype=dtype),
+        "layers": dec_layers,
+        "final_norm": jnp.ones((d,), dtype),
+        "lm_head": L.dense_init(kg(), (d, vp), dtype=dtype),
+    }
+
+
+def _cross_p(lp):
+    p = {"wq": lp["cwq"], "wk": lp["cwk"], "wv": lp["cwv"], "wo": lp["cwo"]}
+    if "cbq" in lp:
+        p.update({"bq": lp["cbq"], "bk": lp["cbk"], "bv": lp["cbv"]})
+    return p
+
+
+def encode(params, cfg, frames):
+    """frames: (B, encoder_seq, d) from the stubbed conv frontend."""
+    h = (frames.astype(jnp.dtype(cfg.dtype)) @ params["frontend_proj"])
+    h = constrain(h, "residual")
+    hd = cfg.resolved_head_dim()
+    cos, sin = L.rope_cos_sin(jnp.arange(h.shape[1]), hd, cfg.rope_theta)
+
+    def blk(lp, h):
+        n = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        h = h + T.attention(lp, cfg, n, cos, sin, causal=False)
+        n = L.rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+        h = h + L.mlp(T._mlp_p(lp), n, cfg.activation)
+        return constrain(h, "residual")
+
+    blk = T.remat_wrap(cfg, blk)
+    h, _ = jax.lax.scan(lambda c, lp: (blk(lp, c), None), h,
+                        params["enc_layers"], unroll=cfg.scan_unroll)
+    return L.rms_norm(h, params["enc_final_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg, batch, *, q_offset=0):
+    enc = encode(params, cfg, batch["frames"])
+    h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    h = constrain(h, "residual")
+    S = h.shape[1]
+    hd = cfg.resolved_head_dim()
+    cos, sin = L.rope_cos_sin(jnp.arange(S) + q_offset, hd, cfg.rope_theta)
+
+    def blk(lp, h, enc):
+        n = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        h = h + T.attention(lp, cfg, n, cos, sin, causal=True,
+                            q_offset=q_offset)
+        n = L.rms_norm(h, lp["cross_norm"], cfg.norm_eps)
+        h = h + T.attention(_cross_p(lp), cfg, n, None, None, causal=False,
+                            kv_input=enc)
+        n = L.rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+        h = h + L.mlp(T._mlp_p(lp), n, cfg.activation)
+        return constrain(h, "residual")
+
+    blk = T.remat_wrap(cfg, blk)
+    h, _ = jax.lax.scan(lambda c, lp: (blk(lp, c, enc), None), h,
+                        params["layers"], unroll=cfg.scan_unroll)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", h, params["lm_head"], preferred_element_type=jnp.float32
+    ).astype(h.dtype)
+    return constrain(logits, "logits"), jnp.float32(0.0)
+
+
+def loss_fn(params, cfg, batch, *, q_offset=0):
+    logits, aux = forward(params, cfg, batch, q_offset=q_offset)
+    return L.cross_entropy_loss(logits, batch["labels"], cfg.vocab_size) + aux
+
+
+# ---------------------------------------------------------------------------
+# decode: self-attention cache + fixed cross-attention cache
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim()
+    K, nl = cfg.num_kv_heads, cfg.num_layers
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jax.ShapeDtypeStruct((nl, batch, K, max_len, hd), dt),
+        "v": jax.ShapeDtypeStruct((nl, batch, K, max_len, hd), dt),
+        "cross_k": jax.ShapeDtypeStruct((nl, batch, K, cfg.encoder_seq, hd), dt),
+        "cross_v": jax.ShapeDtypeStruct((nl, batch, K, cfg.encoder_seq, hd), dt),
+    }
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, max_len)
+    )
+
+
+def build_cross_cache(params, cfg, frames):
+    """Run the encoder once and project K/V for every decoder layer."""
+    enc = encode(params, cfg, frames)  # (B, Te, d)
+    B, Te, _ = enc.shape
+    hd, K = cfg.resolved_head_dim(), cfg.num_kv_heads
+
+    def per_layer(lp):
+        k = enc @ lp["cwk"]
+        v = enc @ lp["cwv"]
+        if "cbk" in lp:
+            k, v = k + lp["cbk"], v + lp["cbv"]
+        to = lambda t: t.reshape(B, Te, K, hd).transpose(0, 2, 1, 3)
+        return to(k.astype(enc.dtype)), to(v.astype(enc.dtype))
+
+    ks, vs = jax.lax.map(per_layer, params["layers"])
+    return ks, vs  # (L, B, K, Te, hd)
+
+
+def decode_step(params, cfg, cache, batch):
+    tokens, position = batch["token"], batch["position"]
+    hd = cfg.resolved_head_dim()
+    H = cfg.num_heads
+    h = jnp.take(params["embed"], tokens, axis=0)
+    cos, sin = L.rope_cos_sin(position, hd, cfg.rope_theta)
+    B = tokens.shape[0]
+    cross_pos = jnp.full((B,), cfg.encoder_seq - 1, jnp.int32)
+
+    def body(h, xs):
+        lp, kc, vc, ck, cv = xs
+        n = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        a, kc, vc = T.attention_decode(lp, cfg, n, cos, sin, kc, vc, position)
+        h = h + a
+        n = L.rms_norm(h, lp["cross_norm"], cfg.norm_eps)
+        cp = _cross_p(lp)
+        q = (n @ cp["wq"]).astype(h.dtype)
+        if "bq" in cp:
+            q = q + cp["bq"]
+        q = q.reshape(B, H, hd)
+        o = ops.decode_attention(q, ck, cv, cross_pos)
+        o = o.reshape(B, H * hd)
+        h = h + jnp.einsum("bh,hd->bd", o, cp["wo"],
+                           preferred_element_type=jnp.float32).astype(h.dtype)
+        n = L.rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+        h = h + L.mlp(T._mlp_p(lp), n[:, None, :], cfg.activation)[:, 0]
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, h,
+        (params["layers"], cache["k"], cache["v"], cache["cross_k"],
+         cache["cross_v"]),
+        unroll=cfg.scan_unroll,
+    )
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bd,dv->bv", h, params["lm_head"], preferred_element_type=jnp.float32
+    )
+    return logits, {"k": ks, "v": vs, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}

@@ -1,0 +1,396 @@
+"""Decoder-only transformer LM: dense, MoE, and VLM families.
+
+One config-driven scaffold covers GQA/MQA, qk-norm, QKV biases, gated/plain
+MLPs, parallel-residual blocks, MoE layers, and multimodal prefix embeddings.
+Layers are stacked on a leading axis and executed with lax.scan (+ remat),
+which keeps compiled HLO size O(1) in depth — essential for the 512-device
+dry-run compiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, rng):
+    kg = L.KeyGen(rng)
+    dtype = jnp.dtype(cfg.dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.resolved_head_dim()
+    H, K, nl = cfg.num_heads, cfg.num_kv_heads, cfg.num_layers
+    fm = 2 if L.is_gated(cfg.activation) else 1
+    vp = L.padded_vocab(cfg.vocab_size)
+
+    layers = {
+        "attn_norm": jnp.ones((nl, d), dtype),
+        "wq": L.dense_init(kg(), (nl, d, H * hd), dtype=dtype),
+        "wk": L.dense_init(kg(), (nl, d, K * hd), dtype=dtype),
+        "wv": L.dense_init(kg(), (nl, d, K * hd), dtype=dtype),
+        "wo": L.dense_init(
+            kg(), (nl, H * hd, d), scale=1.0 / math.sqrt(H * hd), dtype=dtype
+        ),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((nl, H * hd), dtype)
+        layers["bk"] = jnp.zeros((nl, K * hd), dtype)
+        layers["bv"] = jnp.zeros((nl, K * hd), dtype)
+    if cfg.qk_norm:
+        layers["q_norm"] = jnp.ones((nl, hd), dtype)
+        layers["k_norm"] = jnp.ones((nl, hd), dtype)
+    if not cfg.parallel_block:
+        layers["mlp_norm"] = jnp.ones((nl, d), dtype)
+    if cfg.num_experts:
+        layers.update(M.init_moe_params(kg, cfg, nl, dtype))
+    else:
+        layers["wi"] = L.dense_init(kg(), (nl, d, f), dtype=dtype)
+        if fm == 2:
+            layers["wg"] = L.dense_init(kg(), (nl, d, f), dtype=dtype)
+        layers["wo_mlp"] = L.dense_init(
+            kg(), (nl, f, d), scale=1.0 / math.sqrt(f), dtype=dtype
+        )
+
+    params = {
+        "embed": L.dense_init(kg(), (vp, d), scale=0.02, dtype=dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kg(), (d, vp), dtype=dtype)
+    if cfg.family == "vlm":
+        params["connector"] = {
+            "wi": L.dense_init(kg(), (d, d), dtype=dtype),
+            "wo": L.dense_init(kg(), (d, d), dtype=dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# attention (shared with the audio/hybrid families)
+# ---------------------------------------------------------------------------
+
+
+def attention(p, cfg, x, cos, sin, *, causal=True, window=0, q_offset=0,
+              kv_input=None, kv_cos_sin=None, return_kv=False):
+    """x: (B, S, d) -> (B, S, d). kv_input enables cross-attention."""
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim()
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    xkv = x if kv_input is None else kv_input
+    Skv = xkv.shape[1]
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"], preferred_element_type=jnp.float32)
+    k = jnp.einsum("bsd,dh->bsh", xkv, p["wk"], preferred_element_type=jnp.float32)
+    v = jnp.einsum("bsd,dh->bsh", xkv, p["wv"], preferred_element_type=jnp.float32)
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.astype(x.dtype).reshape(B, S, H, hd)
+    k = k.astype(x.dtype).reshape(B, Skv, K, hd)
+    v = v.astype(x.dtype).reshape(B, Skv, K, hd)
+    if "q_norm" in p:
+        q = L.head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cos is not None and kv_input is None:  # no rope in cross-attention
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    elif cos is not None:
+        q = L.apply_rope(q, cos, sin)
+        if kv_cos_sin is not None:
+            k = L.apply_rope(k, *kv_cos_sin)
+    q = constrain(q, "attn_q")
+    k = constrain(k, "attn_kv")
+    v = constrain(v, "attn_kv")
+
+    o = ops.flash_attention(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    out = jnp.einsum(
+        "bsh,hd->bsd", o, p["wo"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    if return_kv:
+        return out, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+    return out
+
+
+def attention_decode(p, cfg, x, cos, sin, k_cache, v_cache, position, *,
+                     window=0, update_cache=True):
+    """x: (B, d); caches (B, K, Smax, hd); position (B,) absolute index."""
+    B, d = x.shape
+    hd = cfg.resolved_head_dim()
+    H, K = cfg.num_heads, cfg.num_kv_heads
+
+    q = (x @ p["wq"]).astype(x.dtype)
+    if update_cache:
+        k = (x @ p["wk"]).astype(x.dtype)
+        v = (x @ p["wv"]).astype(x.dtype)
+        if "bq" in p:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        k = k.reshape(B, K, hd)
+        v = v.reshape(B, K, hd)
+    elif "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, H, hd)
+    if "q_norm" in p:
+        q = L.head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if update_cache:
+            k = L.head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cos is not None:
+        # cos/sin: (B, hd/2) from per-row positions
+        q = L.apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
+        if update_cache:
+            k = L.apply_rope(k[:, None], cos[:, None], sin[:, None])[:, 0]
+
+    if update_cache:
+        def upd(cache, new, pos):
+            return jax.lax.dynamic_update_slice_in_dim(
+                cache, new[:, None, :], pos, axis=1
+            )
+
+        k_cache = jax.vmap(upd)(k_cache, k, position)
+        v_cache = jax.vmap(upd)(v_cache, v, position)
+
+    o = ops.decode_attention(q, k_cache, v_cache, position, window=window)
+    o = o.reshape(B, H * hd)
+    o = jnp.einsum(
+        "bh,hd->bd", o, p["wo"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    return o, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _mlp_p(p):
+    q = {"wi": p["wi"], "wo": p["wo_mlp"]}
+    if "wg" in p:
+        q["wg"] = p["wg"]
+    return q
+
+
+def _ffn(p, cfg, x):
+    if cfg.num_experts:
+        return M.moe_mlp(p, x, cfg)
+    return L.mlp(_mlp_p(p), x, cfg.activation), 0.0
+
+
+def block(p, cfg, h, cos, sin, *, window=0, q_offset=0):
+    if cfg.parallel_block:
+        n = L.rms_norm(h, p["attn_norm"], cfg.norm_eps)
+        a = attention(p, cfg, n, cos, sin, window=window, q_offset=q_offset)
+        m, aux = _ffn(p, cfg, n)
+        h = h + a + m
+    else:
+        n = L.rms_norm(h, p["attn_norm"], cfg.norm_eps)
+        h = h + attention(p, cfg, n, cos, sin, window=window, q_offset=q_offset)
+        n = L.rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+        m, aux = _ffn(p, cfg, n)
+        h = h + m
+    return constrain(h, "residual"), aux
+
+
+def remat_wrap(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.gather_save_policy:
+        # save cross-device-gathered tensors so the backward pass does not
+        # re-issue the TP/FSDP all-gathers (collective bytes vs memory trade)
+        policy = jax.checkpoint_policies.save_only_these_names("gathered")
+    elif cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = None
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg, batch):
+    """Token (+ multimodal prefix) embedding. Returns (h, label_offset)."""
+    tokens = batch["tokens"]
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(h.dtype)  # (B, P, d) from the stub
+        c = params["connector"]
+        pe = jnp.einsum("bpd,de->bpe", jax.nn.gelu(patches @ c["wi"]), c["wo"])
+        h = jnp.concatenate([pe.astype(h.dtype), h], axis=1)
+    return constrain(h, "residual")
+
+
+def forward(params, cfg, batch, *, q_offset=0):
+    """-> (logits (B, S_total, V_pad), aux_loss)."""
+    h = embed_inputs(params, cfg, batch)
+    S = h.shape[1]
+    positions = jnp.arange(S) + q_offset
+    hd = cfg.resolved_head_dim()
+    cos, sin = (
+        L.rope_cos_sin(positions, hd, cfg.rope_theta)
+        if cfg.rope_theta
+        else (None, None)
+    )
+
+    blk = remat_wrap(
+        cfg,
+        functools.partial(
+            block, cfg=cfg, window=cfg.sliding_window, q_offset=q_offset
+        ),
+    )
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a = blk(lp, h=h, cos=cos, sin=sin)
+        return (h, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), params["layers"],
+                               unroll=cfg.scan_unroll)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum(
+        "bsd,dv->bsv", h, head, preferred_element_type=jnp.float32
+    ).astype(h.dtype)
+    return constrain(logits, "logits"), aux
+
+
+def loss_fn(params, cfg, batch, *, q_offset=0):
+    logits, aux = forward(params, cfg, batch, q_offset=q_offset)
+    return L.cross_entropy_loss(logits, batch["labels"], cfg.vocab_size) + aux
+
+
+def prefill_step(params, cfg, batch, max_len: int):
+    """Process a full prompt, returning (logits, cache) for decode to extend."""
+    h = embed_inputs(params, cfg, batch)
+    S = h.shape[1]
+    hd = cfg.resolved_head_dim()
+    positions = jnp.arange(S)
+    cos, sin = (
+        L.rope_cos_sin(positions, hd, cfg.rope_theta)
+        if cfg.rope_theta
+        else (None, None)
+    )
+
+    def blk(lp, h):
+        if cfg.parallel_block:
+            n = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+            a, kv = attention(lp, cfg, n, cos, sin,
+                              window=cfg.sliding_window, return_kv=True)
+            m, _ = _ffn(lp, cfg, n)
+            h = h + a + m
+        else:
+            n = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+            a, kv = attention(lp, cfg, n, cos, sin,
+                              window=cfg.sliding_window, return_kv=True)
+            h = h + a
+            n = L.rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+            m, _ = _ffn(lp, cfg, n)
+            h = h + m
+        return constrain(h, "residual"), kv
+
+    def body(h, lp):
+        h, kv = blk(lp, h)
+        return h, kv
+
+    h, (ks, vs) = jax.lax.scan(body, h, params["layers"],
+                               unroll=cfg.scan_unroll)
+    pad = max_len - S
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum(
+        "bsd,dv->bsv", h, head, preferred_element_type=jnp.float32
+    ).astype(h.dtype)
+    return logits, {"k": ks, "v": vs}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim()
+    K, nl = cfg.num_kv_heads, cfg.num_layers
+    dt = jnp.dtype(cfg.dtype)
+    kv = jax.ShapeDtypeStruct((nl, batch, K, max_len, hd), dt)
+    return {"k": kv, "v": kv}
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, max_len)
+    )
+
+
+def decode_step(params, cfg, cache, batch):
+    """batch: {"token": (B,), "position": (B,)} -> (logits (B, V_pad), cache)."""
+    tokens, position = batch["token"], batch["position"]
+    h = jnp.take(params["embed"], tokens, axis=0)  # (B, d)
+    hd = cfg.resolved_head_dim()
+    cos, sin = (
+        L.rope_cos_sin(position, hd, cfg.rope_theta)
+        if cfg.rope_theta
+        else (None, None)
+    )
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        n = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        a, kc, vc = attention_decode(
+            lp, cfg, n, cos, sin, kc, vc, position, window=cfg.sliding_window
+        )
+        if cfg.parallel_block:
+            m, _ = _ffn_decode(lp, cfg, n)
+            h = h + a + m
+        else:
+            h = h + a
+            n = L.rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+            m, _ = _ffn_decode(lp, cfg, n)
+            h = h + m
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, h, (params["layers"], cache["k"], cache["v"]),
+        unroll=cfg.scan_unroll,
+    )
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum(
+        "bd,dv->bv", h, head, preferred_element_type=jnp.float32
+    )
+    return logits, {"k": ks, "v": vs}
+
+
+def _ffn_decode(p, cfg, x):
+    if cfg.num_experts:
+        return M.moe_mlp_decode(p, x, cfg)
+    out = L.mlp(_mlp_p(p), x[:, None, :], cfg.activation)[:, 0]
+    return out, 0.0

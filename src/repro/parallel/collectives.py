@@ -1,0 +1,94 @@
+"""Explicit collective patterns: expert-parallel all-to-all MoE and the
+ring-carry sequence-parallel scan (paper C5's D2D traffic patterns as
+jax.lax collectives under shard_map).
+
+The default MoE keeps all experts TP-sharded on d_ff (weights resident
+everywhere); this module provides the EP alternative — experts partitioned
+across the `model` axis with token all-to-alls — used in the §Perf hillclimb
+where it trades weight all-gathers for activation exchange.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def ep_expert_ffn(disp, wi, wg, wo, act, mesh, dp, *, ep_axis="model"):
+    """Expert-parallel FFN on capacity-dispatched tokens.
+
+    disp: (B, E, C, d) batch-sharded over dp, replicated over ep_axis.
+    weights: (E, d, f) etc. with E sharded over ep_axis (requires E %
+    mesh[ep_axis] == 0, checked by the caller).
+    Inside shard_map: all_to_all swaps the (E, local-batch) layout so each
+    ep-rank holds ALL batch rows for ITS experts, runs the dense FFN, and
+    all_to_alls back — two activation exchanges instead of streaming every
+    expert's weights through every rank.
+    """
+    ep = mesh.shape[ep_axis]
+
+    def local(disp_l, wi_l, wg_l, wo_l):
+        # disp_l: (b, E, C, d) with b = B/|dp|; E global here, experts local
+        b, E, C, d = disp_l.shape
+        e_loc = wi_l.shape[0]  # E / ep
+        # regroup (b, E, C, d) -> (ep, b, e_loc, C, d) and exchange over ep
+        x = disp_l.reshape(b, ep, e_loc, C, d).transpose(1, 0, 2, 3, 4)
+        x = jax.lax.all_to_all(x, ep_axis, split_axis=0, concat_axis=1,
+                               tiled=False)
+        # x: (ep*b, e_loc, C, d) — every rank now owns its experts' tokens
+        h = jnp.einsum("becd,edf->becf",
+                       x.reshape(ep * b, e_loc, C, d), wi_l,
+                       preferred_element_type=jnp.float32)
+        if wg_l is not None:
+            g = jnp.einsum("becd,edf->becf", x.reshape(ep * b, e_loc, C, d),
+                           wg_l, preferred_element_type=jnp.float32)
+            h = act(g) * h
+        h = h.astype(disp_l.dtype)
+        y = jnp.einsum("becf,efd->becd", h, wo_l,
+                       preferred_element_type=jnp.float32).astype(disp_l.dtype)
+        # exchange back: (ep*b, e_loc, C, d) -> (b, E, C, d)
+        y = y.reshape(ep, b, e_loc, C, d)
+        y = jax.lax.all_to_all(y, ep_axis, split_axis=0, concat_axis=0,
+                               tiled=False)
+        return y.reshape(ep, b, e_loc, C, d).transpose(1, 0, 2, 3, 4).reshape(
+            b, E, C, d
+        )
+
+    has_gate = wg is not None
+    if has_gate:
+        return jax.shard_map(
+            lambda d_, wi_, wg_, wo_: local(d_, wi_, wg_, wo_),
+            mesh=mesh,
+            in_specs=(P(dp, None, None, None), P(ep_axis, None, None),
+                      P(ep_axis, None, None), P(ep_axis, None, None)),
+            out_specs=P(dp, None, None, None),
+            check_vma=False,
+        )(disp, wi, wg, wo)
+    return jax.shard_map(
+        lambda d_, wi_, wo_: local(d_, wi_, None, wo_),
+        mesh=mesh,
+        in_specs=(P(dp, None, None, None), P(ep_axis, None, None),
+                  P(ep_axis, None, None)),
+        out_specs=P(dp, None, None, None),
+        check_vma=False,
+    )(disp, wi, wo)
+
+
+def ring_scan_carry(chunk_fn, xs, state, mesh, seq_axis="data"):
+    """Sequence-parallel linear-recurrence carry: each rank scans its local
+    chunk, then the final state rides a collective_permute ring to the next
+    rank (the D2D-pipelined version of the SSM chunk scan).
+
+    chunk_fn(state, xs_local) -> (state_out, ys_local)
+    """
+    n = mesh.shape[seq_axis]
+
+    def local(xs_l, s0_l):
+        # stage i receives the carry from stage i-1; ranks pipeline naturally
+        s, ys = chunk_fn(s0_l, xs_l)
+        s_next = jax.lax.ppermute(
+            s, seq_axis, [(i, (i + 1) % n) for i in range(n)]
+        )
+        return ys, s_next
+
+    return local  # composed by the caller inside its own shard_map

@@ -1,0 +1,307 @@
+"""Divisibility-aware sharding rules (the Occamy hierarchy as GSPMD specs).
+
+The paper's interconnect is *symmetric*: code is written cluster-agnostically
+and the network guarantees constant bandwidth per hierarchy level. The GSPMD
+analogue: models only declare *logical* intent (`constrain(x, "residual")`)
+and this module maps intent -> PartitionSpec for whatever mesh is active.
+
+Several assigned archs have TP-hostile dimensions (20/25 heads, vocab 51866):
+every rule checks divisibility and degrades to replication instead of failing,
+the software analogue of the D2D channel allocator's graceful degradation.
+"""
+from __future__ import annotations
+
+import re
+from contextlib import contextmanager
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# activation-sharding intent hooks (used inside model code)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: dict | None = None
+
+
+def constrain(x, kind: str):
+    if _ACTIVE is None:
+        return x
+    sharding = _ACTIVE.get(kind)
+    if sharding is None:
+        return x
+    spec = sharding.spec if isinstance(sharding, NamedSharding) else sharding
+    if len(spec) > x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def current_mesh() -> Mesh | None:
+    """Mesh the model is being lowered for (None outside a mesh context)."""
+    if _ACTIVE is None:
+        return None
+    return _ACTIVE.get("__mesh__")
+
+
+@contextmanager
+def activation_sharding(specs: dict):
+    global _ACTIVE
+    old, _ACTIVE = _ACTIVE, specs
+    try:
+        yield
+    finally:
+        _ACTIVE = old
+
+
+def default_activation_specs(cfg, mesh: Mesh, kind: str) -> dict:
+    """Residual stream sequence-sharded over `model` (Megatron-SP style);
+    logits vocab-sharded over `model`."""
+    dp = dp_axes(mesh)
+    specs = {}
+    if kind == "train" and cfg.seq_shard_activations:
+        specs["residual"] = NamedSharding(mesh, P(dp, "model", None))
+    else:
+        specs["residual"] = NamedSharding(mesh, P(dp, None, None))
+    specs["logits"] = NamedSharding(mesh, P(dp, None, "model"))
+    # MoE dispatch/hidden buffers: batch over dp, expert hidden over model
+    specs["moe_dispatch"] = NamedSharding(mesh, P(dp, None, None, None))
+    specs["moe_tokens"] = NamedSharding(mesh, P(dp, None, None))
+    specs["moe_hidden"] = NamedSharding(mesh, P(dp, None, None, "model"))
+    if getattr(cfg, "explicit_attn_sharding", False):
+        # TP-indivisible heads: q stays sequence-sharded (attention work is
+        # distributed over `model` by q rows, Megatron-CP style) while K/V
+        # are gathered ONCE per layer — GSPMD otherwise re-gathers a K/V
+        # slice per flash block (gemma-2b: 144 gathers/2 layers).
+        tp_n = axis_size(mesh, "model")
+        q_ok = cfg.num_heads % tp_n == 0
+        kv_ok = cfg.num_kv_heads % tp_n == 0
+        specs["attn_q"] = NamedSharding(
+            mesh, P(dp, None, "model", None) if q_ok else P(dp, "model", None, None)
+        )
+        specs["attn_kv"] = NamedSharding(
+            mesh, P(dp, None, "model", None) if kv_ok else P(dp, None, None, None)
+        )
+    specs["__mesh__"] = mesh
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# mesh helpers
+# ---------------------------------------------------------------------------
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, axes, mesh: Mesh) -> bool:
+    return dim % axis_size(mesh, axes) == 0
+
+
+def pick(mesh: Mesh, dim: int, *candidates):
+    """First candidate axis (or axis tuple) that divides `dim`, else None."""
+    for c in candidates:
+        if c is not None and _fits(dim, c, mesh):
+            return c
+    return None
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+
+# leaf-name -> (logical role per trailing dim). Leading stacked-layer dims are
+# auto-detected by rank and always unsharded (scan axis).
+# roles: "d_in"/"d_out" (embedding dim), "heads" (H*hd or K*hd flat),
+#        "ff" (d_ff or 2*d_ff), "vocab", "expert", "none"
+_PARAM_ROLES = {
+    "embed": ("vocab", "d_out"),
+    "lm_head": ("d_in", "vocab"),
+    "wq": ("d_in", "heads_q"),
+    "wk": ("d_in", "heads_kv"),
+    "wv": ("d_in", "heads_kv"),
+    "wo": ("heads_q", "d_out"),
+    "bq": ("heads_q",),
+    "bk": ("heads_kv",),
+    "bv": ("heads_kv",),
+    "wi": ("d_in", "ff"),
+    "wg": ("d_in", "ff"),
+    "wo_mlp": ("ff", "d_out"),
+    # whisper cross-attention
+    "cwq": ("d_in", "heads_q"),
+    "cwk": ("d_in", "heads_kv"),
+    "cwv": ("d_in", "heads_kv"),
+    "cwo": ("heads_q", "d_out"),
+    "cbq": ("heads_q",),
+    "cbk": ("heads_kv",),
+    "cbv": ("heads_kv",),
+    "frontend_proj": ("d_in", "d_out"),
+    "router": ("d_in", "none"),
+    "moe_wi": ("expert", "d_in", "ff"),
+    "moe_wg": ("expert", "d_in", "ff"),
+    "moe_wo": ("expert", "ff", "d_out"),
+    # rwkv6 time-mix / channel-mix
+    "wr_t": ("d_in", "rwkv_heads"),
+    "wk_t": ("d_in", "rwkv_heads"),
+    "wv_t": ("d_in", "rwkv_heads"),
+    "wg_t": ("d_in", "rwkv_heads"),
+    "wo_t": ("rwkv_heads", "d_out"),
+    "w_lora_a": ("d_in", "none"),
+    "w_lora_b": ("none", "rwkv_heads"),
+    "wk_c": ("d_in", "ff"),
+    "wv_c": ("ff", "d_out"),
+    "wr_c": ("d_in", "d_out"),
+    # hybrid (mamba/SSD path)
+    "ssm_in": ("d_in", "ssm_inner"),
+    "ssm_out": ("ssm_inner", "d_out"),
+    "ssm_bc": ("d_in", "none"),
+    "ssm_dt": ("d_in", "ssm_heads"),
+}
+
+
+def _role_spec(role: str, dim: int, cfg, mesh: Mesh, mode: str):
+    """Map one logical role to a mesh axis (or None)."""
+    tp = "model"
+    dp = dp_axes(mesh)
+    hd = cfg.resolved_head_dim()
+    fsdp_ok = (mode == "train" and cfg.fsdp) or (
+        mode == "serve" and cfg.weights_2d_tp
+    )
+    fsdp = dp if fsdp_ok else None
+
+    if role == "none":
+        return None
+    if role == "vocab":
+        return pick(mesh, dim, tp)
+    if role in ("d_in", "d_out"):
+        return pick(mesh, dim, fsdp)
+    if role == "ff":
+        return pick(mesh, dim, tp)
+    if role == "expert":
+        return None  # experts TP'd on ff; EP variant handled in collectives
+    if role == "heads_q":
+        nh = dim // hd
+        return tp if nh % axis_size(mesh, tp) == 0 else pick(mesh, dim, fsdp)
+    if role == "heads_kv":
+        nh = dim // hd
+        return tp if nh % axis_size(mesh, tp) == 0 else pick(mesh, dim, fsdp)
+    if role == "rwkv_heads":
+        nh = dim // max(cfg.resolved_head_dim(), 1)
+        return tp if nh % axis_size(mesh, tp) == 0 else pick(mesh, dim, fsdp)
+    if role == "ssm_inner":
+        nh = dim // max(cfg.ssm_head_dim, 1)
+        return tp if nh % axis_size(mesh, tp) == 0 else pick(mesh, dim, fsdp)
+    if role == "ssm_heads":
+        return pick(mesh, dim, tp)
+    raise ValueError(role)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def param_specs(cfg, params_tree, mesh: Mesh, mode: str = "train"):
+    """Tree of PartitionSpec matching params_tree (shapes or arrays)."""
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        roles = _PARAM_ROLES.get(name)
+        if roles is None:
+            return P()  # norms, scalars, unknown leaves: replicate
+        lead = len(shape) - len(roles)
+        axes = [None] * lead + [
+            _role_spec(r, shape[lead + i], cfg, mesh, mode)
+            for i, r in enumerate(roles)
+        ]
+        # a mesh axis may appear only once per spec: drop duplicates
+        seen: set = set()
+        final = []
+        for a in axes:
+            names = (a,) if isinstance(a, str) else tuple(a or ())
+            if any(n in seen for n in names):
+                final.append(None)
+            else:
+                seen.update(names)
+                final.append(a)
+        return P(*final)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def param_shardings(cfg, params_tree, mesh: Mesh, mode: str = "train"):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(cfg, params_tree, mesh, mode),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch / cache sharding
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg, batch_tree, mesh: Mesh):
+    """Shard the leading batch dim over dp where divisible."""
+    dp = dp_axes(mesh)
+
+    def one(leaf):
+        if not leaf.shape:
+            return P()
+        b = leaf.shape[0]
+        axes = pick(mesh, b, dp, dp[-1:])
+        return P(*([axes] + [None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_specs(cfg, cache_tree, mesh: Mesh):
+    """KV caches: (L, B, K, S, hd) — B over dp if divisible, S over model
+    (flash-decode style partial-softmax sharding); SSM states (L, B, H, N, M):
+    B over dp, H over model if divisible."""
+    dp = dp_axes(mesh)
+    tp = "model"
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        if name in ("k", "v", "cross_k", "cross_v") and len(shape) == 5:
+            L_, B, K, S, hd = shape
+            b_ax = pick(mesh, B, dp, dp[-1:])
+            if b_ax is None:
+                s_ax = pick(mesh, S, (dp[-1], tp), tp, dp[-1:])
+            else:
+                s_ax = pick(mesh, S, tp)
+            return P(None, b_ax, None, s_ax, None)
+        if name in ("ssm_state",) and len(shape) == 5:
+            L_, B, H, N, M = shape
+            b_ax = pick(mesh, B, dp, dp[-1:])
+            h_ax = pick(mesh, H, tp)
+            return P(None, b_ax, h_ax, None, None)
+        if len(shape) >= 2:  # token-shift states etc: (L, B, ...)
+            b_ax = pick(mesh, shape[1], dp, dp[-1:])
+            return P(*([None, b_ax] + [None] * (len(shape) - 2)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,10 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single-device CPU; only launch/dryrun.py (and the subprocess-based
+# distribution tests) force a multi-device host platform.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,174 @@
+"""Per-kernel allclose vs the pure-jnp oracles (interpret mode), with
+shape/dtype sweeps as required for every Pallas kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparse as sp
+from repro.kernels import ops, ref
+
+RTOL = 2e-2  # bf16 sweeps
+ATOL = 1e-4
+
+
+def allclose(got, want, rtol=1e-5, atol=1e-5):
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=rtol, atol=atol,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GEMM: shape x dtype sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 32, 32), (100, 70, 130), (256, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_sweep(rng, m, k, n, dtype):
+    a = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype)
+    got = ops.gemm(a, b, impl="interpret", out_dtype=jnp.float32)
+    want = ref.gemm_ref(a, b, out_dtype=jnp.float32)
+    allclose(got, want, rtol=RTOL, atol=1e-2)
+
+
+def test_gemm_fp8_expanding(rng):
+    a = jnp.asarray(rng.standard_normal((64, 64)), jnp.float8_e4m3fn)
+    b = jnp.asarray(rng.standard_normal((64, 64)), jnp.float8_e4m3fn)
+    got = ops.gemm(a, b, impl="interpret", out_dtype=jnp.float32)
+    want = ref.gemm_ref(a, b, out_dtype=jnp.float32)
+    allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# FlashAttention: masks x GQA x offsets x dtypes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h,kv,sq,sk", [(4, 2, 50, 50), (8, 1, 33, 65), (4, 4, 128, 128)])
+@pytest.mark.parametrize("kw", [
+    dict(causal=True), dict(causal=True, window=7), dict(causal=False),
+    dict(causal=True, q_offset=13),
+])
+def test_flash_attention(rng, h, kv, sq, sk, kw):
+    q = jnp.asarray(rng.standard_normal((2, h, sq, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, kv, sk, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, kv, sk, 16)), jnp.float32)
+    want = ref.mha_ref(q, k, v, **kw)
+    allclose(ops.flash_attention(q, k, v, impl="interpret", **kw), want,
+             rtol=1e-4, atol=1e-4)
+    allclose(ops.flash_attention(q, k, v, impl="xla", block_k=16, **kw), want,
+             rtol=1e-4, atol=1e-4)
+    with ops.unrolled_inner():
+        allclose(ops.flash_attention(q, k, v, impl="xla", **kw), want,
+                 rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_bf16(rng):
+    q = jnp.asarray(rng.standard_normal((1, 4, 64, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, impl="interpret", causal=True)
+    want = ref.mha_ref(q, k, v, causal=True)
+    allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# Linear attention (RWKV6/SSD): modes x shapes, state handoff
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["rwkv", "ssd"])
+@pytest.mark.parametrize("t,n,m", [(40, 8, 12), (64, 16, 16), (33, 8, 8)])
+def test_linear_attention(rng, mode, t, n, m):
+    r = jnp.asarray(rng.standard_normal((2, 3, t, n)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 3, t, n)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 3, t, m)), jnp.float32)
+    wl = jnp.asarray(-rng.uniform(0.001, 2.0, (2, 3, t, n)), jnp.float32)
+    u = None if mode == "ssd" else jnp.asarray(rng.standard_normal((3, n)), jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((2, 3, n, m)), jnp.float32)
+    o_ref, s_ref = ref.linear_attention_scan_ref(r, k, v, wl, u, s0)
+    for impl in ("xla", "interpret"):
+        o, s = ops.linear_attention(r, k, v, wl, u, s0, impl=impl, chunk=16)
+        allclose(o, o_ref, rtol=1e-4, atol=1e-4)
+        allclose(s, s_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_linear_attention_step_matches_scan(rng):
+    r = jnp.asarray(rng.standard_normal((2, 3, 5, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 3, 5, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 3, 5, 8)), jnp.float32)
+    wl = jnp.asarray(-rng.uniform(0.01, 2.0, (2, 3, 5, 8)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((3, 8)), jnp.float32)
+    o_ref, s_ref = ref.linear_attention_scan_ref(r, k, v, wl, u, None)
+    S = jnp.zeros((2, 3, 8, 8))
+    for t in range(5):
+        o_t, S = ops.linear_attention_step(
+            r[:, :, t], k[:, :, t], v[:, :, t], wl[:, :, t], u, S
+        )
+        allclose(o_t, o_ref[:, :, t], rtol=1e-4, atol=1e-4)
+    allclose(S, s_ref, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SpMM (ELL + BSR), SpMSpM, stencil
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("r,c,density", [(64, 96, 0.1), (128, 256, 0.02), (30, 50, 0.3)])
+def test_spmm_ell(rng, r, c, density):
+    A = sp.random_ell(rng, r, c, density)
+    D = jnp.asarray(rng.standard_normal((c, 40)), jnp.float32)
+    got = ops.spmm(jnp.asarray(A.values), jnp.asarray(A.cols), D, impl="interpret")
+    want = jnp.asarray(A.todense()) @ D
+    allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bk", [(8, 128), (16, 64)])
+def test_bsr_spmm(rng, bm, bk):
+    dense_A = np.zeros((64, 256), np.float32)
+    mask = rng.random((64, 256)) < 0.05
+    dense_A[mask] = rng.standard_normal(mask.sum())
+    bsr = sp.dense_to_bsr(dense_A, bm=bm, bk=bk)
+    D = jnp.asarray(rng.standard_normal((256, 96)), jnp.float32)
+    want = jnp.asarray(dense_A) @ D
+    for impl in ("interpret", "xla"):
+        got = ops.bsr_spmm(
+            jnp.asarray(bsr.tile_values), jnp.asarray(bsr.tile_rows),
+            jnp.asarray(bsr.tile_cols), D, 64, impl=impl,
+        )
+        allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("r,c,k", [(48, 56, 128), (16, 128, 64)])
+def test_spmspm(rng, r, c, k):
+    A = sp.random_ell(rng, r, k, 0.1)
+    B = sp.random_ell(rng, c, k, 0.1)
+    args = (jnp.asarray(A.values), jnp.asarray(A.cols),
+            jnp.asarray(B.values), jnp.asarray(B.cols), k)
+    want = ref.spmspm_ref(*args)
+    for impl in ("interpret", "xla"):
+        allclose(ops.spmspm(*args, impl=impl), want, rtol=1e-4, atol=1e-4)
+
+
+STAR = np.array([[0, 0, 0], [1, 0, 0], [-1, 0, 0], [0, 1, 0], [0, -1, 0],
+                 [0, 0, 1], [0, 0, -1]])
+BOX27 = np.array([[dx, dy, dz] for dx in (-1, 0, 1) for dy in (-1, 0, 1)
+                  for dz in (-1, 0, 1)])
+STAR_R2 = np.array([[0, 0, 0]] + [
+    [s * r if a == 0 else 0, s * r if a == 1 else 0, s * r if a == 2 else 0]
+    for a in range(3) for r in (1, 2) for s in (1, -1)
+])
+
+
+@pytest.mark.parametrize("offsets", [STAR, BOX27, STAR_R2],
+                         ids=["star7", "box27", "star13_r2"])
+@pytest.mark.parametrize("shape", [(16, 16, 16), (8, 32, 32)])
+def test_stencil(rng, offsets, shape):
+    g = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    w = rng.standard_normal(len(offsets)).astype(np.float32)
+    got = ops.stencil(g, offsets, w, impl="interpret")
+    want = ref.stencil_ref(g, offsets, w)
+    allclose(got, want, rtol=1e-4, atol=1e-4)

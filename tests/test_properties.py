@@ -1,0 +1,136 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparse as sp
+from repro.kernels import ops, ref
+from repro.models import layers as L
+from repro.optim import adamw, compression
+
+SETTINGS = dict(max_examples=6, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.sampled_from([7, 16, 33]),
+    n=st.sampled_from([4, 8]),
+    chunk=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+    ssd=st.booleans(),
+)
+def test_chunked_linattn_equals_exact_scan(t, n, chunk, seed, ssd):
+    """The chunked algorithm is algebraically identical to the per-token
+    recurrence for any decay in the clamp range — the core kernel invariant."""
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.standard_normal((1, 2, t, n)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, t, n)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, t, n)), jnp.float32)
+    wl = jnp.asarray(-rng.uniform(0.0, 2.5, (1, 2, t, n)), jnp.float32)
+    u = None if ssd else jnp.asarray(rng.standard_normal((2, n)), jnp.float32)
+    o_ref, s_ref = ref.linear_attention_scan_ref(r, k, v, wl, u, None)
+    o, s = ops.linear_attention(r, k, v, wl, u, impl="xla", chunk=chunk)
+    np.testing.assert_allclose(o, o_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(s, s_ref, rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    sq=st.sampled_from([1, 17, 40]),
+    sk=st.sampled_from([5, 33]),
+    window=st.sampled_from([0, 7]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_matches_naive_any_shape(sq, sk, window, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, 2, sq, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, sk, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, sk, 8)), jnp.float32)
+    got = ops.flash_attention(q, k, v, impl="xla", block_k=8, causal=True,
+                              window=window)
+    want = ref.mha_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2]), s=st.sampled_from([4, 9]),
+    v=st.sampled_from([17, 100]),
+    seed=st.integers(0, 2**16),
+)
+def test_cross_entropy_matches_take_along_axis(b, s, v, seed):
+    """One-hot-product loss (TP-shardable) == naive gather loss."""
+    rng = np.random.default_rng(seed)
+    vp = L.padded_vocab(v)
+    logits = jnp.asarray(rng.standard_normal((b, s, vp)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    got = L.cross_entropy_loss(logits, labels, v)
+    lf = jnp.where(jnp.arange(vp) >= v, -1e30, logits)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    want = jnp.mean(logz - gold)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    r=st.sampled_from([4, 24]), c=st.sampled_from([16, 64]),
+    density=st.floats(0.02, 0.5), seed=st.integers(0, 2**16),
+)
+def test_ell_roundtrip_and_spmm(r, c, density, seed):
+    rng = np.random.default_rng(seed)
+    A = sp.random_ell(rng, r, c, density)
+    assert A.todense().shape == (r, c)
+    D = jnp.asarray(rng.standard_normal((c, 8)), jnp.float32)
+    got = ref.spmm_ref(jnp.asarray(A.values), jnp.asarray(A.cols), D)
+    np.testing.assert_allclose(got, A.todense() @ np.asarray(D),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), steps=st.integers(1, 8))
+def test_compression_error_feedback_is_lossless_in_sum(seed, steps):
+    """Error feedback: sum of compressed grads -> sum of true grads (the
+    residual never exceeds one quantization step)."""
+    rng = np.random.default_rng(seed)
+    g_true = [rng.standard_normal((8, 8)).astype(np.float32) for _ in range(steps)]
+    err = jnp.zeros((8, 8))
+    total_sent = jnp.zeros((8, 8))
+    for g in g_true:
+        sent, err = compression.compress_decompress(jnp.asarray(g), err)
+        total_sent = total_sent + sent
+    total_true = jnp.asarray(np.sum(g_true, axis=0))
+    # residual bounded by one bf16 ulp of the last value, not accumulated
+    assert float(jnp.max(jnp.abs(total_sent + err - total_true))) < 1e-3
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_bsr_covers_every_row_block(seed):
+    rng = np.random.default_rng(seed)
+    dense = np.zeros((32, 256), np.float32)
+    mask = rng.random((32, 256)) < 0.03
+    dense[mask] = 1.0
+    bsr = sp.dense_to_bsr(dense, bm=8, bk=128)
+    assert set(bsr.tile_rows.tolist()) == set(range(4))  # kernel-init invariant
+    np.testing.assert_allclose(bsr.todense(), dense)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_adamw_descends_quadratic(seed):
+    """Optimizer sanity: AdamW reduces a convex quadratic."""
+    from repro.configs.base import get_config
+
+    cfg = get_config("gemma-2b", reduced=True).replace(
+        learning_rate=0.1, warmup_steps=1, weight_decay=0.0)
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.standard_normal((8,)), jnp.float32)}
+    opt = adamw.init_state(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(30):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw.apply_updates(cfg, params, g, opt)
+    assert float(loss(params)) < l0 * 0.5

@@ -38,7 +38,7 @@ def run():
     for name, (shape, offs) in cases.items():
         g = jnp.asarray(rng.standard_normal(shape), jnp.float32)
         w = rng.standard_normal(len(offs)).astype(np.float32)
-        fn = jax.jit(lambda x, offs=offs, w=w: ops.stencil(x, offs, w, impl="xla"))
+        fn = jax.jit(lambda x, offs=offs, w=w: ops.stencil(x, offs, w))
         t = timeit(fn, g)
         flops = 2 * g.size * len(offs)
         row(f"fig9b_{name}", t,

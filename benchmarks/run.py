@@ -2,10 +2,26 @@
 
 Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py for the
 CPU-timing caveats and the derived figure-of-merit definitions).
+
+Implementation selection is registry-global: the harness pins the ``xla``
+impls (the lowering-representative blocked forms — Pallas cannot lower on
+CPU) once here instead of threading ``impl=`` through every call site.
+Override with ``REPRO_BENCH_IMPL=interpret`` etc.
 """
+import os
 
 
 def main() -> None:
+    import jax
+
+    from repro.kernels import registry
+
+    impl = os.environ.get("REPRO_BENCH_IMPL")
+    if impl is None:
+        # xla is the CPU stand-in; on TPU let auto pick the Pallas kernels
+        impl = "xla" if jax.default_backend() != "tpu" else "auto"
+    registry.set_default_impl(impl)
+
     from benchmarks import (bench_d2d, bench_gcn, bench_gemm, bench_gptj,
                             bench_spmm, bench_spmspm, bench_stencil)
 

@@ -21,7 +21,9 @@ def act1_affine_streams():
     a = jnp.asarray(np.random.default_rng(0).standard_normal((M, K)), jnp.float32)
     b = jnp.asarray(np.random.default_rng(1).standard_normal((K, N)), jnp.float32)
 
-    grid, in_streams, out_stream = streams.gemm_streams(M, N, K, bm, bn, bk)
+    grid, in_streams, out_stream = streams.gemm_streams(
+        M, N, K, bm, bn, bk, dtype=jnp.float32
+    )
 
     from jax.experimental.pallas import tpu as pltpu
     import jax.experimental.pallas as pl
@@ -38,21 +40,27 @@ def act1_affine_streams():
         def _():
             o_ref[...] = acc_ref[...]
 
-    out = streams.stream_compute(
-        body, grid=grid, in_streams=in_streams, out_stream=out_stream,
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
-        scratch=[pltpu.VMEM((bm, bn), jnp.float32)],
-        interpret=True,
-    )(a, b)
+    program = streams.StreamProgram(
+        name="quickstart_gemm",
+        body=body,
+        grid=grid,
+        in_streams=tuple(in_streams),
+        out_streams=(out_stream,),
+        out_shapes=(jax.ShapeDtypeStruct((M, N), jnp.float32),),
+        scratch=(pltpu.VMEM((bm, bn), jnp.float32),),
+    )
+    out = streams.stream_compute(program, a, b, interpret=True)
     err = float(jnp.max(jnp.abs(out - a @ b)))
-    print(f"[1] affine-stream GEMM  max|err| = {err:.2e}")
+    print(f"[1] affine-stream GEMM  max|err| = {err:.2e}  "
+          f"({program.steps} stream steps, "
+          f"{program.traffic_bytes() / 1e6:.1f} MB streamed bound)")
 
 
 def act2_sparse():
     rng = np.random.default_rng(0)
     A = sparse.random_ell(rng, 128, 256, density=0.05)
     D = jnp.asarray(rng.standard_normal((256, 64)), jnp.float32)
-    out = ops.spmm(jnp.asarray(A.values), jnp.asarray(A.cols), D, impl="interpret")
+    out = ops.spmm(A, D, impl="interpret")  # EllMatrix pytree operand
     want = jnp.asarray(A.todense()) @ D
     print(f"[2] indirect-stream SpMM (density 5%)  max|err| = "
           f"{float(jnp.max(jnp.abs(out - want))):.2e}")

@@ -1,51 +1,75 @@
 """Sparse tensor formats (paper Sec. II-A: value/index-pair major axes).
 
 The SUs accept "any sparse tensor format whose major axis is given by a
-value-index array pair". We provide the two TPU-idiomatic members:
+value-index array pair". We provide three members, all registered as JAX
+pytrees (array leaves + static shape aux data) so sparse operands pass whole
+through ``jax.jit`` / ``jax.vmap`` boundaries without densifying:
 
 - **ELL** (padded value/index rows): the direct value-index pair, used by the
-  spmm/spmspm XLA paths, GCN, and the intersection kernel. Padding entries
-  carry value 0 (they contribute nothing) and index 0.
+  spmm/spmspm paths, GCN, and the intersection kernel. Padding entries carry
+  value 0 (they contribute nothing) and index 0.
 - **BSR** (block-sparse rows): the MXU adaptation — unstructured sparsity is
   exploited at (bm x bk)-tile granularity, with scalar-prefetched tile
   coordinates playing the role of the SU index stream (DESIGN.md §6.2).
+- **CSR** (compressed rows): the interchange format; ``ell_to_csr`` /
+  ``csr_to_ell`` / ``csr_to_bsr`` / ``bsr_to_csr`` form the conversion path
+  between the compute formats.
+
+Converters are vectorized (no Python per-row/per-tile loops). Construction is
+host-side — the nnz structure decides output shapes — but ``todense`` and all
+format members are jnp-native and trace cleanly.
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
+@jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class EllMatrix:
     """Padded ELL rows: values/cols (R, L); logical shape (R, C)."""
 
-    values: np.ndarray
-    cols: np.ndarray
+    values: jax.Array
+    cols: jax.Array
     shape: tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.values, self.cols), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
 
     @property
     def nnz(self) -> int:
-        return int((self.values != 0).sum())
+        return int((np.asarray(self.values) != 0).sum())
 
-    def todense(self) -> np.ndarray:
+    def todense(self) -> jax.Array:
         R, C = self.shape
-        out = np.zeros((R, C), self.values.dtype)
-        np.add.at(out, (np.arange(R)[:, None], self.cols), self.values)
-        return out
+        rows = jnp.arange(R)[:, None]
+        out = jnp.zeros((R, C), self.values.dtype)
+        # padding slots carry value 0, so aliased (row, 0) scatters add nothing
+        return out.at[rows, self.cols].add(self.values)
 
 
-def dense_to_ell(dense: np.ndarray, max_nnz: int | None = None) -> EllMatrix:
+def dense_to_ell(dense, max_nnz: int | None = None) -> EllMatrix:
+    dense = jnp.asarray(dense)
     R, C = dense.shape
-    L = max_nnz or max(int((dense != 0).sum(1).max()), 1)
-    values = np.zeros((R, L), dense.dtype)
-    cols = np.zeros((R, L), np.int32)
-    for r in range(R):
-        (nz,) = np.nonzero(dense[r])
-        nz = nz[:L]
-        values[r, : len(nz)] = dense[r, nz]
-        cols[r, : len(nz)] = nz
+    mask = dense != 0
+    L = max_nnz or max(int(np.asarray(mask.sum(axis=1)).max()), 1)
+    # stable sort moves nonzero slots to the front, preserving column order
+    order = jnp.argsort(~mask, axis=1, stable=True)[:, : min(L, C)]
+    order = order.astype(jnp.int32)
+    keep = jnp.take_along_axis(mask, order, axis=1)
+    values = jnp.where(keep, jnp.take_along_axis(dense, order, axis=1), 0)
+    cols = jnp.where(keep, order, 0)
+    if L > C:  # honor a requested slot width wider than the matrix
+        values = jnp.pad(values, ((0, 0), (0, L - C)))
+        cols = jnp.pad(cols, ((0, 0), (0, L - C)))
     return EllMatrix(values, cols, (R, C))
 
 
@@ -54,13 +78,17 @@ def random_ell(
 ) -> EllMatrix:
     """Unstructured random sparse matrix (paper Fig. 9c/d operands)."""
     L = max(int(round(C * density)), 1)
+    # row-wise sample-without-replacement: argpartition of uniform keys (O(RC),
+    # vs the full-sort O(RC log C)) then sort only the kept L columns
+    keys = rng.random((R, C))
     cols = np.sort(
-        np.argsort(rng.random((R, C)), axis=1)[:, :L].astype(np.int32), axis=1
+        np.argpartition(keys, L - 1, axis=1)[:, :L].astype(np.int32), axis=1
     )
     values = rng.standard_normal((R, L)).astype(dtype)
-    return EllMatrix(values, cols, (R, C))
+    return EllMatrix(jnp.asarray(values), jnp.asarray(cols), (R, C))
 
 
+@jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class BsrMatrix:
     """Block-sparse rows: tiles sorted by (row, col) coordinate.
@@ -69,10 +97,17 @@ class BsrMatrix:
     spmm kernel's output blocks are always initialized.
     """
 
-    tile_values: np.ndarray  # (T, bm, bk)
-    tile_rows: np.ndarray  # (T,) int32, block-row index, sorted
-    tile_cols: np.ndarray  # (T,) int32, block-col index
+    tile_values: jax.Array  # (T, bm, bk)
+    tile_rows: jax.Array  # (T,) int32, block-row index, sorted
+    tile_cols: jax.Array  # (T,) int32, block-col index
     shape: tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.tile_values, self.tile_rows, self.tile_cols), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0])
 
     @property
     def block_shape(self) -> tuple[int, int]:
@@ -84,37 +119,166 @@ class BsrMatrix:
         total = (self.shape[0] // bm) * (self.shape[1] // bk)
         return len(self.tile_rows) / max(total, 1)
 
-    def todense(self) -> np.ndarray:
+    def todense(self) -> jax.Array:
         bm, bk = self.block_shape
-        out = np.zeros(self.shape, self.tile_values.dtype)
-        for t in range(len(self.tile_rows)):
-            r, c = self.tile_rows[t] * bm, self.tile_cols[t] * bk
-            out[r : r + bm, c : c + bk] += self.tile_values[t]
-        return out
+        R, C = self.shape
+        nr, nc = R // bm, C // bk
+        blocked = jnp.zeros((nr, nc, bm, bk), self.tile_values.dtype)
+        blocked = blocked.at[self.tile_rows, self.tile_cols].add(self.tile_values)
+        return blocked.transpose(0, 2, 1, 3).reshape(R, C)
 
 
-def dense_to_bsr(dense: np.ndarray, bm: int = 8, bk: int = 128) -> BsrMatrix:
+def dense_to_bsr(dense, bm: int = 8, bk: int = 128) -> BsrMatrix:
+    dense = np.asarray(dense)
     R, C = dense.shape
     assert R % bm == 0 and C % bk == 0, (R, C, bm, bk)
     nr, nc = R // bm, C // bk
-    tiles, rows, cols = [], [], []
     blocked = dense.reshape(nr, bm, nc, bk).transpose(0, 2, 1, 3)
-    for i in range(nr):
-        found = False
-        for j in range(nc):
-            tile = blocked[i, j]
-            if np.any(tile != 0):
-                tiles.append(tile)
-                rows.append(i)
-                cols.append(j)
-                found = True
-        if not found:  # keep output blocks initialized
-            tiles.append(np.zeros((bm, bk), dense.dtype))
-            rows.append(i)
-            cols.append(0)
+    nz = np.any(blocked != 0, axis=(2, 3))  # (nr, nc)
+    nz[~nz.any(axis=1), 0] = True  # keep every output row-block initialized
+    rows, cols = np.nonzero(nz)  # row-major => sorted by (row, col)
     return BsrMatrix(
-        np.stack(tiles),
-        np.asarray(rows, np.int32),
-        np.asarray(cols, np.int32),
+        jnp.asarray(blocked[rows, cols]),
+        jnp.asarray(rows.astype(np.int32)),
+        jnp.asarray(cols.astype(np.int32)),
         (R, C),
     )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CsrMatrix:
+    """Compressed sparse rows: data/indices (nnz,), indptr (R+1,)."""
+
+    data: jax.Array
+    indices: jax.Array  # int32 column ids
+    indptr: jax.Array  # int32 row pointers
+    shape: tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.data, self.indices, self.indptr), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.data.shape[0])
+
+    def todense(self) -> jax.Array:
+        R, C = self.shape
+        nnz = self.data.shape[0]
+        rows = (
+            jnp.searchsorted(self.indptr, jnp.arange(nnz), side="right") - 1
+        )
+        out = jnp.zeros((R, C), self.data.dtype)
+        return out.at[rows, self.indices].add(self.data)
+
+
+def dense_to_csr(dense) -> CsrMatrix:
+    dense = np.asarray(dense)
+    R, C = dense.shape
+    rows, cols = np.nonzero(dense)
+    indptr = np.zeros(R + 1, np.int32)
+    indptr[1:] = np.cumsum(np.bincount(rows, minlength=R))
+    return CsrMatrix(
+        jnp.asarray(dense[rows, cols]),
+        jnp.asarray(cols.astype(np.int32)),
+        jnp.asarray(indptr),
+        (R, C),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Conversion path: CSR <-> ELL <-> BSR
+# ---------------------------------------------------------------------------
+
+
+def ell_to_csr(A: EllMatrix) -> CsrMatrix:
+    vals = np.asarray(A.values)
+    cols = np.asarray(A.cols)
+    mask = vals != 0  # padding slots carry value 0
+    rows, slots = np.nonzero(mask)  # row-major: real entries in column order
+    R = A.shape[0]
+    indptr = np.zeros(R + 1, np.int32)
+    indptr[1:] = np.cumsum(mask.sum(axis=1))
+    return CsrMatrix(
+        jnp.asarray(vals[rows, slots]),
+        jnp.asarray(cols[rows, slots].astype(np.int32)),
+        jnp.asarray(indptr),
+        A.shape,
+    )
+
+
+def csr_to_ell(A: CsrMatrix, max_nnz: int | None = None) -> EllMatrix:
+    data = np.asarray(A.data)
+    indices = np.asarray(A.indices)
+    indptr = np.asarray(A.indptr)
+    R = A.shape[0]
+    counts = np.diff(indptr)
+    L = max_nnz or max(int(counts.max(initial=0)), 1)
+    rows = np.repeat(np.arange(R), counts)
+    slots = np.arange(len(data)) - indptr[rows]  # position within each row
+    keep = slots < L  # truncate rows longer than max_nnz
+    values = np.zeros((R, L), data.dtype)
+    cols = np.zeros((R, L), np.int32)
+    values[rows[keep], slots[keep]] = data[keep]
+    cols[rows[keep], slots[keep]] = indices[keep]
+    return EllMatrix(jnp.asarray(values), jnp.asarray(cols), A.shape)
+
+
+def csr_to_bsr(A: CsrMatrix, bm: int = 8, bk: int = 128) -> BsrMatrix:
+    """O(nnz) tile build: scatter entries into their (block-row, block-col)
+    tiles without materializing the dense matrix."""
+    data = np.asarray(A.data)
+    indices = np.asarray(A.indices)
+    indptr = np.asarray(A.indptr)
+    R, C = A.shape
+    assert R % bm == 0 and C % bk == 0, (R, C, bm, bk)
+    nr, nc = R // bm, C // bk
+    rows = np.repeat(np.arange(R), np.diff(indptr))
+    keys = (rows // bm).astype(np.int64) * nc + indices // bk
+    # every row-block owns >= 1 tile: add an empty (r, 0) tile where absent
+    present = np.zeros(nr, bool)
+    present[rows // bm] = True
+    empty_keys = np.flatnonzero(~present).astype(np.int64) * nc
+    uniq, inv = np.unique(np.concatenate([keys, empty_keys]), return_inverse=True)
+    tiles = np.zeros((len(uniq), bm, bk), data.dtype)
+    np.add.at(tiles, (inv[: len(keys)], rows % bm, indices % bk), data)
+    return BsrMatrix(
+        jnp.asarray(tiles),
+        jnp.asarray((uniq // nc).astype(np.int32)),
+        jnp.asarray((uniq % nc).astype(np.int32)),
+        (R, C),
+    )
+
+
+def bsr_to_csr(A: BsrMatrix) -> CsrMatrix:
+    """O(tile storage): enumerate nonzero tile entries, never densify."""
+    tv = np.asarray(A.tile_values)
+    tr = np.asarray(A.tile_rows)
+    tc = np.asarray(A.tile_cols)
+    T, bm, bk = tv.shape
+    R, C = A.shape
+    t_idx, r_off, c_off = np.nonzero(tv)
+    rows = tr[t_idx] * bm + r_off
+    cols = tc[t_idx] * bk + c_off
+    order = np.lexsort((cols, rows))  # CSR wants row-major, cols ascending
+    rows, cols = rows[order], cols[order]
+    indptr = np.zeros(R + 1, np.int32)
+    indptr[1:] = np.cumsum(np.bincount(rows, minlength=R))
+    return CsrMatrix(
+        jnp.asarray(tv[t_idx, r_off, c_off][order]),
+        jnp.asarray(cols.astype(np.int32)),
+        jnp.asarray(indptr),
+        (R, C),
+    )
+
+
+def ell_to_bsr(A: EllMatrix, bm: int = 8, bk: int = 128) -> BsrMatrix:
+    return csr_to_bsr(ell_to_csr(A), bm=bm, bk=bk)
+
+
+def bsr_to_ell(A: BsrMatrix, max_nnz: int | None = None) -> EllMatrix:
+    return csr_to_ell(bsr_to_csr(A), max_nnz=max_nnz)

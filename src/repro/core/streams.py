@@ -1,4 +1,4 @@
-"""Streaming-unit programming model (paper C1/C2) as a Pallas front-end.
+"""Streaming-unit programming model (paper C1/C2) as the kernel substrate.
 
 Occamy's SUs map *streams* — ≤4D affine address sequences or index-driven
 indirect sequences — onto FP register reads/writes, so the issue slots carry
@@ -11,34 +11,66 @@ This module makes that correspondence explicit and first-class:
   AffineStream(block, loop)    ~ SU 4D affine stream descriptor (Fig. 4a)
   IndirectStream(block, idx)   ~ SU indirect stream (Fig. 4b): a scalar-
                                  prefetched index array drives the index_map
-  stream_compute(...)          ~ FREP + SU setup: launches the kernel with
-                                 streams bound to its operands
+  StreamProgram(...)           ~ a full SU configuration: grid (the FREP loop
+                                 nest), bound streams, and the compute body
+  stream_compute(program, ...) ~ FREP + SU setup: executes the program with
+                                 operands bound to its streams
 
-The production kernels (kernels/*.py) are hand-scheduled instances of this
-model; stream_compute is the generic entry point used by examples and tests.
+Every production kernel (kernels/*.py) builds a StreamProgram and executes it
+here — this is the only module that calls ``pl.pallas_call``, so backend
+concerns (compiler params, scalar prefetch plumbing, interpret mode) live in
+exactly one place.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+import math
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; resolve the
+# one this jax ships so kernels never touch the name directly.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def _dtype_bytes(dtype) -> int:
+    # dtype is cost metadata only; streams without it are counted at the
+    # 4-byte float32 default (see StreamProgram.traffic_bytes)
+    return jnp.dtype(dtype or jnp.float32).itemsize
+
 
 @dataclasses.dataclass(frozen=True)
 class AffineStream:
-    """≤4D affine stream: block_shape + an index_map over the grid ids."""
+    """≤4D affine stream: block_shape + an index_map over the grid ids.
+
+    ``dtype`` is cost metadata (the element width the stream carries); it lets
+    a StreamProgram report per-step traffic without running the kernel.
+    """
 
     block_shape: tuple
     index_map: Callable  # (*grid_ids) -> block coords
+    dtype: Any = None
+
+    @property
+    def block_elems(self) -> int:
+        return math.prod(self.block_shape)
+
+    @property
+    def bytes_per_step(self) -> int:
+        """HBM<->VMEM bytes one grid step of this stream moves."""
+        return self.block_elems * _dtype_bytes(self.dtype)
 
     def spec(self, n_prefetch: int = 0) -> pl.BlockSpec:
         if n_prefetch == 0:
             return pl.BlockSpec(self.block_shape, self.index_map)
-        # scalar-prefetch grids pass the prefetch refs after the grid ids
+        # scalar-prefetch grids pass the prefetch refs after the grid ids;
+        # an affine map never reads them, so truncate.
         fn = self.index_map
         return pl.BlockSpec(
             self.block_shape, lambda *a: fn(*a[: len(a) - n_prefetch])
@@ -47,61 +79,123 @@ class AffineStream:
 
 @dataclasses.dataclass(frozen=True)
 class IndirectStream:
-    """Index-driven stream: `index_map` may read the scalar-prefetched index
+    """Index-driven stream: ``index_map`` may read the scalar-prefetched index
     arrays (passed as trailing args), Occamy's 8/16/32-bit index streams."""
 
     block_shape: tuple
     index_map: Callable  # (*grid_ids, *prefetch_refs) -> block coords
+    dtype: Any = None
 
-    def spec(self, n_prefetch: int) -> pl.BlockSpec:
+    @property
+    def block_elems(self) -> int:
+        return math.prod(self.block_shape)
+
+    @property
+    def bytes_per_step(self) -> int:
+        return self.block_elems * _dtype_bytes(self.dtype)
+
+    def spec(self, n_prefetch: int = 0) -> pl.BlockSpec:
         return pl.BlockSpec(self.block_shape, self.index_map)
 
 
-def stream_compute(
-    body: Callable,
-    *,
-    grid: tuple,
-    in_streams: Sequence[AffineStream | IndirectStream],
-    out_stream: AffineStream,
-    out_shape: jax.ShapeDtypeStruct,
-    index_args: Sequence[jax.Array] = (),
-    scratch: Sequence = (),
-    interpret: bool = False,
-):
-    """Run `body` with operands bound to streams (the FREP+SU launch).
+Stream = AffineStream | IndirectStream
 
-    index_args are scalar-prefetched (SMEM-resident) index arrays available
-    to every IndirectStream's index_map and to the body as leading refs.
+
+@dataclasses.dataclass(frozen=True)
+class StreamProgram:
+    """A complete SU configuration: the FREP loop nest (grid), the streams
+    feeding/draining the body, and the body itself.
+
+    ``index_args`` are scalar-prefetched (SMEM-resident) index arrays,
+    available to every IndirectStream's index_map and to the body as leading
+    refs. ``dimension_semantics`` annotates each grid axis as "parallel" or
+    "arbitrary" (sequential) for the TPU pipeliner.
     """
-    n_pre = len(index_args)
-    in_specs = [s.spec(n_pre) for s in in_streams]
-    out_specs = out_stream.spec(n_pre)
+
+    name: str
+    body: Callable
+    grid: tuple
+    in_streams: tuple[Stream, ...]
+    out_streams: tuple[Stream, ...]
+    out_shapes: tuple[jax.ShapeDtypeStruct, ...]
+    index_args: tuple = ()
+    scratch: tuple = ()
+    dimension_semantics: tuple | None = None
+
+    @property
+    def steps(self) -> int:
+        """Grid steps — the SU's total stream-advance count."""
+        return math.prod(self.grid)
+
+    def traffic_bytes(self) -> int:
+        """Upper-bound HBM traffic: every stream refetches per grid step.
+
+        The Pallas pipeliner elides refetches when an index_map repeats a
+        block across consecutive steps, so this is the no-reuse bound — the
+        numerator of the paper's per-kernel operational-intensity figures.
+        Streams built without a dtype are counted at 4 bytes/element; pass
+        dtypes on every stream for exact figures.
+        """
+        per_step = sum(
+            s.bytes_per_step for s in (*self.in_streams, *self.out_streams)
+        )
+        return per_step * self.steps
+
+
+def stream_compute(program: StreamProgram, *operands, interpret: bool = False):
+    """Execute a StreamProgram (the FREP + SU launch).
+
+    ``operands`` bind positionally to ``program.in_streams``; scalar-prefetch
+    index args come from the program itself. This is the single pallas_call
+    site in the codebase.
+    """
+    if len(operands) != len(program.in_streams):
+        raise ValueError(
+            f"{program.name}: got {len(operands)} operands for "
+            f"{len(program.in_streams)} in_streams"
+        )
+    n_pre = len(program.index_args)
+    in_specs = [s.spec(n_pre) for s in program.in_streams]
+    out_specs = [s.spec(n_pre) for s in program.out_streams]
+    single = len(program.out_streams) == 1
+    if single:
+        out_specs, out_shapes = out_specs[0], program.out_shapes[0]
+    else:
+        out_shapes = list(program.out_shapes)
+
+    kwargs: dict = {"out_shape": out_shapes, "interpret": interpret}
+    if program.dimension_semantics is not None and not interpret:
+        kwargs["compiler_params"] = _CompilerParams(
+            dimension_semantics=tuple(program.dimension_semantics)
+        )
+
     if n_pre:
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=n_pre,
-            grid=grid,
+            grid=program.grid,
             in_specs=in_specs,
             out_specs=out_specs,
-            scratch_shapes=list(scratch),
+            scratch_shapes=list(program.scratch),
         )
-        return pl.pallas_call(
-            body, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret
-        )(*index_args)
+        return pl.pallas_call(program.body, grid_spec=grid_spec, **kwargs)(
+            *program.index_args, *operands
+        )
     return pl.pallas_call(
-        body,
-        grid=grid,
+        program.body,
+        grid=program.grid,
         in_specs=in_specs,
         out_specs=out_specs,
-        out_shape=out_shape,
-        scratch_shapes=list(scratch),
-        interpret=interpret,
-    )
+        scratch_shapes=list(program.scratch),
+        **kwargs,
+    )(*operands)
 
 
-def gemm_streams(M: int, N: int, K: int, bm: int, bn: int, bk: int):
+def gemm_streams(
+    M: int, N: int, K: int, bm: int, bn: int, bk: int, dtype=None
+):
     """The paper's Fig. 4a GEMM loop nest as three affine streams."""
-    a = AffineStream((bm, bk), lambda i, j, k: (i, k))
-    b = AffineStream((bk, bn), lambda i, j, k: (k, j))
-    o = AffineStream((bm, bn), lambda i, j, k: (i, j))
+    a = AffineStream((bm, bk), lambda i, j, k: (i, k), dtype=dtype)
+    b = AffineStream((bk, bn), lambda i, j, k: (k, j), dtype=dtype)
+    o = AffineStream((bm, bn), lambda i, j, k: (i, j), dtype=dtype)
     grid = (M // bm, N // bn, K // bk)
     return grid, [a, b], o

@@ -5,7 +5,7 @@ VMEM scratch across the innermost grid dimension. The KV block stream is the
 paper's C4 double-buffered DMA tile stream; causal/window masking is applied
 with iota position comparisons, and fully-masked blocks skip their compute
 (pl.when) — the control-flow analogue of the SUs skipping dead iterations.
-Supports GQA (H = K * G) via the k/v index maps.
+Supports GQA (H = K * G) via the k/v stream index maps.
 """
 from __future__ import annotations
 
@@ -16,6 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.streams import AffineStream, StreamProgram, stream_compute
+from repro.kernels.registry import block_defaults
 
 NEG = -1e30
 
@@ -80,6 +83,45 @@ def _fa_kernel(
         ).astype(o_ref.dtype)
 
 
+def flash_attention_program(
+    B, H, G, Sqp, D, nq, nk, bq, bk, dtype, k_dtype, v_dtype,
+    *, scale, causal, window, q_offset, sk,
+) -> StreamProgram:
+    """FA-2 as a stream program: q/o stream over (b, h, iq); the k/v streams
+    revisit the shared KV head h//G — the GQA index map."""
+    body = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, sk=sk, bq=bq, bk=bk, nk=nk,
+    )
+    kv_stream = lambda dt: AffineStream(
+        (1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0), dtype=dt
+    )
+    return StreamProgram(
+        name="flash_attention",
+        body=body,
+        grid=(B, H, nq, nk),
+        in_streams=(
+            AffineStream(
+                (1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0), dtype=dtype
+            ),
+            kv_stream(k_dtype),
+            kv_stream(v_dtype),
+        ),
+        out_streams=(
+            AffineStream(
+                (1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0), dtype=dtype
+            ),
+        ),
+        out_shapes=(jax.ShapeDtypeStruct((B, H, Sqp, D), dtype),),
+        scratch=(
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ),
+        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+    )
+
+
 def flash_attention_pallas(
     q: jax.Array,  # (B, H, Sq, D)
     k: jax.Array,  # (B, K, Sk, D)
@@ -89,15 +131,17 @@ def flash_attention_pallas(
     window: int = 0,
     q_offset: int = 0,
     scale: float | None = None,
-    bq: int = 128,
-    bk: int = 128,
+    bq: int | None = None,
+    bk: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     B, H, Sq, D = q.shape
     K, Sk = k.shape[1], k.shape[2]
     G = H // K
     scale = scale if scale is not None else 1.0 / np.sqrt(D)
-    bq, bk = min(bq, Sq), min(bk, Sk)
+    blocks = block_defaults("flash_attention")
+    bq = min(bq or blocks["bq"], Sq)
+    bk = min(bk or blocks["bk"], Sk)
     pq, pk_ = (-Sq) % bq, (-Sk) % bk
     if pq:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
@@ -106,27 +150,9 @@ def flash_attention_pallas(
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pk_), (0, 0)))
     nq, nk = (Sq + pq) // bq, (Sk + pk_) // bk
 
-    out = pl.pallas_call(
-        functools.partial(
-            _fa_kernel, scale=scale, causal=causal, window=window,
-            q_offset=q_offset, sk=Sk, bq=bq, bk=bk, nk=nk,
-        ),
-        grid=(B, H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
-            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pq, D), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, D), jnp.float32),
-        ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
-        ),
-        interpret=interpret,
-    )(q, k, v)
+    program = flash_attention_program(
+        B, H, G, Sq + pq, D, nq, nk, bq, bk, q.dtype, k.dtype, v.dtype,
+        scale=scale, causal=causal, window=window, q_offset=q_offset, sk=Sk,
+    )
+    out = stream_compute(program, q, k, v, interpret=interpret)
     return out[:, :, :Sq]

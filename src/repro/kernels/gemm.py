@@ -1,11 +1,11 @@
 """Tiled multi-precision GEMM kernel (paper Fig. 9a / Fig. 10).
 
-The (grid, BlockSpec) pair is the TPU analogue of the paper's 4D affine SU
-streams: three grid loops (M, N, K tiles) + the MXU's internal unroll mirror
-the GEMM mapping described in Sec. II-A. Accumulation is *expanding* (fp8/bf16
-inputs, fp32 accumulator) like the paper's EXP sum-dot-product kernels; the
-Pallas pipeline double-buffers HBM->VMEM tile copies exactly as the cluster
-DMA double-buffers SPM tiles (C4).
+The StreamProgram's three affine streams are the TPU analogue of the paper's
+4D affine SU streams: three grid loops (M, N, K tiles) + the MXU's internal
+unroll mirror the GEMM mapping described in Sec. II-A. Accumulation is
+*expanding* (fp8/bf16 inputs, fp32 accumulator) like the paper's EXP
+sum-dot-product kernels; the Pallas pipeline double-buffers HBM->VMEM tile
+copies exactly as the cluster DMA double-buffers SPM tiles (C4).
 """
 from __future__ import annotations
 
@@ -16,8 +16,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.streams import AffineStream, StreamProgram, stream_compute
+from repro.kernels.registry import block_defaults
 
-def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, out_dtype):
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -31,22 +34,48 @@ def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, out_dtype):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def gemm_program(
+    Mp: int, Np: int, Kp: int, bm: int, bn: int, bk: int,
+    *, a_dtype, b_dtype, out_dtype, accum_dtype,
+) -> StreamProgram:
+    """GEMM as a stream program: the Fig. 4a loop nest, streams + body."""
+    nk = Kp // bk
+    return StreamProgram(
+        name="gemm",
+        body=functools.partial(_gemm_kernel, nk=nk),
+        grid=(Mp // bm, Np // bn, nk),
+        in_streams=(
+            AffineStream((bm, bk), lambda i, j, k: (i, k), dtype=a_dtype),
+            AffineStream((bk, bn), lambda i, j, k: (k, j), dtype=b_dtype),
+        ),
+        out_streams=(
+            AffineStream((bm, bn), lambda i, j, k: (i, j), dtype=out_dtype),
+        ),
+        out_shapes=(jax.ShapeDtypeStruct((Mp, Np), out_dtype),),
+        scratch=(pltpu.VMEM((bm, bn), accum_dtype),),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+    )
+
+
 def gemm_pallas(
     a: jax.Array,  # (M, K)
     b: jax.Array,  # (K, N)
     *,
     out_dtype=None,
     accum_dtype=jnp.float32,
-    bm: int = 256,
-    bk: int = 256,
-    bn: int = 256,
+    bm: int | None = None,
+    bk: int | None = None,
+    bn: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     M, K = a.shape
     K2, N = b.shape
     assert K == K2
     out_dtype = out_dtype or a.dtype
-    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    blocks = block_defaults("gemm")
+    bm = min(bm or blocks["bm"], M)
+    bk = min(bk or blocks["bk"], K)
+    bn = min(bn or blocks["bn"], N)
 
     pm, pk, pn = (-M) % bm, (-K) % bk, (-N) % bn
     if pm or pk:
@@ -54,21 +83,11 @@ def gemm_pallas(
     if pk or pn:
         b = jnp.pad(b, ((0, pk), (0, pn)))
     Mp, Kp, Np = M + pm, K + pk, N + pn
-    nk = Kp // bk
 
-    out = pl.pallas_call(
-        functools.partial(_gemm_kernel, nk=nk, out_dtype=out_dtype),
-        grid=(Mp // bm, Np // bn, nk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), accum_dtype)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        ),
-        interpret=interpret,
-    )(a, b)
+    program = gemm_program(
+        Mp, Np, Kp, bm, bn, bk,
+        a_dtype=a.dtype, b_dtype=b.dtype, out_dtype=out_dtype,
+        accum_dtype=accum_dtype,
+    )
+    out = stream_compute(program, a, b, interpret=interpret)
     return out[:M, :N]

@@ -1,76 +1,62 @@
-"""Jit-ready kernel entry points with implementation dispatch.
+"""Jit-ready kernel entry points, dispatched through the kernel registry.
 
-Each op has up to four implementations:
-  - ``pallas``:    the TPU kernel (pl.pallas_call, explicit BlockSpec tiling)
-  - ``interpret``: the same kernel body interpreted on CPU (tests)
-  - ``xla``:       a blocked jnp implementation of the *same algorithm* —
-                   lowering-representative (same FLOPs / memory behaviour), used
-                   by the multi-pod dry-run where Pallas cannot lower on CPU
-  - ``ref``:       the naive oracle from ref.py
+Public signatures are stable; every op resolves its implementation through
+``repro.kernels.registry`` (explicit ``impl=`` arg > ``set_default_impl()`` >
+``REPRO_KERNEL_IMPL`` env var > auto). The implementations themselves live in:
 
-Selection: ``impl=`` argument > ``REPRO_KERNEL_IMPL`` env var > auto
-(pallas on TPU backends, xla elsewhere).
+  - StreamProgram kernels (``pallas``/``interpret``): sibling kernel modules,
+    executed through ``core.streams.stream_compute``
+  - blocked jnp forms (``xla``): kernels/xla.py
+  - naive oracles (``ref``): kernels/ref.py
+
+Sparse ops additionally accept the pytree formats from ``core.sparse``
+(EllMatrix / BsrMatrix) in place of their unpacked value/index arrays, so
+sparse operands pass whole through ``jax.jit`` boundaries.
 """
 from __future__ import annotations
 
-import functools
-import os
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.sparse import BsrMatrix, EllMatrix
 from repro.kernels import ref as _ref
+from repro.kernels import registry
+from repro.kernels import xla as _xla
+from repro.kernels.registry import (  # re-exported: the public dispatch API
+    kernel_call,
+    resolve_impl,
+    set_default_impl,
+)
 
-_VALID = ("auto", "pallas", "interpret", "xla", "ref")
-_default_impl = None  # process-wide override set by set_default_impl()
-
-# When True, the xla paths replace their inner lax.scan (KV blocks / decay
-# chunks) with python loops. XLA's HloCostAnalysis counts while-loop bodies
-# ONCE regardless of trip count, so roofline-term extraction (launch/dryrun)
-# traces small unrolled variants to get true FLOP/byte/collective counts.
-_UNROLL_INNER = False
-
-
-class unrolled_inner:
-    def __enter__(self):
-        global _UNROLL_INNER
-        self._old, _UNROLL_INNER = _UNROLL_INNER, True
-        return self
-
-    def __exit__(self, *a):
-        global _UNROLL_INNER
-        _UNROLL_INNER = self._old
-
-
-def set_default_impl(impl: str | None) -> None:
-    global _default_impl
-    assert impl is None or impl in _VALID, impl
-    _default_impl = impl
-
-
-def resolve_impl(impl: str | None = None) -> str:
-    impl = impl or _default_impl or os.environ.get("REPRO_KERNEL_IMPL", "auto")
-    assert impl in _VALID, impl
-    if impl == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
-    return impl
+# roofline dry-run context (see registry.unroll_inner): kept under its
+# historical name for callers that patched the old ops-level flag
+unrolled_inner = registry.unroll_inner
 
 
 # ---------------------------------------------------------------------------
-# GEMM
+# Dense GEMM (paper Fig. 9a / Fig. 10)
 # ---------------------------------------------------------------------------
 
 
 def gemm(a, b, *, out_dtype=None, accum_dtype=jnp.float32, impl=None):
-    impl = resolve_impl(impl)
-    if impl in ("pallas", "interpret"):
-        from repro.kernels import gemm as _gemm
+    return kernel_call(
+        "gemm", a, b, out_dtype=out_dtype, accum_dtype=accum_dtype, impl=impl
+    )
 
-        return _gemm.gemm_pallas(
-            a, b, out_dtype=out_dtype, accum_dtype=accum_dtype,
-            interpret=impl == "interpret",
-        )
+
+@registry.register_stream_kernel("gemm")
+def _gemm_stream(a, b, *, out_dtype=None, accum_dtype=jnp.float32,
+                 interpret=False):
+    from repro.kernels import gemm as _gemm
+
+    return _gemm.gemm_pallas(
+        a, b, out_dtype=out_dtype, accum_dtype=accum_dtype, interpret=interpret
+    )
+
+
+@registry.register_kernel("gemm", impl="xla")
+@registry.register_kernel("gemm", impl="ref")
+def _gemm_ref(a, b, *, out_dtype=None, accum_dtype=jnp.float32):
     return _ref.gemm_ref(a, b, out_dtype=out_dtype, accum_dtype=accum_dtype)
 
 
@@ -84,145 +70,51 @@ def flash_attention(
     block_k=512,
 ):
     """q: (B,H,Sq,D); k,v: (B,K,Sk,D). Returns (B,H,Sq,D)."""
-    impl = resolve_impl(impl)
-    if impl in ("pallas", "interpret"):
-        from repro.kernels import flash_attention as _fa
-
-        return _fa.flash_attention_pallas(
-            q, k, v, causal=causal, window=window, q_offset=q_offset,
-            scale=scale, interpret=impl == "interpret",
-        )
-    if impl == "ref":
-        return _ref.mha_ref(
-            q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale
-        )
-    return _flash_attention_xla(
-        q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale,
-        block_k=block_k,
+    return kernel_call(
+        "flash_attention", q, k, v, causal=causal, window=window,
+        q_offset=q_offset, scale=scale, block_k=block_k, impl=impl,
     )
 
 
-def _flash_attention_xla(q, k, v, *, causal, window, q_offset, scale, block_k):
-    """Online-softmax over KV blocks (FlashAttention-2 dataflow in jnp).
+@registry.register_stream_kernel("flash_attention")
+def _fa_stream(q, k, v, *, causal, window, q_offset, scale, block_k=None,
+               interpret=False):
+    from repro.kernels import flash_attention as _fa
 
-    Memory is O(Sq * block_k) per head instead of O(Sq * Sk): this is the
-    C4 double-buffered-tile structure the paper uses, expressed as a scan.
-    """
-    B, H, Sq, D = q.shape
-    K, Sk = k.shape[1], k.shape[2]
-    G = H // K
-    scale = scale if scale is not None else 1.0 / np.sqrt(D)
-    if _UNROLL_INNER:
-        # q-blocked form with STATIC skipping of fully-masked (q, kv) block
-        # pairs — cost-representative of the Pallas kernel's pl.when skips
-        # (causal halves attention FLOPs; sliding windows keep only a band)
-        return _flash_attention_xla_unrolled(
-            q, k, v, causal=causal, window=window, q_offset=q_offset,
-            scale=scale,
-        )
-    block_k = min(block_k, Sk)
-    pad = (-Sk) % block_k
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    nb = (Sk + pad) // block_k
-
-    qf = (q.astype(jnp.float32) * scale).reshape(B, K, G, Sq, D)
-    kb = jnp.moveaxis(k.reshape(B, K, nb, block_k, D), 2, 0)
-    vb = jnp.moveaxis(v.reshape(B, K, nb, block_k, D), 2, 0)
-    q_pos = jnp.arange(Sq) + q_offset  # absolute positions
-
-    NEG = jnp.float32(-1e30)
-
-    def body(carry, xs):
-        m, l, acc = carry
-        kblk, vblk, bidx = xs
-        s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kblk.astype(jnp.float32))
-        k_pos = bidx * block_k + jnp.arange(block_k)
-        mask = k_pos[None, :] < Sk
-        if causal:
-            mask &= k_pos[None, :] <= q_pos[:, None]
-        if window:
-            mask &= k_pos[None, :] > q_pos[:, None] - window
-        s = jnp.where(mask, s, NEG)
-        m_new = jnp.maximum(m, s.max(axis=-1))
-        # fully-masked rows: exp(NEG - NEG) == 1, so zero by mask explicitly
-        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
-        corr = jnp.exp(m - m_new)
-        l = l * corr + p.sum(axis=-1)
-        acc = acc * corr[..., None] + jnp.einsum(
-            "bkgqs,bksd->bkgqd", p, vblk.astype(jnp.float32)
-        )
-        return (m_new, l, acc), None
-
-    m0 = jnp.full((B, K, G, Sq), NEG)
-    l0 = jnp.zeros((B, K, G, Sq))
-    acc0 = jnp.zeros((B, K, G, Sq, D))
-    (m, l, acc), _ = jax.lax.scan(
-        body, (m0, l0, acc0), (kb, vb, jnp.arange(nb))
+    return _fa.flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        scale=scale, interpret=interpret,
     )
-    o = acc / jnp.maximum(l, 1e-30)[..., None]
-    return o.reshape(B, H, Sq, D).astype(q.dtype)
 
 
-def _flash_attention_xla_unrolled(q, k, v, *, causal, window, q_offset, scale):
-    B, H, Sq, D = q.shape
-    K, Sk = k.shape[1], k.shape[2]
-    G = H // K
-    NEG = jnp.float32(-1e30)
-    grid = int(os.environ.get("REPRO_UNROLL_GRID", "8"))
-    bq = min(Sq, max(-(-Sq // grid), 128))
-    bk = min(Sk, max(-(-Sk // grid), 128))
-    pq, pk = (-Sq) % bq, (-Sk) % bk
-    if pq:
-        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
-    if pk:
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
-    nq, nk = (Sq + pq) // bq, (Sk + pk) // bk
-    qf = (q.astype(jnp.float32) * scale).reshape(B, K, G, nq, bq, D)
+@registry.register_kernel("flash_attention", impl="xla")
+def _fa_xla(q, k, v, *, causal, window, q_offset, scale, block_k):
+    return _xla.flash_attention_xla(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        scale=scale, block_k=block_k,
+    )
 
-    outs = []
-    for i in range(nq):
-        qi = qf[:, :, :, i]  # (B,K,G,bq,D)
-        q_lo, q_hi = q_offset + i * bq, q_offset + (i + 1) * bq - 1
-        m = jnp.full((B, K, G, bq), NEG)
-        l = jnp.zeros((B, K, G, bq))
-        acc = jnp.zeros((B, K, G, bq, D))
-        for j in range(nk):
-            k_lo, k_hi = j * bk, (j + 1) * bk - 1
-            if causal and k_lo > q_hi:
-                continue  # static skip: above the diagonal
-            if window and k_hi <= q_lo - window:
-                continue  # static skip: older than every row's window
-            kj = k[:, :, j * bk : (j + 1) * bk].astype(jnp.float32)
-            vj = v[:, :, j * bk : (j + 1) * bk].astype(jnp.float32)
-            s = jnp.einsum("bkgqd,bksd->bkgqs", qi, kj)
-            q_pos = q_lo + jnp.arange(bq)[:, None]
-            k_pos = k_lo + jnp.arange(bk)[None, :]
-            mask = k_pos < Sk
-            if causal:
-                mask &= k_pos <= q_pos
-            if window:
-                mask &= k_pos > q_pos - window
-            s = jnp.where(mask, s, NEG)
-            m_new = jnp.maximum(m, s.max(axis=-1))
-            p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
-            corr = jnp.exp(m - m_new)
-            l = l * corr + p.sum(axis=-1)
-            acc = acc * corr[..., None] + jnp.einsum("bkgqs,bksd->bkgqd", p, vj)
-            m = m_new
-        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
-    o = jnp.concatenate(outs, axis=3).reshape(B, H, Sq + pq, D)[:, :, :Sq]
-    return o.astype(q.dtype)
+
+@registry.register_kernel("flash_attention", impl="ref")
+def _fa_ref(q, k, v, *, causal, window, q_offset, scale, block_k=None):
+    return _ref.mha_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale
+    )
 
 
 def decode_attention(q, k, v, position, *, window=0, scale=None, impl=None):
     """Single-token attention against a cache. Linear in cache length."""
-    impl = resolve_impl(impl)
-    # Decode is memory-bound and already linear; the xla form IS the ref form.
-    return _ref.decode_attention_ref(
-        q, k, v, position, window=window, scale=scale
+    return kernel_call(
+        "decode_attention", q, k, v, position, window=window, scale=scale,
+        impl=impl,
+    )
+
+
+# decode is memory-bound and already linear; the ref form IS the kernel form
+# under every implementation.
+for _impl in ("pallas", "interpret", "xla", "ref"):
+    registry.register_kernel("decode_attention", impl=_impl)(
+        _ref.decode_attention_ref
     )
 
 
@@ -230,92 +122,52 @@ def decode_attention(q, k, v, position, *, window=0, scale=None, impl=None):
 # Chunked linear attention with data-dependent decay (RWKV6 / SSD)
 # ---------------------------------------------------------------------------
 
-W_LOG_FLOOR = -2.5  # per-token decay floor: exp over a 32-chunk stays in fp32
-LIN_CHUNK = 32
+# per-token decay floor; the chunked kernels exponentiate at most
+# chunk * |W_LOG_FLOOR| in one fp32 exp, so chunk is bounded by _MAX_CHUNK_EXP
+# (log(f32max) ~= 88.7, kept with margin). The chunk default lives in
+# registry.block_defaults("linear_attention").
+W_LOG_FLOOR = -2.5
+_MAX_CHUNK_EXP = 85.0
 
 
-def linear_attention(r, k, v, w_log, u=None, s0=None, *, impl=None, chunk=LIN_CHUNK):
+def linear_attention(r, k, v, w_log, u=None, s0=None, *, impl=None, chunk=None):
     """Chunked scan: S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T.
 
     u given  => RWKV6 read-out (o_t from S_{t-1} plus u-bonus for token t)
     u None   => SSD/Mamba read-out (o_t from S_t)
     Returns (o (B,H,T,M), S_final (B,H,N,M)).
     """
-    impl = resolve_impl(impl)
+    chunk = chunk or registry.block_defaults("linear_attention")["chunk"]
+    # ref runs the exact per-token scan and never exponentiates a chunk span
+    if resolve_impl(impl) != "ref" and chunk * -W_LOG_FLOOR > _MAX_CHUNK_EXP:
+        raise ValueError(
+            f"chunk={chunk} overflows fp32: chunk * |W_LOG_FLOOR| = "
+            f"{chunk * -W_LOG_FLOOR} must stay <= {_MAX_CHUNK_EXP} "
+            f"(max chunk {int(_MAX_CHUNK_EXP / -W_LOG_FLOOR)})"
+        )
     w_log = jnp.maximum(w_log, W_LOG_FLOOR)
-    if impl == "ref":
-        return _ref.linear_attention_scan_ref(r, k, v, w_log, u, s0)
-    if impl in ("pallas", "interpret"):
-        from repro.kernels import rwkv6 as _rwkv
-
-        return _rwkv.linear_attention_pallas(
-            r, k, v, w_log, u, s0, chunk=chunk, interpret=impl == "interpret"
-        )
-    return _linear_attention_xla(r, k, v, w_log, u, s0, chunk)
-
-
-def _linear_attention_xla(r, k, v, w_log, u, s0, chunk):
-    B, H, T, N = r.shape
-    M = v.shape[-1]
-    pad = (-T) % chunk
-    if pad:
-        zr = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        r, k, v, w_log = zr(r), zr(k), zr(v), zr(w_log)
-    Tp = T + pad
-    nc = Tp // chunk
-    ssd = u is None
-
-    # (nc, B, H, C, ...) for scan over chunks
-    cs = lambda x: jnp.moveaxis(
-        x.astype(jnp.float32).reshape(B, H, nc, chunk, -1), 2, 0
+    return kernel_call(
+        "linear_attention", r, k, v, w_log, u, s0, chunk=chunk, impl=impl
     )
-    rc, kc, vc, wc = cs(r), cs(k), cs(v), cs(w_log)
 
-    def body(S, xs):
-        rch, kch, vch, wch = xs  # (B,H,C,N|M)
-        inc = jnp.cumsum(wch, axis=2)  # inclusive log-decay (B,H,C,N)
-        exc = inc - wch  # exclusive
-        e = inc if ssd else exc
-        total = inc[:, :, -1:, :]  # (B,H,1,N)
-        # inter-chunk: o_t += (r_t * exp(e_t)) @ S_in
-        r_dec = rch * jnp.exp(e)
-        o = jnp.einsum("bhcn,bhnm->bhcm", r_dec, S)
-        # intra-chunk: coeff[t,s] = exp(e_t)*exp(-inc_s) for s<t (ssd: s<=t;
-        # coeff<=1 overall; factors bounded: chunk*|W_LOG_FLOOR| < log(f32max))
-        k_dec = kch * jnp.exp(-inc)
-        scores = jnp.einsum("bhtn,bhsn->bhts", r_dec, k_dec)
-        t_idx = jnp.arange(chunk)
-        mask = (
-            t_idx[:, None] >= t_idx[None, :]
-            if ssd
-            else t_idx[:, None] > t_idx[None, :]
-        )
-        scores = jnp.where(mask, scores, 0.0)
-        o = o + jnp.einsum("bhts,bhsm->bhtm", scores, vch)
-        if not ssd:  # rwkv diagonal bonus
-            o = o + jnp.einsum("bhcn,bhcn,bhcm->bhcm", rch, u[None, :, None] * kch, vch)
-        # state update: S_out = exp(total) * S_in + sum_s exp(total-inc_s) k_s v_s
-        k_tail = kch * jnp.exp(total - inc)
-        S = jnp.exp(total)[..., 0, :, None] * S + jnp.einsum(
-            "bhsn,bhsm->bhnm", k_tail, vch
-        )
-        return S, o
 
-    S0 = (
-        s0.astype(jnp.float32)
-        if s0 is not None
-        else jnp.zeros((B, H, N, M), jnp.float32)
+@registry.register_stream_kernel("linear_attention")
+def _la_stream(r, k, v, w_log, u, s0, *, chunk, interpret=False):
+    from repro.kernels import rwkv6 as _rwkv
+
+    return _rwkv.linear_attention_pallas(
+        r, k, v, w_log, u, s0, chunk=chunk, interpret=interpret
     )
-    if _UNROLL_INNER:
-        S, os_ = S0, []
-        for i in range(nc):
-            S, oi = body(S, (rc[i], kc[i], vc[i], wc[i]))
-            os_.append(oi)
-        o = jnp.stack(os_, 0)
-    else:
-        S, o = jax.lax.scan(body, S0, (rc, kc, vc, wc))
-    o = jnp.moveaxis(o, 0, 2).reshape(B, H, Tp, M)[:, :, :T]
-    return o.astype(v.dtype), S
+
+
+@registry.register_kernel("linear_attention", impl="xla")
+def _la_xla(r, k, v, w_log, u, s0, *, chunk):
+    return _xla.linear_attention_xla(r, k, v, w_log, u, s0, chunk=chunk)
+
+
+@registry.register_kernel("linear_attention", impl="ref")
+def _la_ref(r, k, v, w_log, u, s0, *, chunk=None):
+    return _ref.linear_attention_scan_ref(r, k, v, w_log, u, s0)
 
 
 def linear_attention_step(r, k, v, w_log, u, S):
@@ -338,40 +190,73 @@ def linear_attention_step(r, k, v, w_log, u, S):
 # ---------------------------------------------------------------------------
 
 
-def spmm(values, cols, dense, *, impl=None):
-    impl = resolve_impl(impl)
-    if impl in ("pallas", "interpret"):
-        from repro.kernels import spmm as _spmm
+def spmm(values, cols=None, dense=None, *, impl=None):
+    """ELL sparse-dense matmul. Either ``spmm(A, dense)`` with A an
+    EllMatrix, or the unpacked ``spmm(values, cols, dense)``."""
+    if isinstance(values, EllMatrix):
+        if cols is not None and dense is not None:
+            raise TypeError(
+                "spmm(A, dense): extra operand alongside the EllMatrix form"
+            )
+        if dense is None:  # positional form: spmm(A, dense)
+            dense = cols
+        values, cols = values.values, values.cols
+    if cols is None or dense is None:
+        raise TypeError("spmm: cols and dense operands are required")
+    return kernel_call("spmm", values, cols, dense, impl=impl)
 
-        return _spmm.spmm_pallas(
-            values, cols, dense, interpret=impl == "interpret"
+
+@registry.register_stream_kernel("spmm")
+def _spmm_stream(values, cols, dense, *, interpret=False):
+    from repro.kernels import spmm as _spmm
+
+    return _spmm.spmm_pallas(values, cols, dense, interpret=interpret)
+
+
+registry.register_kernel("spmm", impl="xla")(_ref.spmm_ref)
+registry.register_kernel("spmm", impl="ref")(_ref.spmm_ref)
+
+
+def bsr_spmm(tile_values, tile_rows=None, tile_cols=None, dense=None,
+             num_rows=None, *, impl=None):
+    """Block-sparse rows x dense (the MXU-native sparse-dense form).
+
+    Either ``bsr_spmm(A, dense)`` with A a BsrMatrix, or the unpacked
+    ``bsr_spmm(tile_values, tile_rows, tile_cols, dense, num_rows)``.
+    """
+    if isinstance(tile_values, BsrMatrix):
+        A = tile_values
+        if (tile_cols is not None or num_rows is not None
+                or (tile_rows is not None and dense is not None)):
+            raise TypeError(
+                "bsr_spmm(A, dense): extra operands alongside the BsrMatrix form"
+            )
+        if dense is None:  # positional form: bsr_spmm(A, dense)
+            dense = tile_rows
+        tile_values, tile_rows, tile_cols = A.tile_values, A.tile_rows, A.tile_cols
+        num_rows = A.shape[0]
+    if tile_rows is None or tile_cols is None or dense is None or num_rows is None:
+        raise TypeError(
+            "bsr_spmm: tile coordinates, dense operand and num_rows are required"
         )
-    return _ref.spmm_ref(values, cols, dense)
-
-
-def bsr_spmm(tile_values, tile_rows, tile_cols, dense, num_rows, *, impl=None):
-    """Block-sparse rows x dense (the MXU-native sparse-dense form)."""
-    impl = resolve_impl(impl)
-    if impl in ("pallas", "interpret"):
-        from repro.kernels import spmm as _spmm
-
-        return _spmm.bsr_spmm_pallas(
-            tile_values, tile_rows, tile_cols, dense, num_rows,
-            interpret=impl == "interpret",
-        )
-    # xla / ref: scatter-accumulate the per-tile matmuls
-    T, bm, bk = tile_values.shape
-    gathered = jax.vmap(
-        lambda c: jax.lax.dynamic_slice_in_dim(dense, c * bk, bk, axis=0)
-    )(tile_cols)
-    prods = jnp.einsum(
-        "tmk,tkf->tmf",
-        tile_values.astype(jnp.float32),
-        gathered.astype(jnp.float32),
+    return kernel_call(
+        "bsr_spmm", tile_values, tile_rows, tile_cols, dense, num_rows,
+        impl=impl,
     )
-    out = jnp.zeros((num_rows // bm, bm, dense.shape[1]), jnp.float32)
-    out = out.at[tile_rows].add(prods)
-    return out.reshape(num_rows, dense.shape[1])
+
+
+@registry.register_stream_kernel("bsr_spmm")
+def _bsr_stream(tile_values, tile_rows, tile_cols, dense, num_rows,
+                *, interpret=False):
+    from repro.kernels import spmm as _spmm
+
+    return _spmm.bsr_spmm_pallas(
+        tile_values, tile_rows, tile_cols, dense, num_rows, interpret=interpret
+    )
+
+
+registry.register_kernel("bsr_spmm", impl="xla")(_xla.bsr_spmm_xla)
+registry.register_kernel("bsr_spmm", impl="ref")(_xla.bsr_spmm_xla)
 
 
 # ---------------------------------------------------------------------------
@@ -379,26 +264,47 @@ def bsr_spmm(tile_values, tile_rows, tile_cols, dense, num_rows, *, impl=None):
 # ---------------------------------------------------------------------------
 
 
-def spmspm(a_values, a_cols, b_values, b_rows, contraction_dim, *, impl=None):
-    impl = resolve_impl(impl)
-    if impl in ("pallas", "interpret"):
-        from repro.kernels import spmspm as _spmspm
-
-        return _spmspm.spmspm_pallas(
-            a_values, a_cols, b_values, b_rows, contraction_dim,
-            interpret=impl == "interpret",
+def spmspm(a_values, a_cols, b_values=None, b_rows=None, contraction_dim=None,
+           *, impl=None):
+    """Sparse x sparse by index intersection. Either ``spmspm(A, B, k)`` with
+    ELL operands (B holding the right matrix's columns), or unpacked arrays.
+    """
+    if isinstance(a_values, EllMatrix):
+        A, B = a_values, a_cols
+        if not isinstance(B, EllMatrix):
+            raise TypeError("spmspm(A, B, k): B must also be an EllMatrix")
+        if b_rows is not None or (b_values is not None
+                                  and contraction_dim is not None):
+            raise TypeError(
+                "spmspm(A, B, k): extra operands alongside the EllMatrix form"
+            )
+        if b_values is not None:  # positional form: spmspm(A, B, k)
+            contraction_dim = b_values
+        a_values, a_cols = A.values, A.cols
+        b_values, b_rows = B.values, B.cols
+    if b_values is None or b_rows is None or contraction_dim is None:
+        raise TypeError(
+            "spmspm: b_values, b_rows and contraction_dim are required"
         )
-    if impl == "ref":
-        return _ref.spmspm_ref(a_values, a_cols, b_values, b_rows, contraction_dim)
-    # xla: one-side-densified intersection (blocked gather; representative of
-    # the kernel's VMEM bitmap intersect)
-    R = a_values.shape[0]
-    a_dense = jnp.zeros((R, contraction_dim), jnp.float32)
-    a_dense = a_dense.at[jnp.arange(R)[:, None], a_cols].add(
-        a_values.astype(jnp.float32)
+    return kernel_call(
+        "spmspm", a_values, a_cols, b_values, b_rows, contraction_dim,
+        impl=impl,
     )
-    gathered = jnp.moveaxis(a_dense[:, b_rows], 0, 0)  # (R, C, Lb)
-    return jnp.einsum("cj,rcj->rc", b_values.astype(jnp.float32), gathered)
+
+
+@registry.register_stream_kernel("spmspm")
+def _spmspm_stream(a_values, a_cols, b_values, b_rows, contraction_dim,
+                   *, interpret=False):
+    from repro.kernels import spmspm as _spmspm
+
+    return _spmspm.spmspm_pallas(
+        a_values, a_cols, b_values, b_rows, contraction_dim,
+        interpret=interpret,
+    )
+
+
+registry.register_kernel("spmspm", impl="xla")(_xla.spmspm_xla)
+registry.register_kernel("spmspm", impl="ref")(_ref.spmspm_ref)
 
 
 # ---------------------------------------------------------------------------
@@ -407,11 +313,15 @@ def spmspm(a_values, a_cols, b_values, b_rows, contraction_dim, *, impl=None):
 
 
 def stencil(grid, offsets: np.ndarray, weights, *, impl=None):
-    impl = resolve_impl(impl)
-    if impl in ("pallas", "interpret"):
-        from repro.kernels import stencil as _stencil
+    return kernel_call("stencil", grid, offsets, weights, impl=impl)
 
-        return _stencil.stencil_pallas(
-            grid, offsets, weights, interpret=impl == "interpret"
-        )
-    return _ref.stencil_ref(grid, offsets, weights)
+
+@registry.register_stream_kernel("stencil")
+def _stencil_stream(grid, offsets, weights, *, interpret=False):
+    from repro.kernels import stencil as _stencil
+
+    return _stencil.stencil_pallas(grid, offsets, weights, interpret=interpret)
+
+
+registry.register_kernel("stencil", impl="xla")(_ref.stencil_ref)
+registry.register_kernel("stencil", impl="ref")(_ref.stencil_ref)

@@ -14,9 +14,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.streams import AffineStream, StreamProgram, stream_compute
 
 
 def _la_kernel(
@@ -103,31 +104,37 @@ def linear_attention_pallas(
         else s0.reshape(BH, N, M).astype(jnp.float32)
     )
 
-    o, s_out = pl.pallas_call(
-        functools.partial(_la_kernel, ssd=ssd, nc=nc, chunk=chunk),
+    chunk_stream = lambda w, dt: AffineStream(
+        (1, chunk, w), lambda b, c: (b, c, 0), dtype=dt
+    )
+    resident = lambda shape, dt: AffineStream(
+        shape, lambda b, c: (b, 0, 0), dtype=dt
+    )
+    program = StreamProgram(
+        name="linear_attention",
+        body=functools.partial(_la_kernel, ssd=ssd, nc=nc, chunk=chunk),
         grid=(BH, nc),
-        in_specs=[
-            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
-            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
-            pl.BlockSpec((1, chunk, M), lambda b, c: (b, c, 0)),
-            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
-            pl.BlockSpec((1, 1, N), lambda b, c: (b, 0, 0)),
-            pl.BlockSpec((1, N, M), lambda b, c: (b, 0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, chunk, M), lambda b, c: (b, c, 0)),
-            pl.BlockSpec((1, N, M), lambda b, c: (b, 0, 0)),
-        ],
-        out_shape=[
+        in_streams=(
+            chunk_stream(N, rf.dtype),
+            chunk_stream(N, kf.dtype),
+            chunk_stream(M, vf.dtype),
+            chunk_stream(N, wf.dtype),
+            resident((1, 1, N), jnp.float32),
+            resident((1, N, M), jnp.float32),
+        ),
+        out_streams=(
+            chunk_stream(M, v.dtype),
+            resident((1, N, M), jnp.float32),
+        ),
+        out_shapes=(
             jax.ShapeDtypeStruct((BH, Tp, M), v.dtype),
             jax.ShapeDtypeStruct((BH, N, M), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.VMEM((N, M), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary")
         ),
-        interpret=interpret,
-    )(rf, kf, vf, wf, uf, s0f)
+        scratch=(pltpu.VMEM((N, M), jnp.float32),),
+        dimension_semantics=("arbitrary", "arbitrary"),
+    )
+    o, s_out = stream_compute(program, rf, kf, vf, wf, uf, s0f,
+                              interpret=interpret)
     return (
         o.reshape(B, H, Tp, M)[:, :, :T],
         s_out.reshape(B, H, N, M),

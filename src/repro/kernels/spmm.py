@@ -2,19 +2,16 @@
 
 Two forms:
 
-1. ``spmm_pallas`` — ELL value/index rows. The column-index stream is scalar-
-   prefetched into SMEM and drives the dense operand's BlockSpec index_map —
-   the literal TPU translation of the paper's indirect SU stream (indices
-   generate addresses in "hardware", the compute loop issues only FMAs).
-   Grid: (row blocks, nnz position); each step gathers one dense *row block*
-   per ELL slot via the index stream and accumulates a rank-1 update... on the
-   MXU this degenerates, so the production path is:
+1. ``spmm_pallas`` — ELL value/index rows. The column-index stream is kept in
+   VMEM and drives an in-kernel gather — the VPU form of the paper's indirect
+   SU stream, used for narrow dense operands.
 
 2. ``bsr_spmm_pallas`` — block-sparse rows. Unstructured sparsity exploited at
-   (bm x bk) tile granularity: scalar-prefetched tile coordinates select which
-   dense K-blocks to stream (index stream -> address generation), and each
-   step is a dense MXU matmul. Empty tiles are never visited: compute scales
-   with nnz blocks, exactly the paper's "compute only on nonzeros" economy.
+   (bm x bk) tile granularity: scalar-prefetched tile coordinates become the
+   IndirectStream index maps selecting which dense K-blocks to stream (index
+   stream -> address generation), and each step is a dense MXU matmul. Empty
+   tiles are never visited: compute scales with nnz blocks, exactly the
+   paper's "compute only on nonzeros" economy.
 """
 from __future__ import annotations
 
@@ -23,7 +20,14 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.streams import (
+    AffineStream,
+    IndirectStream,
+    StreamProgram,
+    stream_compute,
+)
+from repro.kernels.registry import block_defaults
 
 
 # ---------------------------------------------------------------------------
@@ -41,33 +45,42 @@ def _ell_kernel(values_ref, cols_ref, dense_ref, o_ref, *, L):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
-def spmm_pallas(values, cols, dense, *, bm: int = 128, interpret: bool = False):
+def ell_spmm_program(Rp, L, C, F, bm, val_dtype, dense_dtype) -> StreamProgram:
+    """ELL SpMM as a stream program: value/index row streams advance with the
+    row-block grid; the dense operand is a resident (non-advancing) stream."""
+    return StreamProgram(
+        name="spmm",
+        body=functools.partial(_ell_kernel, L=L),
+        grid=(Rp // bm,),
+        in_streams=(
+            AffineStream((bm, L), lambda i: (i, 0), dtype=val_dtype),
+            AffineStream((bm, L), lambda i: (i, 0), dtype=jnp.int32),
+            AffineStream((C, F), lambda i: (0, 0), dtype=dense_dtype),
+        ),
+        out_streams=(
+            AffineStream((bm, F), lambda i: (i, 0), dtype=dense_dtype),
+        ),
+        out_shapes=(jax.ShapeDtypeStruct((Rp, F), dense_dtype),),
+    )
+
+
+def spmm_pallas(values, cols, dense, *, bm: int | None = None,
+                interpret: bool = False):
     """values/cols: (R, L); dense: (C, F) — dense must fit VMEM per block."""
     R, L = values.shape
     C, F = dense.shape
-    bm = min(bm, R)
+    bm = min(bm or block_defaults("spmm")["bm"], R)
     pad = (-R) % bm
     if pad:
         values = jnp.pad(values, ((0, pad), (0, 0)))
         cols = jnp.pad(cols, ((0, pad), (0, 0)))
-    Rp = R + pad
-    out = pl.pallas_call(
-        functools.partial(_ell_kernel, L=L),
-        grid=(Rp // bm,),
-        in_specs=[
-            pl.BlockSpec((bm, L), lambda i: (i, 0)),
-            pl.BlockSpec((bm, L), lambda i: (i, 0)),
-            pl.BlockSpec((C, F), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, F), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((Rp, F), dense.dtype),
-        interpret=interpret,
-    )(values, cols, dense)
+    program = ell_spmm_program(R + pad, L, C, F, bm, values.dtype, dense.dtype)
+    out = stream_compute(program, values, cols, dense, interpret=interpret)
     return out[:R]
 
 
 # ---------------------------------------------------------------------------
-# BSR spmm: scalar-prefetched tile coordinates drive the dense index_map
+# BSR spmm: scalar-prefetched tile coordinates drive the dense index stream
 # ---------------------------------------------------------------------------
 
 
@@ -86,6 +99,36 @@ def _bsr_kernel(rows_ref, cols_ref, vals_ref, dense_ref, o_ref, *, nt):
     ).astype(o_ref.dtype)
 
 
+def bsr_spmm_program(
+    tile_rows, tile_cols, T, bm, bk, bf, Fp, num_rows, val_dtype, dense_dtype
+) -> StreamProgram:
+    """BSR SpMM as a stream program: the (row, col) coordinate arrays are
+    scalar-prefetched index streams; the dense and output streams are
+    IndirectStreams whose index maps read them — address generation happens
+    in "hardware" (the grid pipeline), the body issues only MXU matmuls."""
+    return StreamProgram(
+        name="bsr_spmm",
+        body=functools.partial(_bsr_kernel, nt=T),
+        grid=(Fp // bf, T),
+        in_streams=(
+            AffineStream((1, bm, bk), lambda f, t: (t, 0, 0), dtype=val_dtype),
+            IndirectStream(
+                (bk, bf), lambda f, t, rows, cols: (cols[t], f),
+                dtype=dense_dtype,
+            ),
+        ),
+        out_streams=(
+            IndirectStream(
+                (bm, bf), lambda f, t, rows, cols: (rows[t], f),
+                dtype=jnp.float32,
+            ),
+        ),
+        out_shapes=(jax.ShapeDtypeStruct((num_rows, Fp), jnp.float32),),
+        index_args=(tile_rows, tile_cols),
+        dimension_semantics=("parallel", "arbitrary"),
+    )
+
+
 def bsr_spmm_pallas(
     tile_values,  # (T, bm, bk) nonzero tiles, sorted by (row, col)
     tile_rows,  # (T,) int32 block-row ids (every row id present)
@@ -93,35 +136,20 @@ def bsr_spmm_pallas(
     dense,  # (K, F)
     num_rows: int,
     *,
-    bf: int = 512,
+    bf: int | None = None,
     interpret: bool = False,
 ):
     T, bm, bk = tile_values.shape
     K, F = dense.shape
-    bf = min(bf, F)
+    bf = min(bf or block_defaults("bsr_spmm")["bf"], F)
     pad = (-F) % bf
     if pad:
         dense = jnp.pad(dense, ((0, 0), (0, pad)))
     Fp = F + pad
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(Fp // bf, T),
-        in_specs=[
-            pl.BlockSpec((1, bm, bk), lambda f, t, rows, cols: (t, 0, 0)),
-            pl.BlockSpec((bk, bf), lambda f, t, rows, cols: (cols[t], f)),
-        ],
-        out_specs=pl.BlockSpec(
-            (bm, bf), lambda f, t, rows, cols: (rows[t], f)
-        ),
+    program = bsr_spmm_program(
+        tile_rows, tile_cols, T, bm, bk, bf, Fp, num_rows,
+        tile_values.dtype, dense.dtype,
     )
-    out = pl.pallas_call(
-        functools.partial(_bsr_kernel, nt=T),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((num_rows, Fp), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
-        ),
-        interpret=interpret,
-    )(tile_rows, tile_cols, tile_values, dense)
+    out = stream_compute(program, tile_values, dense, interpret=interpret)
     return out[:, :F]

@@ -9,12 +9,11 @@ bm*bn*La*Lb — the paper's GCOMP figure of merit.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.streams import AffineStream, StreamProgram, stream_compute
+from repro.kernels.registry import block_defaults
 
 
 def _spmspm_kernel(av_ref, ac_ref, bv_ref, br_ref, o_ref):
@@ -30,6 +29,30 @@ def _spmspm_kernel(av_ref, ac_ref, bv_ref, br_ref, o_ref):
     o_ref[...] = contrib.sum(axis=(1, 3)).astype(o_ref.dtype)
 
 
+def spmspm_program(Rp, Cp, La, Lb, bm, bn, a_dtype, b_dtype,
+                   idx_dtype=jnp.int32) -> StreamProgram:
+    """Blocked intersection as a stream program: the A value/index streams
+    advance with the row grid, the B streams with the column grid."""
+    a_row = lambda i, j: (i, 0)
+    b_col = lambda i, j: (j, 0)
+    return StreamProgram(
+        name="spmspm",
+        body=_spmspm_kernel,
+        grid=(Rp // bm, Cp // bn),
+        in_streams=(
+            AffineStream((bm, La), a_row, dtype=a_dtype),
+            AffineStream((bm, La), a_row, dtype=idx_dtype),
+            AffineStream((bn, Lb), b_col, dtype=b_dtype),
+            AffineStream((bn, Lb), b_col, dtype=idx_dtype),
+        ),
+        out_streams=(
+            AffineStream((bm, bn), lambda i, j: (i, j), dtype=jnp.float32),
+        ),
+        out_shapes=(jax.ShapeDtypeStruct((Rp, Cp), jnp.float32),),
+        dimension_semantics=("parallel", "parallel"),
+    )
+
+
 def spmspm_pallas(
     a_values,  # (R, La) ELL rows
     a_cols,
@@ -37,13 +60,15 @@ def spmspm_pallas(
     b_rows,
     contraction_dim: int,
     *,
-    bm: int = 8,
-    bn: int = 128,
+    bm: int | None = None,
+    bn: int | None = None,
     interpret: bool = False,
 ):
     R, La = a_values.shape
     C, Lb = b_values.shape
-    bm, bn = min(bm, R), min(bn, C)
+    blocks = block_defaults("spmspm")
+    bm = min(bm or blocks["bm"], R)
+    bn = min(bn or blocks["bn"], C)
     pr, pc = (-R) % bm, (-C) % bn
     if pr:
         a_values = jnp.pad(a_values, ((0, pr), (0, 0)))
@@ -52,20 +77,11 @@ def spmspm_pallas(
         b_values = jnp.pad(b_values, ((0, pc), (0, 0)))
         b_rows = jnp.pad(b_rows, ((0, pc), (0, 0)))
 
-    out = pl.pallas_call(
-        _spmspm_kernel,
-        grid=((R + pr) // bm, (C + pc) // bn),
-        in_specs=[
-            pl.BlockSpec((bm, La), lambda i, j: (i, 0)),
-            pl.BlockSpec((bm, La), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, Lb), lambda i, j: (j, 0)),
-            pl.BlockSpec((bn, Lb), lambda i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((R + pr, C + pc), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel")
-        ),
-        interpret=interpret,
-    )(a_values, a_cols, b_values, b_rows)
+    program = spmspm_program(
+        R + pr, C + pc, La, Lb, bm, bn,
+        a_values.dtype, b_values.dtype, a_cols.dtype,
+    )
+    out = stream_compute(
+        program, a_values, a_cols, b_values, b_rows, interpret=interpret
+    )
     return out[:R, :C]

@@ -2,11 +2,11 @@
 
 SARIS stores per-point offset index arrays and streams them through the
 indirect SUs in ideal processing order. TPU adaptation: offsets become static
-block-relative addresses; the kernel receives THREE views of the grid (the
-previous/current/next x-blocks, selected by index_map arithmetic — periodic
-boundary) and applies each offset as a static slice + lane rotate, so the
-inner loop issues only multiply-accumulates. Supports any star/box stencil
-with |dx| <= block size.
+block-relative addresses; the stream program binds THREE affine views of the
+grid (the previous/current/next x-blocks, selected by index_map arithmetic —
+periodic boundary) and the body applies each offset as a static slice + lane
+rotate, so the inner loop issues only multiply-accumulates. Supports any
+star/box stencil with |dx| <= block size.
 """
 from __future__ import annotations
 
@@ -15,8 +15,9 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.streams import AffineStream, StreamProgram, stream_compute
+from repro.kernels.registry import block_defaults
 
 
 def _stencil_kernel(prev_ref, cur_ref, next_ref, o_ref, *, offsets, weights, bx):
@@ -33,36 +34,40 @@ def _stencil_kernel(prev_ref, cur_ref, next_ref, o_ref, *, offsets, weights, bx)
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
+def stencil_program(X, Y, Z, bx, offsets, weights, dtype) -> StreamProgram:
+    """Stencil as a stream program: three halo-shifted affine views of the
+    same operand (the offset streams), one output stream."""
+    nb = X // bx
+    body = functools.partial(
+        _stencil_kernel, offsets=np.asarray(offsets),
+        weights=np.asarray(weights), bx=bx,
+    )
+    view = lambda shift: AffineStream(
+        (bx, Y, Z), lambda i: ((i + shift) % nb, 0, 0), dtype=dtype
+    )
+    return StreamProgram(
+        name="stencil",
+        body=body,
+        grid=(nb,),
+        in_streams=(view(-1), view(0), view(+1)),
+        out_streams=(AffineStream((bx, Y, Z), lambda i: (i, 0, 0), dtype=dtype),),
+        out_shapes=(jax.ShapeDtypeStruct((X, Y, Z), dtype),),
+        dimension_semantics=("arbitrary",),
+    )
+
+
 def stencil_pallas(
     grid: jax.Array,  # (X, Y, Z)
     offsets: np.ndarray,  # (P, 3) static int offsets
     weights,  # (P,) static
     *,
-    bx: int = 8,
+    bx: int | None = None,
     interpret: bool = False,
 ):
     X, Y, Z = grid.shape
-    bx = min(bx, X)
+    bx = min(bx or block_defaults("stencil")["bx"], X)
     assert X % bx == 0, (X, bx)
     assert int(np.abs(offsets[:, 0]).max(initial=0)) <= bx, "dx exceeds block"
-    weights = np.asarray(weights)
-    nb = X // bx
 
-    out = pl.pallas_call(
-        functools.partial(
-            _stencil_kernel, offsets=np.asarray(offsets), weights=weights, bx=bx
-        ),
-        grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((bx, Y, Z), lambda i: ((i - 1) % nb, 0, 0)),
-            pl.BlockSpec((bx, Y, Z), lambda i: (i, 0, 0)),
-            pl.BlockSpec((bx, Y, Z), lambda i: ((i + 1) % nb, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((bx, Y, Z), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((X, Y, Z), grid.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)
-        ),
-        interpret=interpret,
-    )(grid, grid, grid)
-    return out
+    program = stencil_program(X, Y, Z, bx, offsets, weights, grid.dtype)
+    return stream_compute(program, grid, grid, grid, interpret=interpret)

@@ -122,7 +122,7 @@ def _cost_point(cfg, shape, mesh, n_layers: int, seq: int | None = None,
     cost model below."""
     import dataclasses as _dc
 
-    from repro.kernels import ops as kops
+    from repro.kernels import registry as kreg
 
     cfg2 = cfg.replace(
         num_layers=n_layers,
@@ -131,7 +131,7 @@ def _cost_point(cfg, shape, mesh, n_layers: int, seq: int | None = None,
         **({"num_global_layers": num_global} if num_global is not None else {}),
     )
     shape2 = _dc.replace(shape, seq_len=seq) if seq else shape
-    with kops.unrolled_inner():
+    with kreg.unroll_inner():
         lowered = _build_and_lower(cfg2, shape2, mesh, donate=False)
         compiled = lowered.compile()
     cost = _cost_stats(compiled)

@@ -1,14 +1,17 @@
 """GCN layer (paper Sec. V-C, Fig. 11): sparse-dense aggregation + dense
 feature recombination — the paper's mixed dense/sparse ML workload.
 
-H' = act( Â (H W) ) with Â in the ELL value/index format and the aggregation
-executed through the spmm kernel (the SU-indirection analogue).
+H' = act( Â (H W) ) with Â an ``EllMatrix`` pytree and the aggregation
+executed through the spmm kernel (the SU-indirection analogue). Both ops
+resolve through the kernel registry, so the whole forward — sparse adjacency
+included — passes through ``jax.jit`` as one traced function.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.sparse import EllMatrix
 from repro.kernels import ops
 from repro.models import layers as L
 
@@ -21,16 +24,15 @@ def init_params(rng, feature_dims: list[int], dtype=jnp.float32):
     ]
 
 
-def gcn_layer(w, adj_values, adj_cols, feats, *, activate=True, impl=None):
+def gcn_layer(w, adj: EllMatrix, feats, *, activate=True):
     """One layer: recombine (dense GEMM) then aggregate (SpMM)."""
-    h = ops.gemm(feats, w, impl=impl)  # dense recombination
-    h = ops.spmm(adj_values, adj_cols, h, impl=impl)  # sparse aggregation
+    h = ops.gemm(feats, w)  # dense recombination
+    h = ops.spmm(adj, h)  # sparse aggregation
     return jax.nn.relu(h) if activate else h
 
 
-def forward(params, adj_values, adj_cols, feats, *, impl=None):
+def forward(params, adj: EllMatrix, feats):
     h = feats
     for i, w in enumerate(params):
-        h = gcn_layer(w, adj_values, adj_cols, h,
-                      activate=i < len(params) - 1, impl=impl)
+        h = gcn_layer(w, adj, h, activate=i < len(params) - 1)
     return h

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.compat import shard_map
+
 
 def ep_expert_ffn(disp, wi, wg, wo, act, mesh, dp, *, ep_axis="model"):
     """Expert-parallel FFN on capacity-dispatched tokens.
@@ -56,7 +58,7 @@ def ep_expert_ffn(disp, wi, wg, wo, act, mesh, dp, *, ep_axis="model"):
 
     has_gate = wg is not None
     if has_gate:
-        return jax.shard_map(
+        return shard_map(
             lambda d_, wi_, wg_, wo_: local(d_, wi_, wg_, wo_),
             mesh=mesh,
             in_specs=(P(dp, None, None, None), P(ep_axis, None, None),
@@ -64,7 +66,7 @@ def ep_expert_ffn(disp, wi, wg, wo, act, mesh, dp, *, ep_axis="model"):
             out_specs=P(dp, None, None, None),
             check_vma=False,
         )(disp, wi, wg, wo)
-    return jax.shard_map(
+    return shard_map(
         lambda d_, wi_, wo_: local(d_, wi_, None, wo_),
         mesh=mesh,
         in_specs=(P(dp, None, None, None), P(ep_axis, None, None),

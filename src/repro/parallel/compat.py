@@ -1,0 +1,22 @@
+"""jax version-compatibility shims for the parallel layer.
+
+``shard_map`` moved from jax.experimental to the jax namespace (and renamed
+``check_rep`` -> ``check_vma``) across jax releases; callers import the
+resolved symbol from here and always use the new-style signature.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=None, **kw):
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )

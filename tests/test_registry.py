@@ -1,0 +1,298 @@
+"""Dispatch-layer and formats-layer tests: kernel registry resolution,
+pytree sparse formats, and the StreamProgram substrate metadata."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparse as sp
+from repro.core import streams
+from repro.kernels import ops, registry
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry_state():
+    yield
+    registry.set_default_impl(None)
+    registry.clear_block_overrides()
+
+
+# ---------------------------------------------------------------------------
+# Registry: errors and resolution precedence
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_op_raises():
+    with pytest.raises(KeyError, match="unknown kernel op"):
+        registry.kernel_call("not_an_op", 1, 2)
+
+
+def test_unknown_impl_raises():
+    with pytest.raises(ValueError, match="unknown impl"):
+        registry.kernel_call("gemm", None, None, impl="cuda")
+    with pytest.raises(ValueError, match="unknown impl"):
+        registry.set_default_impl("cuda")
+
+
+def test_register_rejects_auto():
+    with pytest.raises(ValueError):
+        registry.register_kernel("gemm", impl="auto")
+
+
+def test_all_ops_registered_with_all_impls():
+    for op in ("gemm", "flash_attention", "linear_attention", "spmm",
+               "bsr_spmm", "spmspm", "stencil", "decode_attention"):
+        assert registry.implementations(op) == [
+            "interpret", "pallas", "ref", "xla"
+        ], op
+
+
+def test_impl_precedence_env_default_arg(monkeypatch):
+    probe = "_test_precedence_probe"
+    for impl in ("pallas", "interpret", "xla", "ref"):
+        registry.register_kernel(probe, impl=impl)(lambda _i=impl: _i)
+    try:
+        # no signal at all: auto => xla on CPU
+        monkeypatch.delenv("REPRO_KERNEL_IMPL", raising=False)
+        assert registry.kernel_call(probe) == "xla"
+        # env var beats auto
+        monkeypatch.setenv("REPRO_KERNEL_IMPL", "ref")
+        assert registry.kernel_call(probe) == "ref"
+        # set_default_impl beats the env var
+        registry.set_default_impl("interpret")
+        assert registry.kernel_call(probe) == "interpret"
+        # explicit argument beats everything
+        assert registry.kernel_call(probe, impl="pallas") == "pallas"
+    finally:
+        registry._REGISTRY.pop(probe, None)  # don't leak the probe op
+
+
+def test_block_override_table():
+    assert registry.block_defaults("gemm")["bm"] == 256
+    registry.set_block_override("gemm", bm=128)
+    assert registry.block_defaults("gemm")["bm"] == 128
+    assert registry.block_defaults("gemm")["bn"] == 256  # untouched
+    registry.clear_block_overrides("gemm")
+    assert registry.block_defaults("gemm")["bm"] == 256
+    with pytest.raises(ValueError, match="no block parameters"):
+        registry.set_block_override("gemm", bogus=1)
+    with pytest.raises(KeyError, match="no block-size table"):
+        registry.set_block_override("gem", bm=512)  # typo'd op: loud, not a no-op
+
+
+def test_linear_attention_chunk_overflow_guard(rng):
+    r = jnp.asarray(rng.standard_normal((1, 1, 64, 4)), jnp.float32)
+    wl = jnp.zeros((1, 1, 64, 4), jnp.float32)
+    with pytest.raises(ValueError, match="overflows fp32"):
+        ops.linear_attention(r, r, r, wl, impl="xla", chunk=64)
+    registry.set_block_override("linear_attention", chunk=64)
+    with pytest.raises(ValueError, match="overflows fp32"):
+        ops.linear_attention(r, r, r, wl, impl="xla")
+    # ref runs the exact scan: chunk is irrelevant, so no guard
+    o, _ = ops.linear_attention(r, r, r, wl, impl="ref", chunk=64)
+    assert bool(jnp.all(jnp.isfinite(o)))
+
+
+def test_block_override_feeds_kernels(rng):
+    a = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    want = np.asarray(a @ b)
+    registry.set_block_override("gemm", bm=32, bk=32, bn=32)
+    got = ops.gemm(a, b, impl="interpret", out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Formats: pytree round trips (including all-zero rows)
+# ---------------------------------------------------------------------------
+
+
+def _random_dense(rng, r, c, density, zero_rows=()):
+    dense = np.zeros((r, c), np.float32)
+    mask = rng.random((r, c)) < density
+    dense[mask] = rng.standard_normal(mask.sum())
+    for zr in zero_rows:
+        dense[zr] = 0.0
+    return dense
+
+
+@pytest.mark.parametrize("zero_rows", [(), (0, 3, 7)])
+def test_dense_roundtrip_all_formats(rng, zero_rows):
+    dense = _random_dense(rng, 16, 256, 0.05, zero_rows)
+    for convert in (sp.dense_to_ell, sp.dense_to_csr,
+                    lambda d: sp.dense_to_bsr(d, bm=8, bk=128)):
+        A = convert(dense)
+        np.testing.assert_allclose(np.asarray(A.todense()), dense, err_msg=str(convert))
+
+
+def test_conversion_path_csr_ell_bsr(rng):
+    # rows 0-7 all zero: the whole first 8-row block is empty, exercising the
+    # empty-tile insertion in csr_to_bsr
+    dense = _random_dense(rng, 16, 256, 0.04, zero_rows=tuple(range(8)) + (9,))
+    ell = sp.dense_to_ell(dense)
+    csr = sp.ell_to_csr(ell)
+    np.testing.assert_allclose(np.asarray(csr.todense()), dense)
+    ell2 = sp.csr_to_ell(csr)
+    np.testing.assert_allclose(np.asarray(ell2.todense()), dense)
+    bsr = sp.csr_to_bsr(csr, bm=8, bk=128)
+    np.testing.assert_allclose(np.asarray(bsr.todense()), dense)
+    np.testing.assert_allclose(np.asarray(sp.bsr_to_csr(bsr).todense()), dense)
+    np.testing.assert_allclose(
+        np.asarray(sp.bsr_to_ell(sp.ell_to_bsr(ell)).todense()), dense
+    )
+
+
+def test_ell_padding_never_contributes(rng):
+    # padded slots alias column 0 with value 0: col 0's true value must
+    # survive the aliased scatter-adds exactly
+    dense = _random_dense(rng, 8, 64, 0.1)
+    dense[:, 0] = 7.0  # every row has a real entry at the aliased column
+    A = sp.dense_to_ell(dense, max_nnz=32)  # force padding slots
+    got = np.asarray(A.todense())
+    assert np.all(got[:, 0] == 7.0)
+    np.testing.assert_allclose(got, dense)
+    # the micro-assert itself: zeroing all padded slots changes nothing
+    mask = np.asarray(A.values) != 0
+    stripped = sp.EllMatrix(
+        jnp.where(jnp.asarray(mask), A.values, 0.0), A.cols, A.shape
+    )
+    np.testing.assert_allclose(np.asarray(stripped.todense()), got)
+
+
+def test_dense_to_ell_honors_wide_max_nnz(rng):
+    dense = _random_dense(rng, 4, 8, 0.5)
+    A = sp.dense_to_ell(dense, max_nnz=12)  # wider than the matrix itself
+    assert A.values.shape == (4, 12) and A.cols.shape == (4, 12)
+    np.testing.assert_allclose(np.asarray(A.todense()), dense)
+
+
+def test_formats_are_pytrees(rng):
+    dense = _random_dense(rng, 16, 256, 0.05)
+    ell = sp.dense_to_ell(dense)
+    bsr = sp.dense_to_bsr(dense)
+    csr = sp.dense_to_csr(dense)
+    assert len(jax.tree_util.tree_leaves(ell)) == 2
+    assert len(jax.tree_util.tree_leaves(bsr)) == 3
+    assert len(jax.tree_util.tree_leaves(csr)) == 3
+    # shape is static aux data: it survives flatten/unflatten
+    flat, treedef = jax.tree_util.tree_flatten(ell)
+    assert jax.tree_util.tree_unflatten(treedef, flat).shape == (16, 256)
+
+
+def test_ell_jit_traces_without_densifying(rng):
+    R, C, F = 24, 512, 8
+    dense = _random_dense(rng, R, C, 0.02)
+    A = sp.dense_to_ell(dense)
+    D = jnp.asarray(rng.standard_normal((C, F)), jnp.float32)
+
+    @jax.jit
+    def agg(A, D):
+        return ops.spmm(A, D, impl="ref")
+
+    got = agg(A, D)
+    np.testing.assert_allclose(
+        np.asarray(got), dense @ np.asarray(D), rtol=1e-4, atol=1e-4
+    )
+    # keyword form of the overload behaves identically
+    got_kw = ops.spmm(A, dense=D, impl="ref")
+    np.testing.assert_allclose(np.asarray(got_kw), np.asarray(got),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(TypeError, match="required"):
+        ops.spmm(A)
+    # half-migrated old-style call: extra operands must be loud, not ignored
+    with pytest.raises(TypeError, match="extra operand"):
+        ops.spmm(A, A.cols, D)
+    # no (R, C) dense adjacency anywhere in the traced program
+    jaxpr = str(jax.make_jaxpr(lambda A, D: ops.spmm(A, D, impl="ref"))(A, D))
+    assert f"{R},{C}" not in jaxpr
+
+
+def test_bsr_jit_roundtrip(rng):
+    dense = _random_dense(rng, 64, 256, 0.03)
+    bsr = sp.dense_to_bsr(dense, bm=8, bk=128)
+    D = jnp.asarray(rng.standard_normal((256, 16)), jnp.float32)
+    got = jax.jit(lambda a, d: ops.bsr_spmm(a, d))(bsr, D)
+    np.testing.assert_allclose(
+        np.asarray(got), dense @ np.asarray(D), rtol=1e-4, atol=1e-4
+    )
+    # keyword form of the overload behaves identically
+    got_kw = ops.bsr_spmm(bsr, dense=D, impl="xla")
+    np.testing.assert_allclose(np.asarray(got_kw), np.asarray(got),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(TypeError, match="required"):
+        ops.bsr_spmm(bsr)
+    with pytest.raises(TypeError, match="extra operands"):
+        ops.bsr_spmm(bsr, bsr.tile_rows, bsr.tile_cols, D, 64)
+
+
+def test_spmspm_accepts_ell_operands(rng):
+    A = sp.random_ell(rng, 32, 128, 0.1)
+    B = sp.random_ell(rng, 48, 128, 0.1)
+    from repro.kernels import ref
+
+    want = ref.spmspm_ref(A.values, A.cols, B.values, B.cols, 128)
+    got = jax.jit(lambda a, b: ops.spmspm(a, b, 128))(A, B)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # keyword form of the overload must behave identically
+    got_kw = ops.spmspm(A, B, contraction_dim=128, impl="xla")
+    np.testing.assert_allclose(np.asarray(got_kw), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    with pytest.raises(TypeError, match="contraction_dim"):
+        ops.spmspm(A, B)
+    with pytest.raises(TypeError, match="extra operands"):
+        ops.spmspm(A, B, 128, contraction_dim=128)
+    with pytest.raises(TypeError, match="must also be an EllMatrix"):
+        ops.spmspm(A, B.values, 128)
+
+
+# ---------------------------------------------------------------------------
+# Streams: program metadata
+# ---------------------------------------------------------------------------
+
+
+def test_stream_program_metadata():
+    from repro.kernels.gemm import gemm_program
+
+    prog = gemm_program(
+        256, 256, 256, 128, 128, 128,
+        a_dtype=jnp.bfloat16, b_dtype=jnp.float32,
+        out_dtype=jnp.float32, accum_dtype=jnp.float32,
+    )
+    assert prog.steps == 2 * 2 * 2
+    # per step: one bf16 A tile, one f32 B tile, one f32 output tile
+    per_step = 128 * 128 * 2 + 2 * (128 * 128 * 4)
+    assert prog.traffic_bytes() == per_step * prog.steps
+    assert prog.in_streams[0].bytes_per_step == 128 * 128 * 2
+    assert prog.in_streams[1].bytes_per_step == 128 * 128 * 4
+
+
+def test_stream_compute_multi_output(rng):
+    # the linear-attention program: two output streams through one launch
+    r = jnp.asarray(rng.standard_normal((1, 2, 32, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 32, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 32, 8)), jnp.float32)
+    wl = jnp.asarray(-rng.uniform(0.01, 2.0, (1, 2, 32, 8)), jnp.float32)
+    o, S = ops.linear_attention(r, k, v, wl, impl="interpret", chunk=16)
+    from repro.kernels import ref
+
+    o_ref, s_ref = ref.linear_attention_scan_ref(
+        r, k, v, jnp.maximum(wl, ops.W_LOG_FLOOR), None, None
+    )
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_no_pallas_call_outside_streams():
+    """The substrate invariant: core/streams.py is the only pallas_call site."""
+    import pathlib
+
+    root = pathlib.Path(__file__).resolve().parents[1] / "src"
+    offenders = [
+        p
+        for p in root.rglob("*.py")
+        if "pallas_call" in p.read_text() and p.name != "streams.py"
+    ]
+    assert not offenders, offenders

@@ -49,8 +49,8 @@ def test_gcn_layer_mixed_dense_sparse():
     adj = sparse.random_ell(rng, n, n, 0.05)
     feats = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
     params = gcn.init_params(jax.random.PRNGKey(0), [f, f, f])
-    out = gcn.forward(params, jnp.asarray(adj.values), jnp.asarray(adj.cols),
-                      feats)
+    # adjacency is an EllMatrix pytree: jit the whole mixed forward
+    out = jax.jit(lambda a, x: gcn.forward(params, a, x))(adj, feats)
     assert out.shape == (n, f)
     assert bool(jnp.all(jnp.isfinite(out)))
     # oracle check against densified adjacency

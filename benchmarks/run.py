@@ -5,30 +5,82 @@ CPU-timing caveats and the derived figure-of-merit definitions).
 
 Implementation selection is registry-global: the harness pins the ``xla``
 impls (the lowering-representative blocked forms — Pallas cannot lower on
-CPU) once here instead of threading ``impl=`` through every call site.
-Override with ``REPRO_BENCH_IMPL=interpret`` etc.
+CPU) once here, scoped via ``registry.default_impl`` so nothing leaks past
+the run. Override with ``REPRO_BENCH_IMPL=interpret`` etc.
+
+``--autotune`` (or ``REPRO_AUTOTUNE=1``) runs the block-size autotuner
+(repro.launch.autotune) before the benchmarks: if the tuning record already
+exists it is loaded and applied deterministically — no re-search — otherwise
+the search runs and persists it. Tuned-vs-default ``us_per_call`` deltas are
+emitted as ``autotune_<op>`` CSV rows, and the benchmarks then run under the
+tuned overrides.
 """
+import argparse
 import os
 
 
-def main() -> None:
+def main(argv=None) -> None:
     import jax
 
     from repro.kernels import registry
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune block sizes first (or load the existing record)")
+    ap.add_argument("--autotune-record", default="autotune_record.json")
+    ap.add_argument("--autotune-reps", type=int, default=3)
+    ap.add_argument("--autotune-only", action="store_true",
+                    help="emit the autotune rows and stop (CI smoke)")
+    args = ap.parse_args(argv)
+    tune = (args.autotune or args.autotune_only
+            or os.environ.get("REPRO_AUTOTUNE") == "1")
 
     impl = os.environ.get("REPRO_BENCH_IMPL")
     if impl is None:
         # xla is the CPU stand-in; on TPU let auto pick the Pallas kernels
         impl = "xla" if jax.default_backend() != "tpu" else "auto"
-    registry.set_default_impl(impl)
 
-    from benchmarks import (bench_d2d, bench_gcn, bench_gemm, bench_gptj,
-                            bench_spmm, bench_spmspm, bench_stencil)
+    with registry.default_impl(impl):
+        print("name,us_per_call,derived")
+        if tune:
+            from repro.launch import autotune as at
 
-    print("name,us_per_call,derived")
-    for mod in (bench_gemm, bench_stencil, bench_spmm, bench_spmspm,
-                bench_gcn, bench_gptj, bench_d2d):
-        mod.run()
+            record = None
+            source = "loaded"
+            if os.path.exists(args.autotune_record):
+                record = at.load_record(args.autotune_record)
+                if not at.record_matches_environment(record):
+                    # tuned for a different backend/impl: re-search rather
+                    # than silently mistune this one
+                    record = None
+            if record is None:
+                record = at.autotune(reps=args.autotune_reps)
+                at.save_record(record, args.autotune_record)
+                source = "searched"
+            at.apply_record(record)
+            for op, d in sorted(at.record_deltas(record).items()):
+                delta = ("n/a" if d["delta_pct"] is None
+                         else f"{d['delta_pct']:+.1f}%")
+                default_us = ("n/a" if d["default_us"] is None
+                              else f"{d['default_us']:.1f}")
+                tuned_us = ("n/a" if d["us_per_call"] is None
+                            else f"{d['us_per_call']:.1f}")
+                print(
+                    f"autotune_{op},{tuned_us},"
+                    f"default_us={default_us};delta={delta};"
+                    f"blocks={'/'.join(f'{k}={v}' for k, v in sorted(d['blocks'].items()))};"
+                    f"{source}",
+                    flush=True,
+                )
+            if args.autotune_only:
+                return
+
+        from benchmarks import (bench_d2d, bench_gcn, bench_gemm, bench_gptj,
+                                bench_spmm, bench_spmspm, bench_stencil)
+
+        for mod in (bench_gemm, bench_stencil, bench_spmm, bench_spmspm,
+                    bench_gcn, bench_gptj, bench_d2d):
+            mod.run()
 
 
 if __name__ == "__main__":

@@ -60,7 +60,14 @@ def dense_to_ell(dense, max_nnz: int | None = None) -> EllMatrix:
     dense = jnp.asarray(dense)
     R, C = dense.shape
     mask = dense != 0
-    L = max_nnz or max(int(np.asarray(mask.sum(axis=1)).max()), 1)
+    row_nnz = np.asarray(mask.sum(axis=1))
+    if max_nnz is not None and row_nnz.max(initial=0) > max_nnz:
+        offender = int(row_nnz.argmax())
+        raise ValueError(
+            f"dense_to_ell: row {offender} has {int(row_nnz[offender])} "
+            f"nonzeros > max_nnz={max_nnz}; widen max_nnz or pre-prune"
+        )
+    L = max_nnz or max(int(row_nnz.max(initial=0)), 1)
     # stable sort moves nonzero slots to the front, preserving column order
     order = jnp.argsort(~mask, axis=1, stable=True)[:, : min(L, C)]
     order = order.astype(jnp.int32)
@@ -217,14 +224,19 @@ def csr_to_ell(A: CsrMatrix, max_nnz: int | None = None) -> EllMatrix:
     indptr = np.asarray(A.indptr)
     R = A.shape[0]
     counts = np.diff(indptr)
+    if max_nnz is not None and counts.max(initial=0) > max_nnz:
+        offender = int(counts.argmax())
+        raise ValueError(
+            f"csr_to_ell: row {offender} has {int(counts[offender])} "
+            f"nonzeros > max_nnz={max_nnz}; widen max_nnz or pre-prune"
+        )
     L = max_nnz or max(int(counts.max(initial=0)), 1)
     rows = np.repeat(np.arange(R), counts)
     slots = np.arange(len(data)) - indptr[rows]  # position within each row
-    keep = slots < L  # truncate rows longer than max_nnz
     values = np.zeros((R, L), data.dtype)
     cols = np.zeros((R, L), np.int32)
-    values[rows[keep], slots[keep]] = data[keep]
-    cols[rows[keep], slots[keep]] = indices[keep]
+    values[rows, slots] = data
+    cols[rows, slots] = indices
     return EllMatrix(jnp.asarray(values), jnp.asarray(cols), A.shape)
 
 

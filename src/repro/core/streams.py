@@ -141,6 +141,24 @@ class StreamProgram:
         )
         return per_step * self.steps
 
+    def vmem_bytes(self) -> int:
+        """Estimated VMEM residency of the pipelined program.
+
+        Every in/out stream holds one block double-buffered (the C4 SPM
+        discipline: compute on one buffer while DMA fills the other), scratch
+        buffers are single, persistent allocations. This is the analytic
+        feasibility bound the block-size autotuner checks against the VMEM
+        budget before compiling a candidate geometry.
+        """
+        stream_bytes = 2 * sum(
+            s.bytes_per_step for s in (*self.in_streams, *self.out_streams)
+        )
+        scratch_bytes = sum(
+            math.prod(s.shape) * _dtype_bytes(getattr(s, "dtype", None))
+            for s in self.scratch
+        )
+        return stream_bytes + scratch_bytes
+
 
 def stream_compute(program: StreamProgram, *operands, interpret: bool = False):
     """Execute a StreamProgram (the FREP + SU launch).

@@ -18,7 +18,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.streams import AffineStream, StreamProgram, stream_compute
-from repro.kernels.registry import block_defaults
+from repro.kernels.registry import resolve_blocks
 
 NEG = -1e30
 
@@ -139,9 +139,9 @@ def flash_attention_pallas(
     K, Sk = k.shape[1], k.shape[2]
     G = H // K
     scale = scale if scale is not None else 1.0 / np.sqrt(D)
-    blocks = block_defaults("flash_attention")
-    bq = min(bq or blocks["bq"], Sq)
-    bk = min(bk or blocks["bk"], Sk)
+    blocks = resolve_blocks("flash_attention", bq=bq, bk=bk)
+    bq = min(blocks["bq"], Sq)
+    bk = min(blocks["bk"], Sk)
     pq, pk_ = (-Sq) % bq, (-Sk) % bk
     if pq:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))

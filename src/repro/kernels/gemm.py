@@ -17,7 +17,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.streams import AffineStream, StreamProgram, stream_compute
-from repro.kernels.registry import block_defaults
+from repro.kernels.registry import resolve_blocks
 
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
@@ -72,10 +72,10 @@ def gemm_pallas(
     K2, N = b.shape
     assert K == K2
     out_dtype = out_dtype or a.dtype
-    blocks = block_defaults("gemm")
-    bm = min(bm or blocks["bm"], M)
-    bk = min(bk or blocks["bk"], K)
-    bn = min(bn or blocks["bn"], N)
+    blocks = resolve_blocks("gemm", bm=bm, bk=bk, bn=bn)
+    bm = min(blocks["bm"], M)
+    bk = min(blocks["bk"], K)
+    bn = min(blocks["bn"], N)
 
     pm, pk, pn = (-M) % bm, (-K) % bk, (-N) % bn
     if pm or pk:

@@ -12,6 +12,13 @@ Public signatures are stable; every op resolves its implementation through
 Sparse ops additionally accept the pytree formats from ``core.sparse``
 (EllMatrix / BsrMatrix) in place of their unpacked value/index arrays, so
 sparse operands pass whole through ``jax.jit`` boundaries.
+
+Block geometry resolves the same way for every op, in exactly one place:
+``registry.resolve_blocks(op, **explicit)`` (explicit kwarg > autotuner/user
+``set_block_override`` > static default). The dispatcher resolves once and
+passes identical resolved sizes to whichever impl runs, so an explicit
+``bk=`` and a ``set_block_override`` behave the same under pallas,
+interpret, and xla alike — no impl carries its own block literal.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ from repro.kernels import registry
 from repro.kernels import xla as _xla
 from repro.kernels.registry import (  # re-exported: the public dispatch API
     kernel_call,
+    resolve_blocks,
     resolve_impl,
     set_default_impl,
 )
@@ -38,25 +46,30 @@ unrolled_inner = registry.unroll_inner
 # ---------------------------------------------------------------------------
 
 
-def gemm(a, b, *, out_dtype=None, accum_dtype=jnp.float32, impl=None):
+def gemm(a, b, *, out_dtype=None, accum_dtype=jnp.float32, impl=None,
+         bm=None, bk=None, bn=None):
+    blocks = resolve_blocks("gemm", bm=bm, bk=bk, bn=bn)
     return kernel_call(
-        "gemm", a, b, out_dtype=out_dtype, accum_dtype=accum_dtype, impl=impl
+        "gemm", a, b, out_dtype=out_dtype, accum_dtype=accum_dtype,
+        impl=impl, **blocks,
     )
 
 
 @registry.register_stream_kernel("gemm")
 def _gemm_stream(a, b, *, out_dtype=None, accum_dtype=jnp.float32,
-                 interpret=False):
+                 bm=None, bk=None, bn=None, interpret=False):
     from repro.kernels import gemm as _gemm
 
     return _gemm.gemm_pallas(
-        a, b, out_dtype=out_dtype, accum_dtype=accum_dtype, interpret=interpret
+        a, b, out_dtype=out_dtype, accum_dtype=accum_dtype,
+        bm=bm, bk=bk, bn=bn, interpret=interpret,
     )
 
 
 @registry.register_kernel("gemm", impl="xla")
 @registry.register_kernel("gemm", impl="ref")
-def _gemm_ref(a, b, *, out_dtype=None, accum_dtype=jnp.float32):
+def _gemm_ref(a, b, *, out_dtype=None, accum_dtype=jnp.float32,
+              bm=None, bk=None, bn=None):
     return _ref.gemm_ref(a, b, out_dtype=out_dtype, accum_dtype=accum_dtype)
 
 
@@ -67,36 +80,48 @@ def _gemm_ref(a, b, *, out_dtype=None, accum_dtype=jnp.float32):
 
 def flash_attention(
     q, k, v, *, causal=True, window=0, q_offset=0, scale=None, impl=None,
-    block_k=512,
+    bq=None, bk=None, block_k=None,
 ):
-    """q: (B,H,Sq,D); k,v: (B,K,Sk,D). Returns (B,H,Sq,D)."""
+    """q: (B,H,Sq,D); k,v: (B,K,Sk,D). Returns (B,H,Sq,D).
+
+    ``block_k`` is the historical spelling of ``bk``; both resolve through
+    the registry, so an explicit argument and ``set_block_override`` reach
+    the pallas and xla impls identically.
+    """
+    if block_k is not None:
+        if bk is not None and bk != block_k:
+            raise TypeError(
+                f"flash_attention: bk={bk} and its alias block_k={block_k} disagree"
+            )
+        bk = block_k
+    blocks = resolve_blocks("flash_attention", bq=bq, bk=bk)
     return kernel_call(
         "flash_attention", q, k, v, causal=causal, window=window,
-        q_offset=q_offset, scale=scale, block_k=block_k, impl=impl,
+        q_offset=q_offset, scale=scale, impl=impl, **blocks,
     )
 
 
 @registry.register_stream_kernel("flash_attention")
-def _fa_stream(q, k, v, *, causal, window, q_offset, scale, block_k=None,
+def _fa_stream(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None,
                interpret=False):
     from repro.kernels import flash_attention as _fa
 
     return _fa.flash_attention_pallas(
         q, k, v, causal=causal, window=window, q_offset=q_offset,
-        scale=scale, interpret=interpret,
+        scale=scale, bq=bq, bk=bk, interpret=interpret,
     )
 
 
 @registry.register_kernel("flash_attention", impl="xla")
-def _fa_xla(q, k, v, *, causal, window, q_offset, scale, block_k):
+def _fa_xla(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None):
     return _xla.flash_attention_xla(
         q, k, v, causal=causal, window=window, q_offset=q_offset,
-        scale=scale, block_k=block_k,
+        scale=scale, bk=bk,
     )
 
 
 @registry.register_kernel("flash_attention", impl="ref")
-def _fa_ref(q, k, v, *, causal, window, q_offset, scale, block_k=None):
+def _fa_ref(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None):
     return _ref.mha_ref(
         q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale
     )
@@ -137,7 +162,7 @@ def linear_attention(r, k, v, w_log, u=None, s0=None, *, impl=None, chunk=None):
     u None   => SSD/Mamba read-out (o_t from S_t)
     Returns (o (B,H,T,M), S_final (B,H,N,M)).
     """
-    chunk = chunk or registry.block_defaults("linear_attention")["chunk"]
+    chunk = resolve_blocks("linear_attention", chunk=chunk)["chunk"]
     # ref runs the exact per-token scan and never exponentiates a chunk span
     if resolve_impl(impl) != "ref" and chunk * -W_LOG_FLOOR > _MAX_CHUNK_EXP:
         raise ValueError(
@@ -190,7 +215,7 @@ def linear_attention_step(r, k, v, w_log, u, S):
 # ---------------------------------------------------------------------------
 
 
-def spmm(values, cols=None, dense=None, *, impl=None):
+def spmm(values, cols=None, dense=None, *, impl=None, bm=None):
     """ELL sparse-dense matmul. Either ``spmm(A, dense)`` with A an
     EllMatrix, or the unpacked ``spmm(values, cols, dense)``."""
     if isinstance(values, EllMatrix):
@@ -203,22 +228,25 @@ def spmm(values, cols=None, dense=None, *, impl=None):
         values, cols = values.values, values.cols
     if cols is None or dense is None:
         raise TypeError("spmm: cols and dense operands are required")
-    return kernel_call("spmm", values, cols, dense, impl=impl)
+    blocks = resolve_blocks("spmm", bm=bm)
+    return kernel_call("spmm", values, cols, dense, impl=impl, **blocks)
 
 
 @registry.register_stream_kernel("spmm")
-def _spmm_stream(values, cols, dense, *, interpret=False):
+def _spmm_stream(values, cols, dense, *, bm=None, interpret=False):
     from repro.kernels import spmm as _spmm
 
-    return _spmm.spmm_pallas(values, cols, dense, interpret=interpret)
+    return _spmm.spmm_pallas(values, cols, dense, bm=bm, interpret=interpret)
 
 
-registry.register_kernel("spmm", impl="xla")(_ref.spmm_ref)
-registry.register_kernel("spmm", impl="ref")(_ref.spmm_ref)
+@registry.register_kernel("spmm", impl="xla")
+@registry.register_kernel("spmm", impl="ref")
+def _spmm_ref(values, cols, dense, *, bm=None):
+    return _ref.spmm_ref(values, cols, dense)
 
 
 def bsr_spmm(tile_values, tile_rows=None, tile_cols=None, dense=None,
-             num_rows=None, *, impl=None):
+             num_rows=None, *, impl=None, bf=None):
     """Block-sparse rows x dense (the MXU-native sparse-dense form).
 
     Either ``bsr_spmm(A, dense)`` with A a BsrMatrix, or the unpacked
@@ -239,24 +267,28 @@ def bsr_spmm(tile_values, tile_rows=None, tile_cols=None, dense=None,
         raise TypeError(
             "bsr_spmm: tile coordinates, dense operand and num_rows are required"
         )
+    blocks = resolve_blocks("bsr_spmm", bf=bf)
     return kernel_call(
         "bsr_spmm", tile_values, tile_rows, tile_cols, dense, num_rows,
-        impl=impl,
+        impl=impl, **blocks,
     )
 
 
 @registry.register_stream_kernel("bsr_spmm")
 def _bsr_stream(tile_values, tile_rows, tile_cols, dense, num_rows,
-                *, interpret=False):
+                *, bf=None, interpret=False):
     from repro.kernels import spmm as _spmm
 
     return _spmm.bsr_spmm_pallas(
-        tile_values, tile_rows, tile_cols, dense, num_rows, interpret=interpret
+        tile_values, tile_rows, tile_cols, dense, num_rows, bf=bf,
+        interpret=interpret,
     )
 
 
-registry.register_kernel("bsr_spmm", impl="xla")(_xla.bsr_spmm_xla)
-registry.register_kernel("bsr_spmm", impl="ref")(_xla.bsr_spmm_xla)
+@registry.register_kernel("bsr_spmm", impl="xla")
+@registry.register_kernel("bsr_spmm", impl="ref")
+def _bsr_xla(tile_values, tile_rows, tile_cols, dense, num_rows, *, bf=None):
+    return _xla.bsr_spmm_xla(tile_values, tile_rows, tile_cols, dense, num_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -265,7 +297,7 @@ registry.register_kernel("bsr_spmm", impl="ref")(_xla.bsr_spmm_xla)
 
 
 def spmspm(a_values, a_cols, b_values=None, b_rows=None, contraction_dim=None,
-           *, impl=None):
+           *, impl=None, bm=None, bn=None):
     """Sparse x sparse by index intersection. Either ``spmspm(A, B, k)`` with
     ELL operands (B holding the right matrix's columns), or unpacked arrays.
     """
@@ -286,25 +318,34 @@ def spmspm(a_values, a_cols, b_values=None, b_rows=None, contraction_dim=None,
         raise TypeError(
             "spmspm: b_values, b_rows and contraction_dim are required"
         )
+    blocks = resolve_blocks("spmspm", bm=bm, bn=bn)
     return kernel_call(
         "spmspm", a_values, a_cols, b_values, b_rows, contraction_dim,
-        impl=impl,
+        impl=impl, **blocks,
     )
 
 
 @registry.register_stream_kernel("spmspm")
 def _spmspm_stream(a_values, a_cols, b_values, b_rows, contraction_dim,
-                   *, interpret=False):
+                   *, bm=None, bn=None, interpret=False):
     from repro.kernels import spmspm as _spmspm
 
     return _spmspm.spmspm_pallas(
         a_values, a_cols, b_values, b_rows, contraction_dim,
-        interpret=interpret,
+        bm=bm, bn=bn, interpret=interpret,
     )
 
 
-registry.register_kernel("spmspm", impl="xla")(_xla.spmspm_xla)
-registry.register_kernel("spmspm", impl="ref")(_ref.spmspm_ref)
+@registry.register_kernel("spmspm", impl="xla")
+def _spmspm_xla(a_values, a_cols, b_values, b_rows, contraction_dim,
+                *, bm=None, bn=None):
+    return _xla.spmspm_xla(a_values, a_cols, b_values, b_rows, contraction_dim)
+
+
+@registry.register_kernel("spmspm", impl="ref")
+def _spmspm_ref(a_values, a_cols, b_values, b_rows, contraction_dim,
+                *, bm=None, bn=None):
+    return _ref.spmspm_ref(a_values, a_cols, b_values, b_rows, contraction_dim)
 
 
 # ---------------------------------------------------------------------------
@@ -312,16 +353,20 @@ registry.register_kernel("spmspm", impl="ref")(_ref.spmspm_ref)
 # ---------------------------------------------------------------------------
 
 
-def stencil(grid, offsets: np.ndarray, weights, *, impl=None):
-    return kernel_call("stencil", grid, offsets, weights, impl=impl)
+def stencil(grid, offsets: np.ndarray, weights, *, impl=None, bx=None):
+    blocks = resolve_blocks("stencil", bx=bx)
+    return kernel_call("stencil", grid, offsets, weights, impl=impl, **blocks)
 
 
 @registry.register_stream_kernel("stencil")
-def _stencil_stream(grid, offsets, weights, *, interpret=False):
+def _stencil_stream(grid, offsets, weights, *, bx=None, interpret=False):
     from repro.kernels import stencil as _stencil
 
-    return _stencil.stencil_pallas(grid, offsets, weights, interpret=interpret)
+    return _stencil.stencil_pallas(grid, offsets, weights, bx=bx,
+                                   interpret=interpret)
 
 
-registry.register_kernel("stencil", impl="xla")(_ref.stencil_ref)
-registry.register_kernel("stencil", impl="ref")(_ref.stencil_ref)
+@registry.register_kernel("stencil", impl="xla")
+@registry.register_kernel("stencil", impl="ref")
+def _stencil_ref(grid, offsets, weights, *, bx=None):
+    return _ref.stencil_ref(grid, offsets, weights)

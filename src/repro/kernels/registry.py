@@ -85,6 +85,21 @@ def set_default_impl(impl: str | None) -> None:
     _default_impl = impl
 
 
+@contextlib.contextmanager
+def default_impl(impl: str | None):
+    """Scoped form of ``set_default_impl``: restores the previous default on
+    exit, so harnesses and tests don't leak process-global impl state."""
+    global _default_impl
+    if impl is not None and impl not in VALID_IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; one of {VALID_IMPLS}")
+    old = _default_impl
+    _default_impl = impl
+    try:
+        yield
+    finally:
+        _default_impl = old
+
+
 def resolve_impl(impl: str | None = None) -> str:
     impl = impl or _default_impl or os.environ.get("REPRO_KERNEL_IMPL", "auto")
     if impl not in VALID_IMPLS:
@@ -126,8 +141,14 @@ _BLOCK_DEFAULTS: dict[str, dict[str, int]] = {
 _block_overrides: dict[str, dict[str, int]] = {}
 
 
-def block_defaults(op: str) -> dict[str, int]:
-    """Per-op block sizes: the static defaults merged with any override."""
+def block_defaults(op: str, *, overrides: bool = True) -> dict[str, int]:
+    """Per-op block sizes: the static defaults merged with any override.
+
+    ``overrides=False`` returns the pristine table defaults — the autotuner's
+    baseline, measured regardless of what overrides are currently active.
+    """
+    if not overrides:
+        return dict(_BLOCK_DEFAULTS.get(op, {}))
     return {**_BLOCK_DEFAULTS.get(op, {}), **_block_overrides.get(op, {})}
 
 
@@ -149,6 +170,45 @@ def clear_block_overrides(op: str | None = None) -> None:
         _block_overrides.clear()
     else:
         _block_overrides.pop(op, None)
+
+
+def resolve_blocks(op: str, **explicit: int | None) -> dict[str, int]:
+    """The single block-geometry resolution path, every impl's source of
+    truth: explicit kwarg > ``set_block_override`` > static default.
+
+    ``explicit`` entries that are None fall through to the override/default
+    layers; unknown parameter names raise (same contract as
+    ``set_block_override``). Returns the complete block dict for ``op``, so
+    pallas, interpret, and xla implementations of one call all receive
+    identical geometry.
+    """
+    known = _BLOCK_DEFAULTS.get(op)
+    if known is None:
+        raise KeyError(
+            f"op {op!r} has no block-size table; known: {sorted(_BLOCK_DEFAULTS)}"
+        )
+    bad = set(explicit) - set(known)
+    if bad:
+        raise ValueError(f"{op!r} has no block parameters {sorted(bad)}")
+    resolved = {**known, **_block_overrides.get(op, {})}
+    resolved.update({k: v for k, v in explicit.items() if v is not None})
+    return resolved
+
+
+@contextlib.contextmanager
+def block_override(op: str, **sizes: int):
+    """Scoped ``set_block_override``: the autotuner times each candidate
+    under this so a failed or aborted search never leaks geometry."""
+    old = dict(_block_overrides.get(op, {}))
+    had = op in _block_overrides
+    set_block_override(op, **sizes)
+    try:
+        yield
+    finally:
+        if had:
+            _block_overrides[op] = old
+        else:
+            _block_overrides.pop(op, None)
 
 
 # ---------------------------------------------------------------------------

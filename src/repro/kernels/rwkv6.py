@@ -18,6 +18,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.streams import AffineStream, StreamProgram, stream_compute
+from repro.kernels.registry import resolve_blocks
 
 
 def _la_kernel(
@@ -76,19 +77,57 @@ def _la_kernel(
         sout_ref[0] = s_new
 
 
+def linear_attention_program(
+    BH, Tp, N, M, chunk, *, ssd, r_dtype, k_dtype, v_dtype, w_dtype, o_dtype
+) -> StreamProgram:
+    """Chunked decay scan as a stream program: r/k/v/w chunk streams advance
+    with the sequential chunk grid; u and the initial state are resident."""
+    nc = Tp // chunk
+    chunk_stream = lambda w, dt: AffineStream(
+        (1, chunk, w), lambda b, c: (b, c, 0), dtype=dt
+    )
+    resident = lambda shape, dt: AffineStream(
+        shape, lambda b, c: (b, 0, 0), dtype=dt
+    )
+    return StreamProgram(
+        name="linear_attention",
+        body=functools.partial(_la_kernel, ssd=ssd, nc=nc, chunk=chunk),
+        grid=(BH, nc),
+        in_streams=(
+            chunk_stream(N, r_dtype),
+            chunk_stream(N, k_dtype),
+            chunk_stream(M, v_dtype),
+            chunk_stream(N, w_dtype),
+            resident((1, 1, N), jnp.float32),
+            resident((1, N, M), jnp.float32),
+        ),
+        out_streams=(
+            chunk_stream(M, o_dtype),
+            resident((1, N, M), jnp.float32),
+        ),
+        out_shapes=(
+            jax.ShapeDtypeStruct((BH, Tp, M), o_dtype),
+            jax.ShapeDtypeStruct((BH, N, M), jnp.float32),
+        ),
+        scratch=(pltpu.VMEM((N, M), jnp.float32),),
+        dimension_semantics=("arbitrary", "arbitrary"),
+    )
+
+
 def linear_attention_pallas(
-    r, k, v, w_log, u=None, s0=None, *, chunk: int = 32, interpret: bool = False
+    r, k, v, w_log, u=None, s0=None, *, chunk: int | None = None,
+    interpret: bool = False
 ):
     """r,k,w_log: (B,H,T,N); v: (B,H,T,M); u: (H,N) or None; s0: (B,H,N,M)."""
     B, H, T, N = r.shape
     M = v.shape[-1]
     ssd = u is None
+    chunk = resolve_blocks("linear_attention", chunk=chunk)["chunk"]
     pad = (-T) % chunk
     if pad:
         zp = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
         r, k, v, w_log = zp(r), zp(k), zp(v), zp(w_log)
     Tp = T + pad
-    nc = Tp // chunk
     BH = B * H
 
     flat = lambda x: x.reshape(BH, Tp, x.shape[-1])
@@ -104,34 +143,10 @@ def linear_attention_pallas(
         else s0.reshape(BH, N, M).astype(jnp.float32)
     )
 
-    chunk_stream = lambda w, dt: AffineStream(
-        (1, chunk, w), lambda b, c: (b, c, 0), dtype=dt
-    )
-    resident = lambda shape, dt: AffineStream(
-        shape, lambda b, c: (b, 0, 0), dtype=dt
-    )
-    program = StreamProgram(
-        name="linear_attention",
-        body=functools.partial(_la_kernel, ssd=ssd, nc=nc, chunk=chunk),
-        grid=(BH, nc),
-        in_streams=(
-            chunk_stream(N, rf.dtype),
-            chunk_stream(N, kf.dtype),
-            chunk_stream(M, vf.dtype),
-            chunk_stream(N, wf.dtype),
-            resident((1, 1, N), jnp.float32),
-            resident((1, N, M), jnp.float32),
-        ),
-        out_streams=(
-            chunk_stream(M, v.dtype),
-            resident((1, N, M), jnp.float32),
-        ),
-        out_shapes=(
-            jax.ShapeDtypeStruct((BH, Tp, M), v.dtype),
-            jax.ShapeDtypeStruct((BH, N, M), jnp.float32),
-        ),
-        scratch=(pltpu.VMEM((N, M), jnp.float32),),
-        dimension_semantics=("arbitrary", "arbitrary"),
+    program = linear_attention_program(
+        BH, Tp, N, M, chunk, ssd=ssd,
+        r_dtype=rf.dtype, k_dtype=kf.dtype, v_dtype=vf.dtype, w_dtype=wf.dtype,
+        o_dtype=v.dtype,
     )
     o, s_out = stream_compute(program, rf, kf, vf, wf, uf, s0f,
                               interpret=interpret)

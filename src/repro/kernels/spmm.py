@@ -27,7 +27,7 @@ from repro.core.streams import (
     StreamProgram,
     stream_compute,
 )
-from repro.kernels.registry import block_defaults
+from repro.kernels.registry import resolve_blocks
 
 
 # ---------------------------------------------------------------------------
@@ -69,7 +69,7 @@ def spmm_pallas(values, cols, dense, *, bm: int | None = None,
     """values/cols: (R, L); dense: (C, F) — dense must fit VMEM per block."""
     R, L = values.shape
     C, F = dense.shape
-    bm = min(bm or block_defaults("spmm")["bm"], R)
+    bm = min(resolve_blocks("spmm", bm=bm)["bm"], R)
     pad = (-R) % bm
     if pad:
         values = jnp.pad(values, ((0, pad), (0, 0)))
@@ -141,7 +141,7 @@ def bsr_spmm_pallas(
 ):
     T, bm, bk = tile_values.shape
     K, F = dense.shape
-    bf = min(bf or block_defaults("bsr_spmm")["bf"], F)
+    bf = min(resolve_blocks("bsr_spmm", bf=bf)["bf"], F)
     pad = (-F) % bf
     if pad:
         dense = jnp.pad(dense, ((0, 0), (0, pad)))

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.streams import AffineStream, StreamProgram, stream_compute
-from repro.kernels.registry import block_defaults
+from repro.kernels.registry import resolve_blocks
 
 
 def _spmspm_kernel(av_ref, ac_ref, bv_ref, br_ref, o_ref):
@@ -66,9 +66,9 @@ def spmspm_pallas(
 ):
     R, La = a_values.shape
     C, Lb = b_values.shape
-    blocks = block_defaults("spmspm")
-    bm = min(bm or blocks["bm"], R)
-    bn = min(bn or blocks["bn"], C)
+    blocks = resolve_blocks("spmspm", bm=bm, bn=bn)
+    bm = min(blocks["bm"], R)
+    bn = min(blocks["bn"], C)
     pr, pc = (-R) % bm, (-C) % bn
     if pr:
         a_values = jnp.pad(a_values, ((0, pr), (0, 0)))

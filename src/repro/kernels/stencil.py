@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.streams import AffineStream, StreamProgram, stream_compute
-from repro.kernels.registry import block_defaults
+from repro.kernels.registry import resolve_blocks
 
 
 def _stencil_kernel(prev_ref, cur_ref, next_ref, o_ref, *, offsets, weights, bx):
@@ -65,7 +65,7 @@ def stencil_pallas(
     interpret: bool = False,
 ):
     X, Y, Z = grid.shape
-    bx = min(bx or block_defaults("stencil")["bx"], X)
+    bx = min(resolve_blocks("stencil", bx=bx)["bx"], X)
     assert X % bx == 0, (X, bx)
     assert int(np.abs(offsets[:, 0]).max(initial=0)) <= bx, "dx exceeds block"
 

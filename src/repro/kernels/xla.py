@@ -24,11 +24,13 @@ from repro.kernels import registry
 
 
 def flash_attention_xla(q, k, v, *, causal=True, window=0, q_offset=0,
-                        scale=None, block_k=512):
+                        scale=None, bk=None):
     """Online-softmax over KV blocks (FlashAttention-2 dataflow in jnp).
 
-    Memory is O(Sq * block_k) per head instead of O(Sq * Sk): this is the
+    Memory is O(Sq * bk) per head instead of O(Sq * Sk): this is the
     C4 double-buffered-tile structure the paper uses, expressed as a scan.
+    ``bk`` resolves through the registry (explicit > override > default), the
+    same KV-block geometry the Pallas kernel reads.
     """
     B, H, Sq, D = q.shape
     K, Sk = k.shape[1], k.shape[2]
@@ -42,7 +44,7 @@ def flash_attention_xla(q, k, v, *, causal=True, window=0, q_offset=0,
             q, k, v, causal=causal, window=window, q_offset=q_offset,
             scale=scale,
         )
-    block_k = min(block_k, Sk)
+    block_k = min(registry.resolve_blocks("flash_attention", bk=bk)["bk"], Sk)
     pad = (-Sk) % block_k
     if pad:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
@@ -144,7 +146,8 @@ def _flash_attention_xla_unrolled(q, k, v, *, causal, window, q_offset, scale):
 # ---------------------------------------------------------------------------
 
 
-def linear_attention_xla(r, k, v, w_log, u=None, s0=None, *, chunk=32):
+def linear_attention_xla(r, k, v, w_log, u=None, s0=None, *, chunk=None):
+    chunk = registry.resolve_blocks("linear_attention", chunk=chunk)["chunk"]
     B, H, T, N = r.shape
     M = v.shape[-1]
     pad = (-T) % chunk

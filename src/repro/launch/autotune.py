@@ -1,0 +1,482 @@
+"""Measured block-size autotuner over the registry override table.
+
+Occamy's headline utilizations come from matching stream/tile geometry to the
+memory hierarchy (the C4 double-buffering discipline); mistuned tiles show up
+directly as lost FPU cycles. This module closes that loop for the TPU
+translation: per **(op, operand shapes, dtypes, backend, impl)** it
+
+1. generates candidate block geometries around the registry defaults,
+2. prunes infeasible candidates *analytically* — each candidate's
+   ``StreamProgram.vmem_bytes()`` (block footprint x double-buffering +
+   scratch) is checked against the VMEM budget before anything compiles,
+3. times the survivors through the **normal registry dispatch** (each
+   candidate is staged with ``registry.block_override`` so the measured path
+   is exactly the production path),
+4. writes the winner through ``registry.set_block_override`` — the seam the
+   registry reserved for this — and
+5. persists a JSON tuning record that later runs load deterministically
+   (``load_record`` + ``apply_record`` re-apply the selections without
+   re-searching).
+
+A candidate is only selected if it measured strictly faster than the
+default geometry, so a recorded selection is never worse than the default
+it replaced. CLI::
+
+    PYTHONPATH=src python -m repro.launch.autotune --out autotune_record.json
+
+or through the benchmark harness: ``python -m benchmarks.run --autotune``
+(also triggered by ``REPRO_AUTOTUNE=1``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.streams import StreamProgram
+from repro.kernels import ops, registry
+
+# ~16 MB/core of VMEM; the budget caps what one pipelined StreamProgram may
+# hold resident (double-buffered stream blocks + scratch)
+VMEM_BUDGET_BYTES = int(os.environ.get("REPRO_VMEM_BUDGET", 16 * 2**20))
+RECORD_VERSION = 1
+
+
+@dataclasses.dataclass
+class TuneCase:
+    """One tunable call: operands, the dispatch-level callable, the candidate
+    geometries, and the StreamProgram builder the feasibility probe uses."""
+
+    op: str
+    args: tuple  # jax array operands, passed positionally to fn
+    fn: Callable  # fn(*args) -> result, through ops.* dispatch
+    candidates: list[dict[str, int]]  # partial block dicts, merged on defaults
+    program: Callable[[dict[str, int]], StreamProgram]
+
+
+def case_key(op: str, arrays, backend: str, impl: str) -> str:
+    shapes = ",".join(
+        f"{'x'.join(map(str, a.shape))}:{a.dtype}" for a in arrays
+    )
+    return f"{op}|{shapes}|{backend}|{impl}"
+
+
+def _time_call(fn, args, *, reps: int, warmup: int = 1) -> float:
+    """Median wall-time per call in seconds (jit compile paid in warmup)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def autotune_case(
+    case: TuneCase,
+    *,
+    budget_bytes: int = VMEM_BUDGET_BYTES,
+    reps: int = 3,
+    time_candidate: Callable | None = None,
+) -> dict:
+    """Search one case. Returns the record entry (winner + full audit trail).
+
+    ``time_candidate(case, blocks)`` may be injected for tests; the default
+    jits a fresh wrapper per candidate (a shared jit cache would silently
+    reuse the first candidate's compiled geometry).
+    """
+    defaults = registry.block_defaults(case.op, overrides=False)
+
+    # normalize to full dicts, defaults first, order-preserving dedupe
+    seen, ordered = set(), []
+    for cand in [{}] + list(case.candidates):
+        full = {**defaults, **cand}
+        sig = tuple(sorted(full.items()))
+        if sig not in seen:
+            seen.add(sig)
+            ordered.append(full)
+
+    pruned, feasible = [], []
+    for full in ordered:
+        vmem = case.program(full).vmem_bytes()
+        if vmem > budget_bytes:
+            pruned.append({"blocks": full, "vmem_bytes": vmem})
+        else:
+            feasible.append(full)
+
+    if time_candidate is None:
+
+        def time_candidate(case, blocks):
+            fn = jax.jit(lambda *a: case.fn(*a))  # fresh wrapper, fresh cache
+            return _time_call(fn, case.args, reps=reps)
+
+    timed = []
+    for full in feasible:
+        with registry.block_override(case.op, **full):
+            timed.append(
+                {"blocks": full, "us_per_call": time_candidate(case, full) * 1e6}
+            )
+
+    default_entry = next(
+        (t for t in timed if t["blocks"] == defaults), None
+    )
+    # strictly-faster-than-default selection: the recorded winner is never
+    # worse than the default it replaces (ties keep the default)
+    best = default_entry or (timed[0] if timed else None)
+    for t in timed:
+        if best is None or t["us_per_call"] < best["us_per_call"]:
+            best = t
+    return {
+        "op": case.op,
+        "blocks": best["blocks"] if best else defaults,
+        "us_per_call": best["us_per_call"] if best else None,
+        "default_blocks": defaults,
+        "default_us": default_entry["us_per_call"] if default_entry else None,
+        "timed": timed,
+        "pruned": pruned,
+        "vmem_budget_bytes": budget_bytes,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Default suite: one representative call per op with a block table
+# ---------------------------------------------------------------------------
+
+
+def _gemm_case(rng) -> TuneCase:
+    from repro.kernels.gemm import gemm_program
+
+    m = k = n = 256
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+    def program(bl):
+        bm, bk, bn = min(bl["bm"], m), min(bl["bk"], k), min(bl["bn"], n)
+        return gemm_program(
+            m + (-m) % bm, n + (-n) % bn, k + (-k) % bk, bm, bn, bk,
+            a_dtype=a.dtype, b_dtype=b.dtype, out_dtype=a.dtype,
+            accum_dtype=jnp.float32,
+        )
+
+    return TuneCase(
+        "gemm", (a, b), lambda a, b: ops.gemm(a, b),
+        [{"bm": s, "bk": s, "bn": s} for s in (64, 128, 256)], program,
+    )
+
+
+def _flash_attention_case(rng) -> TuneCase:
+    from repro.kernels.flash_attention import flash_attention_program
+
+    B, H, S, D = 1, 4, 256, 64
+    q, k, v = (
+        jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+        for _ in range(3)
+    )
+
+    def program(bl):
+        bq, bk = min(bl["bq"], S), min(bl["bk"], S)
+        nq, nk = -(-S // bq), -(-S // bk)
+        return flash_attention_program(
+            B, H, 1, nq * bq, D, nq, nk, bq, bk, q.dtype, k.dtype, v.dtype,
+            scale=1.0, causal=True, window=0, q_offset=0, sk=S,
+        )
+
+    return TuneCase(
+        "flash_attention", (q, k, v),
+        lambda q, k, v: ops.flash_attention(q, k, v, causal=True),
+        [{"bk": s} for s in (32, 64, 128, 256)], program,
+    )
+
+
+def _linear_attention_case(rng) -> TuneCase:
+    from repro.kernels.rwkv6 import linear_attention_program
+
+    B, H, T, N = 1, 2, 256, 64
+    r, k, v = (
+        jnp.asarray(rng.standard_normal((B, H, T, N)), jnp.float32)
+        for _ in range(3)
+    )
+    w = jnp.asarray(-rng.uniform(0.01, 1.0, (B, H, T, N)), jnp.float32)
+
+    def program(bl):
+        chunk = min(bl["chunk"], T)
+        return linear_attention_program(
+            B * H, T + (-T) % chunk, N, N, chunk, ssd=True,
+            r_dtype=r.dtype, k_dtype=k.dtype, v_dtype=v.dtype,
+            w_dtype=w.dtype, o_dtype=v.dtype,
+        )
+
+    return TuneCase(
+        "linear_attention", (r, k, v, w),
+        lambda r, k, v, w: ops.linear_attention(r, k, v, w),
+        [{"chunk": s} for s in (8, 16, 32)], program,
+    )
+
+
+def _spmm_case(rng) -> TuneCase:
+    from repro.core.sparse import random_ell
+    from repro.kernels.spmm import ell_spmm_program
+
+    R, C, F = 512, 256, 64
+    A = random_ell(rng, R, C, 0.05)
+    dense = jnp.asarray(rng.standard_normal((C, F)), jnp.float32)
+    L = A.values.shape[1]
+
+    def program(bl):
+        bm = min(bl["bm"], R)
+        return ell_spmm_program(
+            R + (-R) % bm, L, C, F, bm, A.values.dtype, dense.dtype
+        )
+
+    return TuneCase(
+        "spmm", (A.values, A.cols, dense),
+        lambda v, c, d: ops.spmm(v, c, d),
+        [{"bm": s} for s in (32, 64, 128, 256)], program,
+    )
+
+
+def _bsr_spmm_case(rng) -> TuneCase:
+    from repro.core.sparse import dense_to_bsr
+    from repro.kernels.spmm import bsr_spmm_program
+
+    R, K, F = 256, 256, 512
+    mat = np.zeros((R, K), np.float32)
+    mask = rng.random((R, K)) < 0.05
+    mat[mask] = rng.standard_normal(mask.sum())
+    A = dense_to_bsr(mat, bm=8, bk=128)
+    dense = jnp.asarray(rng.standard_normal((K, F)), jnp.float32)
+    T, bm, bk = A.tile_values.shape
+
+    def program(bl):
+        bf = min(bl["bf"], F)
+        return bsr_spmm_program(
+            A.tile_rows, A.tile_cols, T, bm, bk, bf, F + (-F) % bf, R,
+            A.tile_values.dtype, dense.dtype,
+        )
+
+    return TuneCase(
+        "bsr_spmm", (A.tile_values, A.tile_rows, A.tile_cols, dense),
+        lambda tv, tr, tc, d: ops.bsr_spmm(tv, tr, tc, d, R),
+        [{"bf": s} for s in (128, 256, 512)], program,
+    )
+
+
+def _spmspm_case(rng) -> TuneCase:
+    from repro.core.sparse import random_ell
+    from repro.kernels.spmspm import spmspm_program
+
+    R, C, K = 128, 128, 256
+    A = random_ell(rng, R, K, 0.05)
+    B = random_ell(rng, C, K, 0.05)
+    La, Lb = A.values.shape[1], B.values.shape[1]
+
+    def program(bl):
+        bm, bn = min(bl["bm"], R), min(bl["bn"], C)
+        return spmspm_program(
+            R + (-R) % bm, C + (-C) % bn, La, Lb, bm, bn,
+            A.values.dtype, B.values.dtype,
+        )
+
+    return TuneCase(
+        "spmspm", (A.values, A.cols, B.values, B.cols),
+        lambda av, ac, bv, br: ops.spmspm(av, ac, bv, br, K),
+        [{"bm": m, "bn": n} for m in (8, 16, 32) for n in (64, 128)], program,
+    )
+
+
+def _stencil_case(rng) -> TuneCase:
+    from repro.kernels.stencil import stencil_program
+
+    X, Y, Z = 64, 32, 32
+    grid = jnp.asarray(rng.standard_normal((X, Y, Z)), jnp.float32)
+    offsets = np.array(
+        [(0, 0, 0), (1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0),
+         (0, 0, 1), (0, 0, -1)], np.int32,
+    )
+    weights = np.full(len(offsets), 1.0 / len(offsets), np.float32)
+
+    def program(bl):
+        bx = min(bl["bx"], X)
+        return stencil_program(X, Y, Z, bx, offsets, weights, grid.dtype)
+
+    return TuneCase(
+        "stencil", (grid,),
+        lambda g: ops.stencil(g, offsets, weights),
+        [{"bx": s} for s in (4, 8, 16, 32)], program,
+    )
+
+
+DEFAULT_SUITE: dict[str, Callable] = {
+    "gemm": _gemm_case,
+    "flash_attention": _flash_attention_case,
+    "linear_attention": _linear_attention_case,
+    "spmm": _spmm_case,
+    "bsr_spmm": _bsr_spmm_case,
+    "spmspm": _spmspm_case,
+    "stencil": _stencil_case,
+}
+
+
+# ---------------------------------------------------------------------------
+# Record: search, persist, deterministic re-apply
+# ---------------------------------------------------------------------------
+
+
+def autotune(
+    ops_subset=None,
+    *,
+    budget_bytes: int = VMEM_BUDGET_BYTES,
+    reps: int = 3,
+    seed: int = 0,
+    suite: dict[str, Callable] | None = None,
+) -> dict:
+    """Search every suite case and return the tuning record (winners are NOT
+    yet applied — call ``apply_record``)."""
+    suite = DEFAULT_SUITE if suite is None else suite
+    if ops_subset:
+        unknown = set(ops_subset) - set(suite)
+        if unknown:
+            raise KeyError(
+                f"unknown autotune ops {sorted(unknown)}; known: {sorted(suite)}"
+            )
+    backend = jax.default_backend()
+    impl = registry.resolve_impl(None)
+    rng = np.random.default_rng(seed)
+    entries = {}
+    for name, factory in suite.items():
+        if ops_subset and name not in ops_subset:
+            continue
+        case = factory(rng)
+        entry = autotune_case(case, budget_bytes=budget_bytes, reps=reps)
+        entries[case_key(case.op, case.args, backend, impl)] = entry
+    return {
+        "version": RECORD_VERSION,
+        "backend": backend,
+        "impl": impl,
+        "entries": entries,
+    }
+
+
+def save_record(record: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_record(path: str) -> dict:
+    with open(path) as f:
+        record = json.load(f)
+    if record.get("version") != RECORD_VERSION:
+        raise ValueError(
+            f"{path}: tuning record version {record.get('version')!r} != "
+            f"{RECORD_VERSION}; re-run the autotuner"
+        )
+    return record
+
+
+def record_matches_environment(record: dict) -> bool:
+    """Was this record tuned for the current (backend, impl)? Geometry tuned
+    for one impl is not evidence about another."""
+    return (
+        record.get("backend") == jax.default_backend()
+        and record.get("impl") == registry.resolve_impl(None)
+    )
+
+
+def apply_record(record: dict, *, force: bool = False) -> dict[str, dict[str, int]]:
+    """Write every recorded winner through ``registry.set_block_override``
+    (deterministic: no timing, no search). Returns {op: blocks} applied.
+
+    Raises if the record was tuned for a different backend/impl than the one
+    currently dispatching — applying it would silently mistune, the exact
+    bug class the tuner exists to remove. ``force=True`` overrides.
+    """
+    if not force and not record_matches_environment(record):
+        raise ValueError(
+            f"tuning record is for backend={record.get('backend')!r} "
+            f"impl={record.get('impl')!r} but this session dispatches "
+            f"backend={jax.default_backend()!r} "
+            f"impl={registry.resolve_impl(None)!r}; re-run the autotuner "
+            f"(or pass force=True)"
+        )
+    applied = {}
+    for entry in record["entries"].values():
+        blocks = {k: int(v) for k, v in entry["blocks"].items()}
+        registry.set_block_override(entry["op"], **blocks)
+        applied[entry["op"]] = blocks
+    return applied
+
+
+def record_deltas(record: dict) -> dict[str, dict]:
+    """Tuned-vs-default summary per op: the perf-harness reporting view."""
+    out = {}
+    for entry in record["entries"].values():
+        tuned, default = entry["us_per_call"], entry["default_us"]
+        delta = (
+            (tuned - default) / default * 100.0
+            if tuned is not None and default
+            else None
+        )
+        out[entry["op"]] = {
+            "blocks": entry["blocks"],
+            "default_blocks": entry["default_blocks"],
+            "us_per_call": tuned,
+            "default_us": default,
+            "delta_pct": delta,
+            "non_default": entry["blocks"] != entry["default_blocks"],
+        }
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="benchmark-driven block-size autotuner; persists a JSON "
+        "tuning record later runs load deterministically"
+    )
+    ap.add_argument("--out", default="autotune_record.json")
+    ap.add_argument("--ops", default=None,
+                    help=f"comma-separated subset of {sorted(DEFAULT_SUITE)}")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--budget-bytes", type=int, default=VMEM_BUDGET_BYTES)
+    ap.add_argument("--impl", default=None,
+                    help="pin a registry impl for the search (default: the "
+                    "normal dispatch resolution)")
+    args = ap.parse_args(argv)
+
+    subset = args.ops.split(",") if args.ops else None
+    with registry.default_impl(args.impl):
+        record = autotune(
+            subset, budget_bytes=args.budget_bytes, reps=args.reps
+        )
+    save_record(record, args.out)
+    print(f"wrote {args.out}")
+    for op, d in sorted(record_deltas(record).items()):
+        tuned_us = (
+            "n/a (all candidates pruned)" if d["us_per_call"] is None
+            else f"{d['us_per_call']:.1f}us"
+        )
+        default_us = (
+            "n/a" if d["default_us"] is None else f"{d['default_us']:.1f}us"
+        )
+        delta = (
+            "n/a" if d["delta_pct"] is None else f"{d['delta_pct']:+.1f}%"
+        )
+        print(
+            f"{op}: {d['blocks']} {tuned_us} "
+            f"(default {d['default_blocks']} {default_us}, delta {delta})"
+        )
+
+
+if __name__ == "__main__":
+    main()

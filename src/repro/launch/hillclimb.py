@@ -1,5 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# append, don't clobber: the caller's own XLA_FLAGS must survive, including
+# a caller-chosen device count (XLA parses last-wins, so match by flag name)
+_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+_existing = os.environ.get("XLA_FLAGS", "")
+if not any(t.split("=", 1)[0] == _DEVICE_FLAG for t in _existing.split()):
+    os.environ["XLA_FLAGS"] = f"{_existing} {_DEVICE_FLAG}=512".strip()
 
 # isort: split
 import argparse
@@ -36,14 +42,28 @@ def main():
                     help="cfg overrides, e.g. tp_reduce_bf16=True")
     ap.add_argument("--skip-full", action="store_true",
                     help="cost probes only (skip the full-depth compile)")
+    ap.add_argument("--autotune-record", default=None,
+                    help="apply a block-size tuning record "
+                         "(repro.launch.autotune) before lowering and attach "
+                         "the tuned-vs-default us_per_call deltas")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+
+    autotune = None
+    if args.autotune_record:
+        from repro.launch import autotune as at
+
+        record = at.load_record(args.autotune_record)
+        at.apply_record(record)  # deterministic: no re-search
+        autotune = at.record_deltas(record)
 
     overrides = dict(parse_override(s) for s in args.set)
     cfg = get_config(args.arch).replace(**overrides)
     res = lower_cell(args.arch, args.shape, multi_pod=False,
                      cfg_override=cfg, skip_full=args.skip_full)
     res["overrides"] = overrides
+    if autotune is not None:
+        res["autotune"] = autotune
     line = json.dumps(res)
     print(line)
     if args.out:

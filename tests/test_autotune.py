@@ -1,0 +1,199 @@
+"""Autotuner tests: the VMEM feasibility model, candidate pruning, the
+never-worse-than-default selection rule, and the tuning-record round trip."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import registry
+from repro.launch import autotune as at
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry_state():
+    yield
+    registry.set_default_impl(None)
+    registry.clear_block_overrides()
+
+
+def _rng():
+    return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# VMEM feasibility model
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_bytes_gemm_arithmetic():
+    from repro.kernels.gemm import gemm_program
+
+    prog = gemm_program(
+        256, 256, 256, 128, 128, 128,
+        a_dtype=jnp.float32, b_dtype=jnp.float32,
+        out_dtype=jnp.float32, accum_dtype=jnp.float32,
+    )
+    tile = 128 * 128 * 4
+    # three double-buffered f32 tile streams + one f32 accumulator scratch
+    assert prog.vmem_bytes() == 3 * 2 * tile + tile
+
+
+def test_vmem_bytes_counts_scratch_dtype():
+    from repro.kernels.flash_attention import flash_attention_program
+
+    prog = flash_attention_program(
+        1, 1, 1, 64, 8, 4, 4, 16, 16, jnp.float32, jnp.float32, jnp.float32,
+        scale=1.0, causal=True, window=0, q_offset=0, sk=64,
+    )
+    streams = 2 * (16 * 8 * 4) * 4  # q, k, v, o blocks double-buffered
+    scratch = (16 * 1 + 16 * 1 + 16 * 8) * 4  # m, l, acc f32 scratch
+    assert prog.vmem_bytes() == streams + scratch
+
+
+# ---------------------------------------------------------------------------
+# Search: pruning + selection
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_prunes_infeasible_before_timing():
+    case = at.DEFAULT_SUITE["gemm"](_rng())
+    timed_blocks = []
+
+    def fake_time(case_, blocks):
+        timed_blocks.append(dict(blocks))
+        return 1.0
+
+    # 500 kB budget: the 256-cube default (1.8 MB) is infeasible, 64/128 fit
+    entry = at.autotune_case(
+        case, budget_bytes=500_000, time_candidate=fake_time
+    )
+    assert any(p["blocks"]["bm"] == 256 for p in entry["pruned"])
+    assert all(p["vmem_bytes"] > 500_000 for p in entry["pruned"])
+    assert all(b["bm"] != 256 for b in timed_blocks)  # never compiled/timed
+    assert entry["default_us"] is None  # default itself was infeasible
+    assert entry["blocks"]["bm"] in (64, 128)
+
+
+def test_autotune_selection_never_worse_than_default():
+    case = at.DEFAULT_SUITE["gemm"](_rng())
+
+    # default (256-cube) measures fastest: selection must keep it
+    entry = at.autotune_case(
+        case, time_candidate=lambda c, b: float(1000 - b["bm"]),
+    )
+    assert entry["blocks"] == entry["default_blocks"]
+    assert entry["us_per_call"] == entry["default_us"]
+
+    # a non-default candidate measures fastest: selection takes it, and the
+    # recorded tuned time is never above the default's
+    entry = at.autotune_case(
+        case, time_candidate=lambda c, b: float(b["bm"]),
+    )
+    assert entry["blocks"]["bm"] == 64
+    assert entry["us_per_call"] <= entry["default_us"]
+
+
+def test_autotune_restores_overrides_after_search():
+    case = at.DEFAULT_SUITE["gemm"](_rng())
+    registry.set_block_override("gemm", bm=128)
+    at.autotune_case(case, time_candidate=lambda c, b: 1.0)
+    # the search staged candidates through block_override scopes only
+    assert registry.block_defaults("gemm")["bm"] == 128
+
+
+# ---------------------------------------------------------------------------
+# Record: save/load/apply round trip
+# ---------------------------------------------------------------------------
+
+
+def _toy_record():
+    rng = _rng()
+    entries = {}
+    for name in ("gemm", "flash_attention"):
+        case = at.DEFAULT_SUITE[name](rng)
+        entries[at.case_key(case.op, case.args, "cpu", "xla")] = (
+            at.autotune_case(
+                case,
+                time_candidate=lambda c, b: float(sum(b.values())),
+            )
+        )
+    return {"version": at.RECORD_VERSION, "backend": "cpu", "impl": "xla",
+            "entries": entries}
+
+
+def test_record_roundtrip_applies_same_selections(tmp_path):
+    record = _toy_record()
+    path = str(tmp_path / "rec.json")
+    at.save_record(record, path)
+    loaded = at.load_record(path)
+    assert loaded == json.loads(json.dumps(record))  # JSON-stable
+
+    registry.clear_block_overrides()
+    applied = at.apply_record(loaded)
+    # reloading reproduces the exact selections, through the override seam
+    assert applied == {
+        e["op"]: e["blocks"] for e in record["entries"].values()
+    }
+    for e in record["entries"].values():
+        assert registry.block_defaults(e["op"]) == e["blocks"]
+
+
+def test_apply_record_rejects_foreign_environment():
+    record = _toy_record()
+    record["backend"] = "tpu"  # tuned elsewhere
+    with pytest.raises(ValueError, match="re-run the autotuner"):
+        at.apply_record(record)
+    assert registry.block_defaults("gemm", overrides=True) == \
+        registry.block_defaults("gemm", overrides=False)  # nothing applied
+    at.apply_record(record, force=True)  # explicit escape hatch works
+
+
+def test_autotune_rejects_unknown_ops_subset():
+    with pytest.raises(KeyError, match="unknown autotune ops"):
+        at.autotune(["gemmm"], suite=at.DEFAULT_SUITE)
+
+
+def test_all_pruned_entry_survives_reporting():
+    case = at.DEFAULT_SUITE["gemm"](_rng())
+    entry = at.autotune_case(
+        case, budget_bytes=1, time_candidate=lambda c, b: 1.0
+    )
+    assert entry["timed"] == [] and entry["us_per_call"] is None
+    assert entry["blocks"] == entry["default_blocks"]  # falls back to default
+    record = {"version": at.RECORD_VERSION, "backend": "cpu", "impl": "xla",
+              "entries": {"k": entry}}
+    deltas = at.record_deltas(record)  # must not crash on None times
+    assert deltas["gemm"]["us_per_call"] is None
+    assert deltas["gemm"]["delta_pct"] is None
+
+
+def test_load_record_rejects_unknown_version(tmp_path):
+    record = _toy_record()
+    record["version"] = 99
+    path = str(tmp_path / "bad.json")
+    at.save_record(record, path)
+    with pytest.raises(ValueError, match="version"):
+        at.load_record(path)
+
+
+def test_record_deltas_math():
+    record = _toy_record()
+    for e in record["entries"].values():  # synthetic, deterministic times
+        e["us_per_call"], e["default_us"] = 50.0, 100.0
+        e["blocks"] = dict(e["default_blocks"], **{"bm": 1}) \
+            if "bm" in e["default_blocks"] else e["blocks"]
+    deltas = at.record_deltas(record)
+    for op, d in deltas.items():
+        assert d["delta_pct"] == -50.0
+        assert d["us_per_call"] <= d["default_us"]
+    assert deltas["gemm"]["non_default"]
+
+
+def test_case_key_is_shape_and_dtype_specific():
+    a = jnp.zeros((4, 8), jnp.float32)
+    b = jnp.zeros((4, 8), jnp.bfloat16)
+    k1 = at.case_key("gemm", (a,), "cpu", "xla")
+    k2 = at.case_key("gemm", (b,), "cpu", "xla")
+    assert k1 != k2
+    assert "4x8" in k1 and "float32" in k1 and "cpu" in k1 and "xla" in k1

@@ -1,5 +1,7 @@
 """Dispatch-layer and formats-layer tests: kernel registry resolution,
 pytree sparse formats, and the StreamProgram substrate metadata."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -102,6 +104,178 @@ def test_block_override_feeds_kernels(rng):
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
 
 
+def test_resolve_blocks_precedence():
+    # default layer
+    assert registry.resolve_blocks("gemm")["bm"] == 256
+    # override layer beats default
+    registry.set_block_override("gemm", bm=128)
+    assert registry.resolve_blocks("gemm")["bm"] == 128
+    # explicit kwarg beats override; None falls through
+    resolved = registry.resolve_blocks("gemm", bm=64, bk=None)
+    assert resolved == {"bm": 64, "bk": 256, "bn": 256}
+    with pytest.raises(ValueError, match="no block parameters"):
+        registry.resolve_blocks("gemm", bogus=1)
+    with pytest.raises(KeyError, match="no block-size table"):
+        registry.resolve_blocks("gem")
+
+
+def test_block_override_scoped_context():
+    registry.set_block_override("gemm", bm=128)
+    with registry.block_override("gemm", bm=32, bk=32):
+        assert registry.block_defaults("gemm")["bm"] == 32
+        assert registry.block_defaults("gemm")["bk"] == 32
+    # prior override restored exactly, including the untouched key
+    assert registry.block_defaults("gemm") == {"bm": 128, "bk": 256, "bn": 256}
+    registry.clear_block_overrides("gemm")
+    with registry.block_override("gemm", bm=32):
+        pass
+    assert registry.block_defaults("gemm")["bm"] == 256  # no leak
+
+
+def _observed_grid(monkeypatch, module_name, call):
+    """Run ``call`` with the kernel module's stream_compute spied on and
+    return the StreamProgram grid that actually executed."""
+    import importlib
+
+    from repro.core import streams
+
+    mod = importlib.import_module(module_name)
+    captured = {}
+    orig = streams.stream_compute
+
+    def spy(program, *operands, **kw):
+        captured["grid"] = program.grid
+        return orig(program, *operands, **kw)
+
+    monkeypatch.setattr(mod, "stream_compute", spy)
+    call()
+    return captured["grid"]
+
+
+def _geometry_cases(rng):
+    """(op, kernel module, override, expected grid, call) for every op in the
+    block table: the override must change the actually-executed geometry."""
+    f32 = jnp.float32
+    a = jnp.asarray(rng.standard_normal((64, 64)), f32)
+    qkv = [jnp.asarray(rng.standard_normal((1, 2, 64, 8)), f32)
+           for _ in range(3)]
+    rkvw = [jnp.asarray(rng.standard_normal((1, 1, 64, 8)), f32)
+            for _ in range(3)] + [
+        jnp.asarray(-rng.uniform(0.01, 1.0, (1, 1, 64, 8)), f32)]
+    ellA = sp.random_ell(rng, 64, 32, 0.1)
+    spd = jnp.asarray(rng.standard_normal((32, 8)), f32)
+    bsr_dense = np.zeros((16, 256), np.float32)
+    bsr_dense[::3, ::17] = 1.0
+    bsrA = sp.dense_to_bsr(bsr_dense, bm=8, bk=128)
+    bsr_rhs = jnp.asarray(rng.standard_normal((256, 64)), f32)
+    iA, iB = sp.random_ell(rng, 32, 64, 0.1), sp.random_ell(rng, 64, 64, 0.1)
+    grid3 = jnp.asarray(rng.standard_normal((16, 8, 8)), f32)
+    offs = np.array([(0, 0, 0), (1, 0, 0)], np.int32)
+    w = np.array([0.5, 0.5], np.float32)
+    T = len(bsrA.tile_rows)
+    return [
+        ("gemm", "repro.kernels.gemm", dict(bm=16, bk=32, bn=16), (4, 4, 2),
+         lambda: ops.gemm(a, a, impl="interpret")),
+        ("flash_attention", "repro.kernels.flash_attention",
+         dict(bq=16, bk=32), (1, 2, 4, 2),
+         lambda: ops.flash_attention(*qkv, impl="interpret")),
+        ("linear_attention", "repro.kernels.rwkv6", dict(chunk=16), (1, 4),
+         lambda: ops.linear_attention(*rkvw, impl="interpret")),
+        ("spmm", "repro.kernels.spmm", dict(bm=16), (4,),
+         lambda: ops.spmm(ellA, spd, impl="interpret")),
+        ("bsr_spmm", "repro.kernels.spmm", dict(bf=32), (2, T),
+         lambda: ops.bsr_spmm(bsrA, bsr_rhs, impl="interpret")),
+        ("spmspm", "repro.kernels.spmspm", dict(bm=16, bn=32), (2, 2),
+         lambda: ops.spmspm(iA, iB, 64, impl="interpret")),
+        ("stencil", "repro.kernels.stencil", dict(bx=4), (4,),
+         lambda: ops.stencil(grid3, offs, w, impl="interpret")),
+    ]
+
+
+def test_block_override_changes_geometry_for_every_op(rng, monkeypatch):
+    cases = _geometry_cases(rng)
+    assert {c[0] for c in cases} == set(registry._BLOCK_DEFAULTS)
+    for op, module, override, want_grid, call in cases:
+        registry.clear_block_overrides()
+        registry.set_block_override(op, **override)
+        got = _observed_grid(monkeypatch, module, call)
+        assert got == want_grid, (op, got, want_grid)
+
+
+def test_flash_attention_override_reaches_xla_impl(rng, monkeypatch):
+    """Split-brain regression: set_block_override and an explicit arg must
+    reach the xla impl identically (the old ops.py block_k=512 literal only
+    reached xla, and pallas silently ignored block_k=)."""
+    import repro.kernels.xla as xla_mod
+
+    q = jnp.asarray(rng.standard_normal((1, 2, 64, 8)), jnp.float32)
+    captured = {}
+    orig = xla_mod.flash_attention_xla
+
+    def spy(*a, **kw):
+        captured["bk"] = kw.get("bk")
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(xla_mod, "flash_attention_xla", spy)
+    registry.set_block_override("flash_attention", bk=16)
+    ops.flash_attention(q, q, q, impl="xla")
+    assert captured["bk"] == 16
+    ops.flash_attention(q, q, q, impl="xla", bk=32)  # explicit beats override
+    assert captured["bk"] == 32
+    ops.flash_attention(q, q, q, impl="xla", block_k=8)  # historical alias
+    assert captured["bk"] == 8
+    with pytest.raises(TypeError, match="disagree"):
+        ops.flash_attention(q, q, q, impl="xla", bk=8, block_k=16)
+
+
+def test_flash_attention_explicit_bk_same_result_across_impls(rng):
+    q = jnp.asarray(rng.standard_normal((1, 2, 64, 8)), jnp.float32)
+    want = ops.flash_attention(q, q, q, impl="ref")
+    got_xla = ops.flash_attention(q, q, q, impl="xla", bk=16)
+    got_int = ops.flash_attention(q, q, q, impl="interpret", bk=16)
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_int), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_block_resolution_single_path():
+    """Grep-style invariant: ops.py carries no block-size literals; every
+    block-tabled op resolves through registry.resolve_blocks; no kernel impl
+    module keeps private block_defaults plumbing."""
+    import inspect
+    import pathlib
+    import re
+
+    src = inspect.getsource(ops)
+    assert not re.search(r"\b(block_k|bq|bk|bm|bn|bf|bx|chunk)\s*=\s*\d", src)
+    for op in registry._BLOCK_DEFAULTS:
+        assert f'resolve_blocks("{op}"' in src, op
+    kdir = pathlib.Path(ops.__file__).parent
+    for mod in ("gemm", "flash_attention", "spmm", "spmspm", "stencil",
+                "rwkv6", "xla"):
+        text = (kdir / f"{mod}.py").read_text()
+        assert "block_defaults" not in text, mod
+
+
+def test_default_impl_context_manager():
+    assert registry.resolve_impl(None) in ("pallas", "xla")  # auto
+    with registry.default_impl("ref"):
+        assert registry.resolve_impl(None) == "ref"
+        with registry.default_impl("interpret"):
+            assert registry.resolve_impl(None) == "interpret"
+        assert registry.resolve_impl(None) == "ref"
+    assert registry.resolve_impl(None) in ("pallas", "xla")  # restored
+    with pytest.raises(ValueError, match="unknown impl"):
+        with registry.default_impl("cuda"):
+            pass
+    # a raise inside the scope still restores
+    with pytest.raises(RuntimeError):
+        with registry.default_impl("ref"):
+            raise RuntimeError
+    assert registry.resolve_impl(None) in ("pallas", "xla")
+
+
 # ---------------------------------------------------------------------------
 # Formats: pytree round trips (including all-zero rows)
 # ---------------------------------------------------------------------------
@@ -164,6 +338,54 @@ def test_dense_to_ell_honors_wide_max_nnz(rng):
     A = sp.dense_to_ell(dense, max_nnz=12)  # wider than the matrix itself
     assert A.values.shape == (4, 12) and A.cols.shape == (4, 12)
     np.testing.assert_allclose(np.asarray(A.todense()), dense)
+
+
+def test_dense_to_ell_rejects_narrow_max_nnz():
+    # row 1 has 5 nonzeros; a narrower max_nnz must be loud, never a silent
+    # drop of the overflow entries
+    dense = np.zeros((3, 8), np.float32)
+    dense[1, :5] = 1.0
+    dense[2, :2] = 1.0
+    with pytest.raises(ValueError, match=r"row 1 has 5 nonzeros > max_nnz=3"):
+        sp.dense_to_ell(dense, max_nnz=3)
+    # exactly-fitting width still works
+    np.testing.assert_allclose(
+        np.asarray(sp.dense_to_ell(dense, max_nnz=5).todense()), dense
+    )
+
+
+def test_csr_to_ell_rejects_narrow_max_nnz():
+    dense = np.zeros((4, 8), np.float32)
+    dense[2, :6] = 2.0
+    csr = sp.dense_to_csr(dense)
+    with pytest.raises(ValueError, match=r"row 2 has 6 nonzeros > max_nnz=4"):
+        sp.csr_to_ell(csr, max_nnz=4)
+    np.testing.assert_allclose(
+        np.asarray(sp.csr_to_ell(csr, max_nnz=6).todense()), dense
+    )
+
+
+def test_hillclimb_appends_xla_flags(monkeypatch):
+    """Regression: hillclimb used to clobber any caller-set XLA_FLAGS."""
+    import importlib
+
+    import repro.launch.hillclimb as hc
+
+    monkeypatch.setenv("XLA_FLAGS", "--xla_dump_to=/tmp/x")
+    importlib.reload(hc)
+    flags = os.environ["XLA_FLAGS"].split()
+    assert "--xla_dump_to=/tmp/x" in flags
+    assert "--xla_force_host_platform_device_count=512" in flags
+    importlib.reload(hc)  # idempotent: appending twice adds nothing
+    assert os.environ["XLA_FLAGS"].split().count(
+        "--xla_force_host_platform_device_count=512"
+    ) == 1
+    # a caller-chosen device count survives untouched (no conflicting append)
+    monkeypatch.setenv(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+    )
+    importlib.reload(hc)
+    assert os.environ["XLA_FLAGS"] == "--xla_force_host_platform_device_count=8"
 
 
 def test_formats_are_pytrees(rng):

@@ -1,0 +1,93 @@
+"""Fig. 13 made executable: per-op sharded-vs-single-device rows.
+
+For every op with a PartitionRule, times the op once on a single device and
+once partitioned over the host mesh (``--mesh DxM`` on benchmarks/run.py) —
+same ``ops.*`` signature, the mesh passed as a kwarg. ``derived`` carries the
+speedup, the plan note (which logical axis split, which collective fired),
+and the topology-model D2D seconds for the plan's collectives, so the
+measured-vs-model comparison of the scaling story sits in one CSV row.
+
+CPU caveat: forced host devices share the machine, so wall-clock speedups
+are NOT the point here — numerical agreement and the collective schedule
+are; the model column carries the bandwidth-scaled expectation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import sparse as sp
+from repro.kernels import ops, partition
+from repro.launch import roofline
+
+
+def _cases(rng):
+    """(op, call(mesh) -> out, plan_args, plan_kwargs) per partitioned op."""
+    f32 = jnp.float32
+    a = jnp.asarray(rng.standard_normal((256, 256)), f32)
+    b = jnp.asarray(rng.standard_normal((256, 256)), f32)
+    q = jnp.asarray(rng.standard_normal((1, 8, 256, 64)), f32)
+    k = jnp.asarray(rng.standard_normal((1, 8, 256, 64)), f32)
+    v = jnp.asarray(rng.standard_normal((1, 8, 256, 64)), f32)
+    qd = jnp.asarray(rng.standard_normal((8, 8, 64)), f32)
+    kd = jnp.asarray(rng.standard_normal((8, 8, 512, 64)), f32)
+    vd = jnp.asarray(rng.standard_normal((8, 8, 512, 64)), f32)
+    pos = jnp.full((8,), 511, jnp.int32)
+    r = jnp.asarray(rng.standard_normal((1, 8, 512, 32)), f32)
+    wl = jnp.asarray(-rng.uniform(0.01, 1.0, (1, 8, 512, 32)), f32)
+    ell = sp.random_ell(rng, 1024, 1024, 0.02)
+    dn = jnp.asarray(rng.standard_normal((1024, 64)), f32)
+    bsr_dense = np.zeros((128, 1024), np.float32)
+    bsr_dense[::2, ::9] = 1.0
+    bsrA = sp.dense_to_bsr(bsr_dense, bm=8, bk=128)
+    brhs = jnp.asarray(rng.standard_normal((1024, 64)), f32)
+    sA = sp.random_ell(rng, 256, 512, 0.05)
+    sB = sp.random_ell(rng, 256, 512, 0.05)
+    grid = jnp.asarray(rng.standard_normal((64, 32, 32)), f32)
+    offs = np.array([(0, 0, 0), (1, 0, 0), (-1, 0, 0), (0, 1, 0),
+                     (0, 0, 1)], np.int32)
+    w = np.full((5,), 0.2, np.float32)
+    return [
+        ("gemm", lambda m: ops.gemm(a, b, mesh=m), (a, b), {}),
+        ("flash_attention", lambda m: ops.flash_attention(q, k, v, mesh=m),
+         (q, k, v), {}),
+        ("decode_attention",
+         lambda m: ops.decode_attention(qd, kd, vd, pos, mesh=m),
+         (qd, kd, vd, pos), {}),
+        ("linear_attention",
+         lambda m: ops.linear_attention(r, r, r, wl, mesh=m)[0],
+         (r, r, r, wl), {}),
+        ("spmm", lambda m: ops.spmm(ell, dn, mesh=m),
+         (ell.values, ell.cols, dn), {}),
+        ("bsr_spmm", lambda m: ops.bsr_spmm(bsrA, brhs, mesh=m),
+         (bsrA.tile_values, bsrA.tile_rows, bsrA.tile_cols, brhs),
+         {"num_rows": bsrA.shape[0]}),
+        ("spmspm", lambda m: ops.spmspm(sA, sB, 512, mesh=m),
+         (sA.values, sA.cols, sB.values, sB.cols), {"contraction_dim": 512}),
+        ("stencil", lambda m: ops.stencil(grid, offs, w, mesh=m),
+         (grid,), {"offsets": offs, "weights": w}),
+    ]
+
+
+def run(mesh=None):
+    if mesh is None:
+        return  # no --mesh: the sharded rows need a multi-device host mesh
+    rng = np.random.default_rng(0)
+    ax = partition.partition_axis(mesh)
+    for op, call, plan_args, plan_kwargs in _cases(rng):
+        plan = partition.plan_for(op, mesh, *plan_args, **plan_kwargs)
+        note = plan.note.replace(",", ";") if plan else "replicated"
+        d2d = roofline.plan_collective_seconds(plan)
+        f_single = jax.jit(lambda c=call: c(None))
+        f_shard = jax.jit(lambda c=call: c(mesh))
+        t_single = timeit(f_single, reps=3)
+        t_shard = timeit(f_shard, reps=3)
+        err = float(
+            jnp.max(jnp.abs(jnp.asarray(f_shard()) - jnp.asarray(f_single())))
+        )
+        row(
+            f"mesh_{op}", t_shard,
+            f"single_us={t_single * 1e6:.1f};speedup={t_single / t_shard:.2f}x;"
+            f"axis={ax}x{mesh.shape[ax]};{note};"
+            f"d2d_model={d2d * 1e6:.2f}us;max_err={err:.1e}",
+        )

@@ -14,16 +14,28 @@ exists it is loaded and applied deterministically — no re-search — otherwise
 the search runs and persists it. Tuned-vs-default ``us_per_call`` deltas are
 emitted as ``autotune_<op>`` CSV rows, and the benchmarks then run under the
 tuned overrides.
+
+``--mesh DxM`` backs a (data, model) mesh with forced host-platform devices
+(the flag must be decided before jax imports, which is why argument parsing
+precedes the jax import here) and emits per-op sharded-vs-single rows
+(benchmarks/bench_mesh.py). ``--mesh-only`` stops after those rows (CI
+smoke for the multi-device job).
 """
 import argparse
 import os
 
 
+def _parse_mesh(spec: str) -> tuple[int, int]:
+    try:
+        d, m = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh expects DxM (e.g. 2x4), got {spec!r}")
+    if d < 1 or m < 1:
+        raise SystemExit(f"--mesh axes must be >= 1, got {spec!r}")
+    return d, m
+
+
 def main(argv=None) -> None:
-    import jax
-
-    from repro.kernels import registry
-
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--autotune", action="store_true",
                     help="tune block sizes first (or load the existing record)")
@@ -31,7 +43,28 @@ def main(argv=None) -> None:
     ap.add_argument("--autotune-reps", type=int, default=3)
     ap.add_argument("--autotune-only", action="store_true",
                     help="emit the autotune rows and stop (CI smoke)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="(data, model) mesh for the sharded-vs-single rows; "
+                         "forces DxM host devices on CPU")
+    ap.add_argument("--mesh-only", action="store_true",
+                    help="emit the mesh rows and stop (CI smoke)")
     args = ap.parse_args(argv)
+    if args.mesh_only and not args.mesh:
+        raise SystemExit("--mesh-only needs --mesh DxM")
+
+    mesh_shape = _parse_mesh(args.mesh) if args.mesh else None
+    if mesh_shape is not None:
+        n = mesh_shape[0] * mesh_shape[1]
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count={n}"
+            ).strip()
+
+    import jax
+
+    from repro.kernels import registry
+
     tune = (args.autotune or args.autotune_only
             or os.environ.get("REPRO_AUTOTUNE") == "1")
 
@@ -73,6 +106,20 @@ def main(argv=None) -> None:
                     flush=True,
                 )
             if args.autotune_only:
+                return
+
+        if mesh_shape is not None:
+            from benchmarks import bench_mesh
+            from repro.launch.mesh import make_mesh
+
+            n = mesh_shape[0] * mesh_shape[1]
+            if jax.device_count() < n:
+                raise SystemExit(
+                    f"--mesh {args.mesh} needs {n} devices, have "
+                    f"{jax.device_count()} (is XLA_FLAGS already set?)"
+                )
+            bench_mesh.run(make_mesh(mesh_shape, ("data", "model")))
+            if args.mesh_only:
                 return
 
         from benchmarks import (bench_d2d, bench_gcn, bench_gemm, bench_gptj,

@@ -19,6 +19,12 @@ Block geometry resolves the same way for every op, in exactly one place:
 passes identical resolved sizes to whichever impl runs, so an explicit
 ``bk=`` and a ``set_block_override`` behave the same under pallas,
 interpret, and xla alike — no impl carries its own block literal.
+
+Partitioning is the third dispatch axis (kernels/partition.py): every op
+accepts ``mesh=`` (or picks the mesh up from ``sharding.use_mesh``) and the
+dispatcher resolves the op's PartitionRule once per call, wrapping whichever
+registered impl runs in ``shard_map`` — same public signature, sharded
+execution, replication fallback on indivisible shapes.
 """
 from __future__ import annotations
 
@@ -36,6 +42,20 @@ from repro.kernels.registry import (  # re-exported: the public dispatch API
     set_default_impl,
 )
 
+
+def _dispatch(op, *args, mesh=None, impl=None, **kwargs):
+    """The one mesh-aware dispatch seam: explicit ``mesh=`` kwarg, else the
+    ``sharding.use_mesh`` context, else plain single-device kernel_call."""
+    from repro.kernels import partition
+
+    if mesh is None:
+        from repro.parallel import sharding as _sh
+
+        mesh = _sh.kernel_mesh()
+    if mesh is not None:
+        return partition.sharded_call(op, mesh, *args, impl=impl, **kwargs)
+    return kernel_call(op, *args, impl=impl, **kwargs)
+
 # roofline dry-run context (see registry.unroll_inner): kept under its
 # historical name for callers that patched the old ops-level flag
 unrolled_inner = registry.unroll_inner
@@ -47,11 +67,11 @@ unrolled_inner = registry.unroll_inner
 
 
 def gemm(a, b, *, out_dtype=None, accum_dtype=jnp.float32, impl=None,
-         bm=None, bk=None, bn=None):
+         mesh=None, bm=None, bk=None, bn=None):
     blocks = resolve_blocks("gemm", bm=bm, bk=bk, bn=bn)
-    return kernel_call(
+    return _dispatch(
         "gemm", a, b, out_dtype=out_dtype, accum_dtype=accum_dtype,
-        impl=impl, **blocks,
+        mesh=mesh, impl=impl, **blocks,
     )
 
 
@@ -80,7 +100,7 @@ def _gemm_ref(a, b, *, out_dtype=None, accum_dtype=jnp.float32,
 
 def flash_attention(
     q, k, v, *, causal=True, window=0, q_offset=0, scale=None, impl=None,
-    bq=None, bk=None, block_k=None,
+    mesh=None, bq=None, bk=None, block_k=None,
 ):
     """q: (B,H,Sq,D); k,v: (B,K,Sk,D). Returns (B,H,Sq,D).
 
@@ -95,9 +115,9 @@ def flash_attention(
             )
         bk = block_k
     blocks = resolve_blocks("flash_attention", bq=bq, bk=bk)
-    return kernel_call(
+    return _dispatch(
         "flash_attention", q, k, v, causal=causal, window=window,
-        q_offset=q_offset, scale=scale, impl=impl, **blocks,
+        q_offset=q_offset, scale=scale, mesh=mesh, impl=impl, **blocks,
     )
 
 
@@ -127,20 +147,31 @@ def _fa_ref(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None):
     )
 
 
-def decode_attention(q, k, v, position, *, window=0, scale=None, impl=None):
+def decode_attention(q, k, v, position, *, window=0, scale=None, impl=None,
+                     mesh=None, bs=None):
     """Single-token attention against a cache. Linear in cache length."""
-    return kernel_call(
+    blocks = resolve_blocks("decode_attention", bs=bs)
+    return _dispatch(
         "decode_attention", q, k, v, position, window=window, scale=scale,
-        impl=impl,
+        mesh=mesh, impl=impl, **blocks,
     )
 
 
-# decode is memory-bound and already linear; the ref form IS the kernel form
-# under every implementation.
-for _impl in ("pallas", "interpret", "xla", "ref"):
-    registry.register_kernel("decode_attention", impl=_impl)(
-        _ref.decode_attention_ref
+@registry.register_kernel("decode_attention", impl="xla")
+def _decode_xla(q, k, v, position, *, window, scale, bs=None):
+    return _xla.decode_attention_xla(
+        q, k, v, position, window=window, scale=scale, bs=bs
     )
+
+
+# decode is memory-bound and already linear; the ref form stands in for the
+# stream impls (the blocked xla form above carries the cache-tile geometry).
+@registry.register_kernel("decode_attention", impl="pallas")
+@registry.register_kernel("decode_attention", impl="interpret")
+@registry.register_kernel("decode_attention", impl="ref")
+def _decode_ref(q, k, v, position, *, window, scale, bs=None):
+    return _ref.decode_attention_ref(q, k, v, position, window=window,
+                                     scale=scale)
 
 
 # ---------------------------------------------------------------------------
@@ -155,7 +186,8 @@ W_LOG_FLOOR = -2.5
 _MAX_CHUNK_EXP = 85.0
 
 
-def linear_attention(r, k, v, w_log, u=None, s0=None, *, impl=None, chunk=None):
+def linear_attention(r, k, v, w_log, u=None, s0=None, *, impl=None, mesh=None,
+                     chunk=None):
     """Chunked scan: S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T.
 
     u given  => RWKV6 read-out (o_t from S_{t-1} plus u-bonus for token t)
@@ -171,8 +203,9 @@ def linear_attention(r, k, v, w_log, u=None, s0=None, *, impl=None, chunk=None):
             f"(max chunk {int(_MAX_CHUNK_EXP / -W_LOG_FLOOR)})"
         )
     w_log = jnp.maximum(w_log, W_LOG_FLOOR)
-    return kernel_call(
-        "linear_attention", r, k, v, w_log, u, s0, chunk=chunk, impl=impl
+    return _dispatch(
+        "linear_attention", r, k, v, w_log, u, s0, chunk=chunk, mesh=mesh,
+        impl=impl,
     )
 
 
@@ -215,7 +248,7 @@ def linear_attention_step(r, k, v, w_log, u, S):
 # ---------------------------------------------------------------------------
 
 
-def spmm(values, cols=None, dense=None, *, impl=None, bm=None):
+def spmm(values, cols=None, dense=None, *, impl=None, mesh=None, bm=None):
     """ELL sparse-dense matmul. Either ``spmm(A, dense)`` with A an
     EllMatrix, or the unpacked ``spmm(values, cols, dense)``."""
     if isinstance(values, EllMatrix):
@@ -229,7 +262,8 @@ def spmm(values, cols=None, dense=None, *, impl=None, bm=None):
     if cols is None or dense is None:
         raise TypeError("spmm: cols and dense operands are required")
     blocks = resolve_blocks("spmm", bm=bm)
-    return kernel_call("spmm", values, cols, dense, impl=impl, **blocks)
+    return _dispatch("spmm", values, cols, dense, mesh=mesh, impl=impl,
+                     **blocks)
 
 
 @registry.register_stream_kernel("spmm")
@@ -246,7 +280,7 @@ def _spmm_ref(values, cols, dense, *, bm=None):
 
 
 def bsr_spmm(tile_values, tile_rows=None, tile_cols=None, dense=None,
-             num_rows=None, *, impl=None, bf=None):
+             num_rows=None, *, impl=None, mesh=None, bf=None):
     """Block-sparse rows x dense (the MXU-native sparse-dense form).
 
     Either ``bsr_spmm(A, dense)`` with A a BsrMatrix, or the unpacked
@@ -268,9 +302,9 @@ def bsr_spmm(tile_values, tile_rows=None, tile_cols=None, dense=None,
             "bsr_spmm: tile coordinates, dense operand and num_rows are required"
         )
     blocks = resolve_blocks("bsr_spmm", bf=bf)
-    return kernel_call(
-        "bsr_spmm", tile_values, tile_rows, tile_cols, dense, num_rows,
-        impl=impl, **blocks,
+    return _dispatch(
+        "bsr_spmm", tile_values, tile_rows, tile_cols, dense,
+        num_rows=num_rows, mesh=mesh, impl=impl, **blocks,
     )
 
 
@@ -297,7 +331,7 @@ def _bsr_xla(tile_values, tile_rows, tile_cols, dense, num_rows, *, bf=None):
 
 
 def spmspm(a_values, a_cols, b_values=None, b_rows=None, contraction_dim=None,
-           *, impl=None, bm=None, bn=None):
+           *, impl=None, mesh=None, bm=None, bn=None):
     """Sparse x sparse by index intersection. Either ``spmspm(A, B, k)`` with
     ELL operands (B holding the right matrix's columns), or unpacked arrays.
     """
@@ -319,9 +353,9 @@ def spmspm(a_values, a_cols, b_values=None, b_rows=None, contraction_dim=None,
             "spmspm: b_values, b_rows and contraction_dim are required"
         )
     blocks = resolve_blocks("spmspm", bm=bm, bn=bn)
-    return kernel_call(
-        "spmspm", a_values, a_cols, b_values, b_rows, contraction_dim,
-        impl=impl, **blocks,
+    return _dispatch(
+        "spmspm", a_values, a_cols, b_values, b_rows,
+        contraction_dim=contraction_dim, mesh=mesh, impl=impl, **blocks,
     )
 
 
@@ -353,9 +387,11 @@ def _spmspm_ref(a_values, a_cols, b_values, b_rows, contraction_dim,
 # ---------------------------------------------------------------------------
 
 
-def stencil(grid, offsets: np.ndarray, weights, *, impl=None, bx=None):
+def stencil(grid, offsets: np.ndarray, weights, *, impl=None, mesh=None,
+            bx=None):
     blocks = resolve_blocks("stencil", bx=bx)
-    return kernel_call("stencil", grid, offsets, weights, impl=impl, **blocks)
+    return _dispatch("stencil", grid, offsets=offsets, weights=weights,
+                     mesh=mesh, impl=impl, **blocks)
 
 
 @registry.register_stream_kernel("stencil")

@@ -1,0 +1,457 @@
+"""Mesh-aware kernel partitioning: the third axis of dispatch (paper Fig. 13).
+
+Occamy's hierarchical, symmetric interconnect lets cluster-agnostic kernels
+scale across groups, chiplets, and the D2D link with predictable bandwidth
+per level. The software analogue: every op in the kernel registry carries a
+``PartitionRule`` describing how its operands split over a mesh axis (the
+chiplet axis), which collective stitches the partials back together (the D2D
+traffic), and when the op must degrade to replication instead (the same
+divisibility contract as ``parallel/sharding.py``).
+
+Layering (parallel to impl selection and block resolution):
+
+  ops.py            resolves the rule once per call — explicit ``mesh=`` kwarg
+                    or the mesh from ``sharding.use_mesh`` — and routes here
+  partition.py      plan_for(): PartitionRule -> PartitionPlan (specs +
+                    local function + collective-cost metadata)
+  sharded_call()    wraps WHICHEVER registered impl runs in ``shard_map``
+                    (via parallel/compat), so pallas, interpret, xla and ref
+                    all execute the identical sharded program; the single
+                    pallas-call-site invariant (core/streams.py) is untouched
+  consumers         launch/roofline prices plan.collectives with
+                    ``topology.collective_seconds`` (the D2D roofline term);
+                    benchmarks/bench_mesh.py times sharded vs single device
+
+Rule table (the op's logical-axis split over the partition axis):
+
+  gemm              K-sharded (A cols x B rows), ``psum`` epilogue; falls
+                    back to M-row sharding, then replication
+  flash_attention   GQA head-sharded (q heads AND kv heads); replicates on
+                    TP-hostile head counts
+  decode_attention  same GQA head rule (position stays replicated)
+  linear_attention  head-sharded state/decay streams (u, s0 included)
+  spmm              row-sharded ELL value/index streams, dense replicated
+  bsr_spmm          tile-sharded (nnz-parallel), ``psum`` epilogue over rows
+  spmspm            row-sharded A, B replicated
+  stencil           x-sharded grid with ``ppermute`` halo exchange (SARIS
+                    boundary planes ride the D2D link)
+
+``plan_for`` also accepts a device-free ``MeshSpec`` so the dry-run/roofline
+path can cost the D2D collectives without constructing devices; executing a
+plan (``sharded_call``) requires a real ``jax.sharding.Mesh``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels import registry
+from repro.parallel.compat import shard_map
+
+
+# ---------------------------------------------------------------------------
+# Plan objects
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCost:
+    """One collective the plan's epilogue fires, in the vocabulary of
+    ``topology.collective_seconds``: kind, mesh axis, per-device payload."""
+
+    kind: str  # "all_reduce" | "all_gather" | "reduce_scatter" | "permute"
+    axis: str
+    nbytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """A resolved partitioning of one op call on one mesh axis.
+
+    ``in_specs`` carries one PartitionSpec per positional operand (entries
+    for operands that are ``None`` are ignored); ``local_fn`` takes the full
+    operand tuple (Nones included) and runs the registered impl on the local
+    shard, firing any collective epilogue inside ``shard_map``.
+    """
+
+    op: str
+    axis: str
+    n: int
+    in_specs: tuple
+    out_specs: Any
+    local_fn: Callable
+    collectives: tuple[CollectiveCost, ...] = ()
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Device-free mesh descriptor: lets the dry-run/roofline layer resolve
+    partition plans (and their D2D costs) without any devices existing."""
+
+    shape: dict  # axis name -> size, in axis order
+
+    @property
+    def axis_names(self) -> tuple:
+        return tuple(self.shape)
+
+
+def partition_axis(mesh) -> str:
+    """The axis ops shard over: ``model`` (the chiplet crossbar in the C5
+    mapping) when present, else the innermost mesh axis."""
+    names = tuple(mesh.axis_names)
+    return "model" if "model" in names else names[-1]
+
+
+# ---------------------------------------------------------------------------
+# Rule registry
+# ---------------------------------------------------------------------------
+
+_RULES: dict[str, Callable] = {}
+
+
+def register_partition_rule(op: str) -> Callable:
+    """Decorator: ``@register_partition_rule("spmm")``. The rule receives
+    ``(axis, n, *operands, impl=..., **op_kwargs)`` and returns a
+    PartitionPlan, or None to degrade to replication."""
+
+    def deco(fn: Callable) -> Callable:
+        _RULES[op] = fn
+        return fn
+
+    return deco
+
+
+def partitioned_ops() -> list[str]:
+    return sorted(_RULES)
+
+
+def plan_for(op: str, mesh, *args, impl: str | None = None, **kwargs):
+    """Resolve the op's PartitionRule against ``mesh`` (a Mesh or MeshSpec).
+
+    Returns None — replication — when the op has no rule, the partition axis
+    is trivial, or the rule's divisibility checks fail (the graceful-
+    degradation contract shared with parallel/sharding.py).
+    """
+    rule = _RULES.get(op)
+    if rule is None:
+        return None
+    axis = partition_axis(mesh)
+    n = int(mesh.shape[axis])
+    if n <= 1:
+        return None
+    return rule(axis, n, *args, impl=impl, **kwargs)
+
+
+def plan_collective_bytes(plan: PartitionPlan | None) -> int:
+    """Total per-device collective payload of a plan (0 for replication)."""
+    if plan is None:
+        return 0
+    return sum(c.nbytes for c in plan.collectives)
+
+
+def sharded_call(op: str, mesh, *args, impl: str | None = None, **kwargs):
+    """Run ``op`` sharded over ``mesh`` through whichever registered impl is
+    selected, falling back to a plain (replicated) ``kernel_call`` when no
+    plan applies. This is the single seam ops.py routes mesh-aware calls
+    through — no per-call spec plumbing anywhere else.
+    """
+    impl = registry.resolve_impl(impl)
+    plan = plan_for(op, mesh, *args, impl=impl, **kwargs)
+    if plan is None:
+        return registry.kernel_call(op, *args, impl=impl, **kwargs)
+    if not isinstance(mesh, Mesh):
+        raise TypeError(
+            f"executing a partition plan for {op!r} needs a device mesh; "
+            f"got {type(mesh).__name__} (MeshSpec is for plan_for/costing only)"
+        )
+    live = [i for i, a in enumerate(args) if a is not None]
+    in_specs = tuple(plan.in_specs[i] for i in live)
+
+    def wrapped(*live_args):
+        full = list(args)
+        for i, v in zip(live, live_args):
+            full[i] = v
+        return plan.local_fn(*full)
+
+    fn = shard_map(
+        wrapped, mesh=mesh, in_specs=in_specs, out_specs=plan.out_specs,
+        check_vma=False,
+    )
+    return fn(*(args[i] for i in live))
+
+
+def _nbytes(shape, dtype) -> int:
+    return math.prod(shape) * jnp.dtype(dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+
+@register_partition_rule("gemm")
+def _gemm_rule(axis, n, a, b, *, impl=None, out_dtype=None,
+               accum_dtype=jnp.float32, **blocks):
+    """K-sharded GEMM with a psum epilogue (the paper's split-K over the
+    chiplet axis); M-row sharding when K resists; replication when both do."""
+    M, K = a.shape
+    N = b.shape[1]
+    out_dtype = out_dtype or a.dtype
+
+    if K % n == 0:
+        def local(a_l, b_l):
+            part = registry.kernel_call(
+                "gemm", a_l, b_l, out_dtype=accum_dtype,
+                accum_dtype=accum_dtype, impl=impl, **blocks,
+            )
+            return jax.lax.psum(part, axis).astype(out_dtype)
+
+        return PartitionPlan(
+            op="gemm", axis=axis, n=n,
+            in_specs=(P(None, axis), P(axis, None)),
+            out_specs=P(None, None),
+            local_fn=local,
+            collectives=(
+                CollectiveCost("all_reduce", axis, _nbytes((M, N), accum_dtype)),
+            ),
+            note=f"k-sharded ({K}/{n} per device), psum epilogue",
+        )
+
+    if M % n == 0:
+        def local(a_l, b_l):
+            return registry.kernel_call(
+                "gemm", a_l, b_l, out_dtype=out_dtype,
+                accum_dtype=accum_dtype, impl=impl, **blocks,
+            )
+
+        return PartitionPlan(
+            op="gemm", axis=axis, n=n,
+            in_specs=(P(axis, None), P(None, None)),
+            out_specs=P(axis, None),
+            local_fn=local,
+            note=f"m-row-sharded ({M}/{n} per device)",
+        )
+    return None
+
+
+def _head_sharded_attn(op, axis, n, q, k, kv_heads: int, in_specs, out_specs,
+                       local_fn, note):
+    if kv_heads % n != 0:
+        return None  # TP-hostile head count: replicate (GQA groups stay whole)
+    return PartitionPlan(
+        op=op, axis=axis, n=n, in_specs=in_specs, out_specs=out_specs,
+        local_fn=local_fn, note=note,
+    )
+
+
+@register_partition_rule("flash_attention")
+def _flash_rule(axis, n, q, k, v, *, impl=None, **kwargs):
+    """GQA-aware head sharding: q heads AND kv heads split together so every
+    device keeps whole (kv-head x group) blocks; TP-hostile counts (e.g. 20
+    or 25 heads) replicate instead, via the same divisibility contract as
+    parallel/sharding.py."""
+    K = k.shape[1]
+
+    def local(q_l, k_l, v_l):
+        return registry.kernel_call(
+            "flash_attention", q_l, k_l, v_l, impl=impl, **kwargs
+        )
+
+    h4 = P(None, axis, None, None)
+    return _head_sharded_attn(
+        "flash_attention", axis, n, q, k, K,
+        in_specs=(h4, h4, h4), out_specs=h4, local_fn=local,
+        note=f"head-sharded ({K}/{n} kv heads per device)",
+    )
+
+
+@register_partition_rule("decode_attention")
+def _decode_rule(axis, n, q, k, v, position, *, impl=None, **kwargs):
+    K = k.shape[1]
+
+    def local(q_l, k_l, v_l, pos_l):
+        return registry.kernel_call(
+            "decode_attention", q_l, k_l, v_l, pos_l, impl=impl, **kwargs
+        )
+
+    return _head_sharded_attn(
+        "decode_attention", axis, n, q, k, K,
+        in_specs=(P(None, axis, None), P(None, axis, None, None),
+                  P(None, axis, None, None), P(None)),
+        out_specs=P(None, axis, None),
+        local_fn=local,
+        note=f"head-sharded ({K}/{n} kv heads per device)",
+    )
+
+
+@register_partition_rule("linear_attention")
+def _linear_attention_rule(axis, n, r, k, v, w_log, u=None, s0=None, *,
+                           impl=None, **kwargs):
+    """Head-sharded chunked state scan: every stream (r/k/v/decay, the u
+    bonus, the carried state) splits on H, so the recurrence is embarrassingly
+    parallel across devices — no collective epilogue at all."""
+    H = r.shape[1]
+    if H % n != 0:
+        return None
+
+    def local(r_l, k_l, v_l, w_l, u_l, s0_l):
+        return registry.kernel_call(
+            "linear_attention", r_l, k_l, v_l, w_l, u_l, s0_l,
+            impl=impl, **kwargs,
+        )
+
+    h4 = P(None, axis, None, None)
+    return PartitionPlan(
+        op="linear_attention", axis=axis, n=n,
+        in_specs=(h4, h4, h4, h4, P(axis, None), h4),
+        out_specs=(h4, h4),
+        local_fn=local,
+        note=f"head-sharded ({H}/{n} heads per device)",
+    )
+
+
+@register_partition_rule("spmm")
+def _spmm_rule(axis, n, values, cols, dense, *, impl=None, **kwargs):
+    """Row-sharded ELL: each device streams its own value/index rows against
+    the replicated dense operand — the chiplet-local SU indirection."""
+    R = values.shape[0]
+    if R % n != 0:
+        return None
+
+    def local(v_l, c_l, d_l):
+        return registry.kernel_call("spmm", v_l, c_l, d_l, impl=impl, **kwargs)
+
+    return PartitionPlan(
+        op="spmm", axis=axis, n=n,
+        in_specs=(P(axis, None), P(axis, None), P(None, None)),
+        out_specs=P(axis, None),
+        local_fn=local,
+        note=f"row-sharded ({R}/{n} ELL rows per device)",
+    )
+
+
+@register_partition_rule("bsr_spmm")
+def _bsr_rule(axis, n, tile_values, tile_rows, tile_cols, dense, *,
+              num_rows, impl=None, **kwargs):
+    """Tile-sharded BSR (nnz-parallel): devices own disjoint tile subsets,
+    each scatter-accumulates a full-height partial, and a psum stitches the
+    rows back — the D2D-crossing sparse reduction."""
+    T = tile_values.shape[0]
+    if T % n != 0 or T == 0:
+        return None
+    F = dense.shape[1]
+    bm_tile = tile_values.shape[1]
+
+    def local(tv_l, tr_l, tc_l, d_l):
+        part = registry.kernel_call(
+            "bsr_spmm", tv_l, tr_l, tc_l, d_l, num_rows=num_rows,
+            impl=impl, **kwargs,
+        )
+        # the stream kernel only initialises output blocks whose row id
+        # appears in ITS tile subset; rows all of whose tiles live on other
+        # devices stay uninitialised locally, so mask them before the psum
+        present = jnp.zeros((num_rows // bm_tile,), bool).at[tr_l].set(True)
+        row_mask = jnp.repeat(present, bm_tile)[:, None]
+        return jax.lax.psum(jnp.where(row_mask, part, 0.0), axis)
+
+    return PartitionPlan(
+        op="bsr_spmm", axis=axis, n=n,
+        in_specs=(P(axis, None, None), P(axis), P(axis), P(None, None)),
+        out_specs=P(None, None),
+        local_fn=local,
+        collectives=(
+            CollectiveCost(
+                "all_reduce", axis, _nbytes((num_rows, F), jnp.float32)
+            ),
+        ),
+        note=f"tile-sharded ({T}/{n} nnz tiles per device), psum epilogue",
+    )
+
+
+@register_partition_rule("spmspm")
+def _spmspm_rule(axis, n, a_values, a_cols, b_values, b_rows, *,
+                 contraction_dim, impl=None, **kwargs):
+    R = a_values.shape[0]
+    if R % n != 0:
+        return None
+
+    def local(av_l, ac_l, bv_l, br_l):
+        return registry.kernel_call(
+            "spmspm", av_l, ac_l, bv_l, br_l,
+            contraction_dim=contraction_dim, impl=impl, **kwargs,
+        )
+
+    return PartitionPlan(
+        op="spmspm", axis=axis, n=n,
+        in_specs=(P(axis, None), P(axis, None), P(None, None), P(None, None)),
+        out_specs=P(axis, None),
+        local_fn=local,
+        note=f"a-row-sharded ({R}/{n} rows per device)",
+    )
+
+
+def _halo_block(width: int, cap: int, halo: int) -> int:
+    """Largest block <= cap that divides the padded local extent and still
+    covers the halo reach (the pallas kernel requires max|dx| <= bx)."""
+    for d in range(min(cap, width), 0, -1):
+        if width % d == 0 and d >= halo:
+            return d
+    return width
+
+
+@register_partition_rule("stencil")
+def _stencil_rule(axis, n, grid, *, offsets, weights, impl=None, bx=None,
+                  **kwargs):
+    """X-sharded grid with ppermute halo exchange (the SARIS boundary planes
+    crossing the D2D link). Each device pads its slab with ``h`` neighbour
+    planes per side — the ring wrap IS the periodic boundary — then runs the
+    registered impl on the padded slab; offsets never reach past the halo, so
+    the impl's own periodic wrap never engages inside the slab.
+    """
+    import numpy as np
+
+    X, Y, Z = grid.shape
+    offs = np.asarray(offsets)
+    h = int(np.abs(offs[:, 0]).max(initial=0))
+    if X % n != 0:
+        return None
+    lx = X // n
+    if h > lx:
+        return None  # halo wider than a slab: replicate rather than multi-hop
+    padded_x = lx + 2 * h
+    bx_cap = registry.resolve_blocks("stencil", bx=bx)["bx"]
+    bx_local = _halo_block(padded_x, bx_cap, max(h, 1))
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+
+    def local(g_l):
+        if h:
+            lo = jax.lax.ppermute(g_l[-h:], axis, fwd)  # left neighbour tail
+            hi = jax.lax.ppermute(g_l[:h], axis, bwd)  # right neighbour head
+            padded = jnp.concatenate([lo, g_l, hi], axis=0)
+        else:
+            padded = g_l
+        out = registry.kernel_call(
+            "stencil", padded, offsets, weights, impl=impl, bx=bx_local,
+            **kwargs,
+        )
+        return out[h:h + lx] if h else out
+
+    halo_bytes = _nbytes((h, Y, Z), grid.dtype)
+    return PartitionPlan(
+        op="stencil", axis=axis, n=n,
+        in_specs=(P(axis, None, None),),
+        out_specs=P(axis, None, None),
+        local_fn=local,
+        collectives=(
+            CollectiveCost("permute", axis, halo_bytes),
+            CollectiveCost("permute", axis, halo_bytes),
+        ) if h else (),
+        note=f"x-sharded ({lx} planes per device), halo h={h} via ppermute",
+    )

@@ -137,6 +137,7 @@ _BLOCK_DEFAULTS: dict[str, dict[str, int]] = {
     "bsr_spmm": {"bf": 512},
     "spmspm": {"bm": 8, "bn": 128},
     "stencil": {"bx": 8},
+    "decode_attention": {"bs": 512},
 }
 _block_overrides: dict[str, dict[str, int]] = {}
 

@@ -141,6 +141,65 @@ def _flash_attention_xla_unrolled(q, k, v, *, causal, window, q_offset, scale):
     return o.astype(q.dtype)
 
 
+def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None):
+    """Blocked single-token attention against a cache (online softmax over
+    cache blocks, the memory-bound decode form GPT-J hits every step).
+
+    The cache streams through in ``bs``-sized blocks — O(B*H*bs) live state
+    instead of the ref form's O(B*H*S) score matrix — mirroring the C4
+    double-buffered cache-tile traffic. ``bs`` resolves through the registry
+    (explicit > override > default) like every other block parameter.
+    """
+    B, H, D = q.shape
+    K, S = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    bs = min(registry.resolve_blocks("decode_attention", bs=bs)["bs"], S)
+    pad = (-S) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nb = (S + pad) // bs
+    qf = (q.astype(jnp.float32) * scale).reshape(B, K, G, D)
+    kb = jnp.moveaxis(k.reshape(B, K, nb, bs, D), 2, 0)
+    vb = jnp.moveaxis(v.reshape(B, K, nb, bs, D), 2, 0)
+    NEG = jnp.float32(-1e30)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, bidx = xs
+        s = jnp.einsum("bkgd,bksd->bkgs", qf, kblk.astype(jnp.float32))
+        idx = bidx * bs + jnp.arange(bs)[None, :]  # (1, bs) absolute positions
+        mask = (idx < S) & (idx <= position[:, None])
+        if window:
+            mask &= idx > position[:, None] - window
+        mask = mask[:, None, None, :]  # (B, 1, 1, bs)
+        s = jnp.where(mask, s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgs,bksd->bkgd", p, vblk.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, K, G), NEG)
+    l0 = jnp.zeros((B, K, G))
+    acc0 = jnp.zeros((B, K, G, D))
+    if registry.unroll_inner_enabled():
+        carry = (m0, l0, acc0)
+        for i in range(nb):
+            carry, _ = body(carry, (kb[i], vb[i], jnp.int32(i)))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, acc0), (kb, vb, jnp.arange(nb))
+        )
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Chunked linear attention with data-dependent decay (RWKV6 / SSD)
 # ---------------------------------------------------------------------------

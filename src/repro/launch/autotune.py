@@ -317,6 +317,40 @@ def _stencil_case(rng) -> TuneCase:
     )
 
 
+def _decode_attention_case(rng) -> TuneCase:
+    """decode has no StreamProgram (its blocked form is the xla impl), so
+    the VMEM probe uses a stream DESCRIPTION of that impl's cache traffic:
+    one resident q block plus double-buffered (bs x D) K/V cache tiles per
+    grid step — the same footprint the online-softmax scan carries."""
+    from repro.core.streams import AffineStream, StreamProgram
+
+    B, H, K, S, D = 2, 8, 4, 1024, 64
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, K, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, K, S, D)), jnp.float32)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+
+    def program(bl):
+        bs = min(bl["bs"], S)
+        Sp = S + (-S) % bs
+        cache = AffineStream((B, K, bs, D), lambda i: (0, 0, i, 0), dtype=k.dtype)
+        head = AffineStream((B, H, D), lambda i: (0, 0, 0), dtype=q.dtype)
+        return StreamProgram(
+            name="decode_attention",
+            body=lambda *_: None,  # feasibility probe only; never executed
+            grid=(Sp // bs,),
+            in_streams=(head, cache, cache),
+            out_streams=(head,),
+            out_shapes=(jax.ShapeDtypeStruct((B, H, D), q.dtype),),
+        )
+
+    return TuneCase(
+        "decode_attention", (q, k, v, pos),
+        lambda q, k, v, p: ops.decode_attention(q, k, v, p),
+        [{"bs": s} for s in (128, 256, 512, 1024)], program,
+    )
+
+
 DEFAULT_SUITE: dict[str, Callable] = {
     "gemm": _gemm_case,
     "flash_attention": _flash_attention_case,
@@ -325,6 +359,7 @@ DEFAULT_SUITE: dict[str, Callable] = {
     "bsr_spmm": _bsr_spmm_case,
     "spmspm": _spmspm_case,
     "stencil": _stencil_case,
+    "decode_attention": _decode_attention_case,
 }
 
 

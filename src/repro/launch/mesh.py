@@ -7,6 +7,8 @@ device state.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 
@@ -22,7 +24,25 @@ def make_mesh(shape: tuple, axes: tuple):
 
 
 def host_device_mesh(tp: int = 1):
-    """Whatever devices exist locally, as (data, model)."""
+    """Whatever devices exist locally, as (data, model).
+
+    When ``tp`` does not divide the device count, degrades to the largest
+    dividing tp with a warning — the same graceful-degradation contract as
+    ``parallel/sharding.py`` — and raises ``ValueError`` when no valid
+    factorisation exists at all (tp < 1).
+    """
     n = len(jax.devices())
-    assert n % tp == 0
+    if tp < 1:
+        raise ValueError(
+            f"host_device_mesh: tp={tp} is not a valid model-axis size "
+            f"(need 1 <= tp, have {n} devices)"
+        )
+    if n % tp != 0:
+        fit = max(t for t in range(1, min(tp, n) + 1) if n % t == 0)
+        warnings.warn(
+            f"host_device_mesh: tp={tp} does not divide {n} devices; "
+            f"degrading to tp={fit}",
+            stacklevel=2,
+        )
+        tp = fit
     return jax.make_mesh((n // tp, tp), ("data", "model"))

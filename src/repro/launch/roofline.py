@@ -3,14 +3,21 @@
   compute    = HLO_FLOPs_per_device / PEAK_FLOPS
   memory     = HLO_bytes_per_device / HBM_BW
   collective = collective_bytes_per_device / LINK_BW
+  d2d        = partition-rule collective epilogues priced per mesh level
+               via topology.collective_seconds (the Fig. 13 D2D term)
 
 collective_bytes is NOT in cost_analysis(): we parse the post-SPMD HLO text
 and sum operand/result sizes of every collective op (with ring-algorithm byte
-multipliers). Hardware constants: TPU v5e-class, from the task spec.
+multipliers). The d2d term is the opposite direction: analytic, from the
+kernel partition plans (kernels/partition.py), so the per-op operational-
+intensity figures carry the chiplet/D2D crossing cost even where no HLO
+exists. Hardware constants: TPU v5e-class, from the task spec.
 """
 from __future__ import annotations
 
 import re
+
+from repro.core import topology
 
 PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
 HBM_BW = 819e9  # bytes/s per chip
@@ -83,16 +90,42 @@ def collective_bytes(hlo_text: str) -> dict:
     return {"by_kind": totals, "counts": counts, "total": totals_all}
 
 
-def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float) -> dict:
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   d2d_s: float = 0.0) -> dict:
+    """The roofline time terms; ``d2d_s`` (partition-plan collective time
+    from ``op_collective_seconds`` / ``plan_collective_seconds``) joins the
+    dominance comparison so a D2D-bound sharded op reports as such."""
     t_comp = flops / PEAK_FLOPS
     t_mem = hbm_bytes / HBM_BW
     t_coll = coll_bytes / LINK_BW
     terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    if d2d_s:
+        terms["d2d_s"] = d2d_s
     dom = max(terms, key=terms.get)
-    bound = max(t_comp, t_mem, t_coll)
+    bound = max(terms.values())
     terms["dominant"] = dom
     terms["roofline_fraction"] = t_comp / bound if bound > 0 else 0.0
     return terms
+
+
+def plan_collective_seconds(plan) -> float:
+    """Price one partition plan's collective epilogue through the topology
+    bandwidth model (ring-algorithm time per mesh level)."""
+    if plan is None:
+        return 0.0
+    return sum(
+        topology.collective_seconds(c.kind, c.nbytes, c.axis, plan.n)
+        for c in plan.collectives
+    )
+
+
+def op_collective_seconds(op: str, mesh, *args, **kwargs) -> float:
+    """Per-op D2D term: resolve the op's PartitionRule against ``mesh`` (a
+    Mesh or a device-free partition.MeshSpec) and price its collectives.
+    0.0 when the op runs replicated — replication moves no D2D bytes."""
+    from repro.kernels import partition
+
+    return plan_collective_seconds(partition.plan_for(op, mesh, *args, **kwargs))
 
 
 def min_bytes_per_device(cfg, shape, n_dev: int, tp: int = 16) -> float:

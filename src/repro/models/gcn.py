@@ -5,6 +5,11 @@ H' = act( Â (H W) ) with Â an ``EllMatrix`` pytree and the aggregation
 executed through the spmm kernel (the SU-indirection analogue). Both ops
 resolve through the kernel registry, so the whole forward — sparse adjacency
 included — passes through ``jax.jit`` as one traced function.
+
+Passing ``mesh=`` (or calling under ``sharding.use_mesh``) runs the whole
+forward chiplet-sharded: the ELL adjacency rows split over the mesh's
+partition axis for the aggregation, the recombination GEMM follows its own
+PartitionRule — no spec plumbing in the model, just the kernel signatures.
 """
 from __future__ import annotations
 
@@ -24,15 +29,15 @@ def init_params(rng, feature_dims: list[int], dtype=jnp.float32):
     ]
 
 
-def gcn_layer(w, adj: EllMatrix, feats, *, activate=True):
+def gcn_layer(w, adj: EllMatrix, feats, *, activate=True, mesh=None):
     """One layer: recombine (dense GEMM) then aggregate (SpMM)."""
-    h = ops.gemm(feats, w)  # dense recombination
-    h = ops.spmm(adj, h)  # sparse aggregation
+    h = ops.gemm(feats, w, mesh=mesh)  # dense recombination
+    h = ops.spmm(adj, h, mesh=mesh)  # sparse aggregation (row-sharded)
     return jax.nn.relu(h) if activate else h
 
 
-def forward(params, adj: EllMatrix, feats):
+def forward(params, adj: EllMatrix, feats, *, mesh=None):
     h = feats
     for i, w in enumerate(params):
-        h = gcn_layer(w, adj, h, activate=i < len(params) - 1)
+        h = gcn_layer(w, adj, h, activate=i < len(params) - 1, mesh=mesh)
     return h

@@ -54,6 +54,28 @@ def activation_sharding(specs: dict):
         _ACTIVE = old
 
 
+@contextmanager
+def use_mesh(mesh: Mesh):
+    """Kernel-partitioning mesh context: every ``ops.*`` call inside picks
+    the mesh up via ``kernel_mesh()`` and runs its PartitionRule under
+    shard_map (kernels/partition.py). Deliberately a SEPARATE key from the
+    ``__mesh__`` that ``current_mesh()`` reads: the model-level GSPMD
+    machinery (moe dispatch, ssm halo shift) keys off ``current_mesh()``,
+    and neither context may silently activate the other's re-routing."""
+    specs = dict(_ACTIVE or {})
+    specs["__kernel_mesh__"] = mesh
+    with activation_sharding(specs):
+        yield mesh
+
+
+def kernel_mesh() -> Mesh | None:
+    """The mesh ops.* should partition kernels over (None unless a
+    ``use_mesh`` context is active)."""
+    if _ACTIVE is None:
+        return None
+    return _ACTIVE.get("__kernel_mesh__")
+
+
 def default_activation_specs(cfg, mesh: Mesh, kind: str) -> dict:
     """Residual stream sequence-sharded over `model` (Megatron-SP style);
     logits vocab-sharded over `model`."""

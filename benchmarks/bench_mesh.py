@@ -1,10 +1,12 @@
 """Fig. 13 made executable: per-op sharded-vs-single-device rows.
 
 For every op with a PartitionRule, times the op once on a single device and
-once partitioned over the host mesh (``--mesh DxM`` on benchmarks/run.py) —
-same ``ops.*`` signature, the mesh passed as a kwarg. ``derived`` carries the
-speedup, the plan note (which logical axis split, which collective fired),
-and the topology-model D2D seconds for the plan's collectives, so the
+once partitioned over the host mesh (``--mesh DxM`` or the three-axis
+``--mesh PxDxM`` on benchmarks/run.py) — same ``ops.*`` signature, the mesh
+passed as a kwarg. ``derived`` carries the speedup, the plan note (which
+logical axis split over which levels, which collective fired), and the
+topology-model collective seconds for the plan — total (``d2d_model``) and
+per level (``coll_per_level``, intra-pod vs cross-pod) — so the
 measured-vs-model comparison of the scaling story sits in one CSV row.
 
 CPU caveat: forced host devices share the machine, so wall-clock speedups
@@ -73,11 +75,16 @@ def run(mesh=None):
     if mesh is None:
         return  # no --mesh: the sharded rows need a multi-device host mesh
     rng = np.random.default_rng(0)
-    ax = partition.partition_axis(mesh)
+    levels = partition.partition_levels(mesh)
+    levels_tag = "*".join(f"{a}{n}" for a, n in levels) or "none"
     for op, call, plan_args, plan_kwargs in _cases(rng):
         plan = partition.plan_for(op, mesh, *plan_args, **plan_kwargs)
         note = plan.note.replace(",", ";") if plan else "replicated"
-        d2d = roofline.plan_collective_seconds(plan)
+        by_level = roofline.plan_collective_seconds_by_level(plan)
+        d2d = sum(by_level.values())
+        per_level = "/".join(
+            f"{ax}={s * 1e6:.2f}us" for ax, s in by_level.items()
+        ) or "none"
         f_single = jax.jit(lambda c=call: c(None))
         f_shard = jax.jit(lambda c=call: c(mesh))
         t_single = timeit(f_single, reps=3)
@@ -88,6 +95,7 @@ def run(mesh=None):
         row(
             f"mesh_{op}", t_shard,
             f"single_us={t_single * 1e6:.1f};speedup={t_single / t_shard:.2f}x;"
-            f"axis={ax}x{mesh.shape[ax]};{note};"
-            f"d2d_model={d2d * 1e6:.2f}us;max_err={err:.1e}",
+            f"levels={levels_tag};{note};"
+            f"d2d_model={d2d * 1e6:.2f}us;coll_per_level={per_level};"
+            f"max_err={err:.1e}",
         )

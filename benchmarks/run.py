@@ -15,24 +15,37 @@ the search runs and persists it. Tuned-vs-default ``us_per_call`` deltas are
 emitted as ``autotune_<op>`` CSV rows, and the benchmarks then run under the
 tuned overrides.
 
-``--mesh DxM`` backs a (data, model) mesh with forced host-platform devices
-(the flag must be decided before jax imports, which is why argument parsing
-precedes the jax import here) and emits per-op sharded-vs-single rows
-(benchmarks/bench_mesh.py). ``--mesh-only`` stops after those rows (CI
-smoke for the multi-device job).
+``--mesh DxM`` backs a (data, model) mesh — and ``--mesh PxDxM`` the
+three-axis (pod, data, model) hierarchy, where kernel partition plans
+resolve two-level with per-level collective costing — with forced
+host-platform devices (the flag must be decided before jax imports, which
+is why argument parsing precedes the jax import here) and emits per-op
+sharded-vs-single rows (benchmarks/bench_mesh.py). ``--mesh-only`` stops
+after those rows (CI smoke for the multi-device job). When ``--autotune``
+and ``--mesh`` combine, the tuner searches through the sharded dispatch and
+keys its record by the local shard geometry (see repro/launch/autotune.py).
 """
 import argparse
+import math
 import os
 
 
-def _parse_mesh(spec: str) -> tuple[int, int]:
+def _parse_mesh(spec: str) -> tuple[int, ...]:
+    """``DxM`` -> a (data, model) mesh; ``PxDxM`` -> (pod, data, model)."""
     try:
-        d, m = (int(x) for x in spec.lower().split("x"))
+        dims = tuple(int(x) for x in spec.lower().split("x"))
     except ValueError:
-        raise SystemExit(f"--mesh expects DxM (e.g. 2x4), got {spec!r}")
-    if d < 1 or m < 1:
+        dims = ()
+    if len(dims) not in (2, 3):
+        raise SystemExit(
+            f"--mesh expects DxM or PxDxM (e.g. 2x4 or 2x2x2), got {spec!r}"
+        )
+    if any(d < 1 for d in dims):
         raise SystemExit(f"--mesh axes must be >= 1, got {spec!r}")
-    return d, m
+    return dims
+
+
+_MESH_AXES = {2: ("data", "model"), 3: ("pod", "data", "model")}
 
 
 def main(argv=None) -> None:
@@ -43,9 +56,10 @@ def main(argv=None) -> None:
     ap.add_argument("--autotune-reps", type=int, default=3)
     ap.add_argument("--autotune-only", action="store_true",
                     help="emit the autotune rows and stop (CI smoke)")
-    ap.add_argument("--mesh", default=None, metavar="DxM",
-                    help="(data, model) mesh for the sharded-vs-single rows; "
-                         "forces DxM host devices on CPU")
+    ap.add_argument("--mesh", default=None, metavar="DxM|PxDxM",
+                    help="(data, model) or (pod, data, model) mesh for the "
+                         "sharded-vs-single rows; forces that many host "
+                         "devices on CPU")
     ap.add_argument("--mesh-only", action="store_true",
                     help="emit the mesh rows and stop (CI smoke)")
     args = ap.parse_args(argv)
@@ -53,12 +67,13 @@ def main(argv=None) -> None:
         raise SystemExit("--mesh-only needs --mesh DxM")
 
     mesh_shape = _parse_mesh(args.mesh) if args.mesh else None
+    mesh_devices = math.prod(mesh_shape) if mesh_shape else 0
     if mesh_shape is not None:
-        n = mesh_shape[0] * mesh_shape[1]
         flags = os.environ.get("XLA_FLAGS", "")
         if "--xla_force_host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = (
-                flags + f" --xla_force_host_platform_device_count={n}"
+                flags
+                + f" --xla_force_host_platform_device_count={mesh_devices}"
             ).strip()
 
     import jax
@@ -73,6 +88,17 @@ def main(argv=None) -> None:
         # xla is the CPU stand-in; on TPU let auto pick the Pallas kernels
         impl = "xla" if jax.default_backend() != "tpu" else "auto"
 
+    mesh = None
+    if mesh_shape is not None:
+        from repro.launch.mesh import make_mesh
+
+        if jax.device_count() < mesh_devices:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {mesh_devices} devices, have "
+                f"{jax.device_count()} (is XLA_FLAGS already set?)"
+            )
+        mesh = make_mesh(mesh_shape, _MESH_AXES[len(mesh_shape)])
+
     with registry.default_impl(impl):
         print("name,us_per_call,derived")
         if tune:
@@ -82,15 +108,18 @@ def main(argv=None) -> None:
             source = "loaded"
             if os.path.exists(args.autotune_record):
                 record = at.load_record(args.autotune_record)
-                if not at.record_matches_environment(record):
-                    # tuned for a different backend/impl: re-search rather
-                    # than silently mistune this one
+                if not at.record_matches_environment(record, mesh=mesh):
+                    # tuned for a different backend/impl/mesh: re-search
+                    # rather than silently mistune this one
                     record = None
             if record is None:
-                record = at.autotune(reps=args.autotune_reps)
+                # tuning under the mesh keys each entry by the LOCAL shard
+                # geometry, so the record stays valid for the kernels the
+                # sharded dispatch actually runs
+                record = at.autotune(reps=args.autotune_reps, mesh=mesh)
                 at.save_record(record, args.autotune_record)
                 source = "searched"
-            at.apply_record(record)
+            at.apply_record(record, mesh=mesh)
             for op, d in sorted(at.record_deltas(record).items()):
                 delta = ("n/a" if d["delta_pct"] is None
                          else f"{d['delta_pct']:+.1f}%")
@@ -108,17 +137,10 @@ def main(argv=None) -> None:
             if args.autotune_only:
                 return
 
-        if mesh_shape is not None:
+        if mesh is not None:
             from benchmarks import bench_mesh
-            from repro.launch.mesh import make_mesh
 
-            n = mesh_shape[0] * mesh_shape[1]
-            if jax.device_count() < n:
-                raise SystemExit(
-                    f"--mesh {args.mesh} needs {n} devices, have "
-                    f"{jax.device_count()} (is XLA_FLAGS already set?)"
-                )
-            bench_mesh.run(make_mesh(mesh_shape, ("data", "model")))
+            bench_mesh.run(mesh)
             if args.mesh_only:
                 return
 

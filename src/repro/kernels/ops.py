@@ -24,7 +24,10 @@ Partitioning is the third dispatch axis (kernels/partition.py): every op
 accepts ``mesh=`` (or picks the mesh up from ``sharding.use_mesh``) and the
 dispatcher resolves the op's PartitionRule once per call, wrapping whichever
 registered impl runs in ``shard_map`` — same public signature, sharded
-execution, replication fallback on indivisible shapes.
+execution. On a multi-pod mesh plans resolve TWO-LEVEL, jointly over
+``("pod", "model")`` with per-level collective epilogues (intra-pod psum
+before the cross-pod D2D hop); indivisible shapes walk the replication
+fallback ladder (drop the pod level, then replicate) instead of failing.
 """
 from __future__ import annotations
 

@@ -3,42 +3,62 @@
 Occamy's hierarchical, symmetric interconnect lets cluster-agnostic kernels
 scale across groups, chiplets, and the D2D link with predictable bandwidth
 per level. The software analogue: every op in the kernel registry carries a
-``PartitionRule`` describing how its operands split over a mesh axis (the
-chiplet axis), which collective stitches the partials back together (the D2D
-traffic), and when the op must degrade to replication instead (the same
-divisibility contract as ``parallel/sharding.py``).
+``PartitionRule`` describing how its operands split over the mesh's
+*partition levels* — the chiplet axis (``model``) and, on a multi-pod mesh,
+the pod axis (``pod``, the D2D link) jointly above it — which collective
+stitches the partials back together at each level, and when the op must
+degrade to fewer levels or to replication instead (the same divisibility
+contract as ``parallel/sharding.py``).
 
 Layering (parallel to impl selection and block resolution):
 
   ops.py            resolves the rule once per call — explicit ``mesh=`` kwarg
                     or the mesh from ``sharding.use_mesh`` — and routes here
   partition.py      plan_for(): PartitionRule -> PartitionPlan (specs +
-                    local function + collective-cost metadata)
+                    local function + per-level collective-cost metadata)
   sharded_call()    wraps WHICHEVER registered impl runs in ``shard_map``
                     (via parallel/compat), so pallas, interpret, xla and ref
                     all execute the identical sharded program; the single
                     pallas-call-site invariant (core/streams.py) is untouched
-  consumers         launch/roofline prices plan.collectives with
-                    ``topology.collective_seconds`` (the D2D roofline term);
-                    benchmarks/bench_mesh.py times sharded vs single device
+  consumers         launch/roofline prices plan.collectives per level with
+                    ``topology.collective_seconds`` (on-chiplet vs D2D
+                    bandwidth); benchmarks/bench_mesh.py times sharded vs
+                    single device
 
-Rule table (the op's logical-axis split over the partition axis):
+Rule table (the op's logical-axis split over the partition levels):
 
-  gemm              K-sharded (A cols x B rows), ``psum`` epilogue; falls
-                    back to M-row sharding, then replication
-  flash_attention   GQA head-sharded (q heads AND kv heads); replicates on
+  gemm              K-sharded (A cols x B rows) over pod×model jointly; the
+                    epilogue is a *hierarchical* all-reduce — intra-pod psum
+                    then cross-pod psum — so the D2D link carries one
+                    already-reduced buffer per pod. Falls back to M-row
+                    sharding, then (via the level ladder) to model-only,
+                    then replication
+  flash_attention   GQA head-sharded (q heads AND kv heads): head groups
+                    place per-pod before per-device; replicates on
                     TP-hostile head counts
   decode_attention  same GQA head rule (position stays replicated)
   linear_attention  head-sharded state/decay streams (u, s0 included)
-  spmm              row-sharded ELL value/index streams, dense replicated
-  bsr_spmm          tile-sharded (nnz-parallel), ``psum`` epilogue over rows
+  spmm              row-sharded ELL value/index streams — rows split across
+                    pods, then within each pod — dense replicated
+  bsr_spmm          tile-sharded (nnz-parallel), hierarchical ``psum``
+                    epilogue over rows
   spmspm            row-sharded A, B replicated
-  stencil           x-sharded grid with ``ppermute`` halo exchange (SARIS
-                    boundary planes ride the D2D link)
+  stencil           x-sharded grid with ``ppermute`` halo exchange; on a
+                    multi-pod mesh the intra-pod hops ride the chiplet
+                    crossbar and the single pod-boundary hop per direction
+                    rides the D2D link (SARIS boundary planes)
+
+**The replication fallback ladder.** ``plan_for`` resolves the mesh's
+partition levels outermost-first (``pod`` above ``model``) and offers the
+full stack to the op's rule; if the rule's divisibility checks fail, the
+outermost level is dropped and the rule is retried, down to a single level
+and finally to ``None`` (replication). An op whose heads divide the chiplet
+axis but not pod×model therefore still shards intra-pod instead of
+replicating outright.
 
 ``plan_for`` also accepts a device-free ``MeshSpec`` so the dry-run/roofline
-path can cost the D2D collectives without constructing devices; executing a
-plan (``sharded_call``) requires a real ``jax.sharding.Mesh``.
+path can cost the per-level collectives without constructing devices;
+executing a plan (``sharded_call``) requires a real ``jax.sharding.Mesh``.
 """
 from __future__ import annotations
 
@@ -51,6 +71,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import registry
+from repro.parallel.collectives import hierarchical_psum
 from repro.parallel.compat import shard_map
 
 
@@ -61,51 +82,124 @@ from repro.parallel.compat import shard_map
 
 @dataclasses.dataclass(frozen=True)
 class CollectiveCost:
-    """One collective the plan's epilogue fires, in the vocabulary of
-    ``topology.collective_seconds``: kind, mesh axis, per-device payload."""
+    """One collective a plan fires at one partition level.
 
-    kind: str  # "all_reduce" | "all_gather" | "reduce_scatter" | "permute"
+    Fields: ``kind`` — the collective, in the vocabulary of
+    ``topology.collective_seconds`` ("all_reduce" | "all_gather" |
+    "reduce_scatter" | "permute"); ``axis`` — the mesh axis it crosses
+    (``"pod"`` prices at the D2D link bandwidth, anything else at the
+    on-chiplet ICI bandwidth); ``nbytes`` — the per-device payload;
+    ``n`` — the participant count at that level (the ring size the
+    bandwidth model uses). ``n=0`` means "the plan's total shard count",
+    kept for constructors predating per-level costing.
+    """
+
+    kind: str
     axis: str
     nbytes: int
+    n: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
 class PartitionPlan:
-    """A resolved partitioning of one op call on one mesh axis.
+    """A resolved partitioning of one op call over one or more mesh levels.
 
-    ``in_specs`` carries one PartitionSpec per positional operand (entries
-    for operands that are ``None`` are ignored); ``local_fn`` takes the full
-    operand tuple (Nones included) and runs the registered impl on the local
-    shard, firing any collective epilogue inside ``shard_map``.
+    Fields: ``op`` — the registry op name; ``levels`` — outer→inner
+    ``(axis, size)`` pairs the plan shards over (``(("pod", 2), ("model",
+    16))`` for a two-level plan, a single pair otherwise); ``in_specs`` —
+    one PartitionSpec per positional operand (entries for operands that are
+    ``None`` are ignored); ``out_specs`` — the output spec (or tuple
+    thereof); ``local_fn`` — takes the full operand tuple (Nones included)
+    and runs the registered impl on the local shard, firing any collective
+    epilogue inside ``shard_map``; ``collectives`` — per-level
+    ``CollectiveCost`` metadata in firing order (innermost level first);
+    ``note`` — a human-readable one-liner for benchmark/roofline rows.
+
+    Invariants: ``n`` (total shard count) is the product of the level
+    sizes; ``axis`` is the spec-entry form of the levels — the bare axis
+    name for a single level, the axis tuple for a joint split.
     """
 
     op: str
-    axis: str
-    n: int
+    levels: tuple
     in_specs: tuple
     out_specs: Any
     local_fn: Callable
     collectives: tuple[CollectiveCost, ...] = ()
     note: str = ""
 
+    @property
+    def axis(self):
+        """Spec-entry form of the partition axes: ``"model"`` for a
+        single-level plan, ``("pod", "model")`` for a joint two-level one."""
+        axes = tuple(a for a, _ in self.levels)
+        return axes[0] if len(axes) == 1 else axes
+
+    @property
+    def n(self) -> int:
+        """Total shard count: the product of every level's size."""
+        return math.prod(n for _, n in self.levels)
+
 
 @dataclasses.dataclass(frozen=True)
 class MeshSpec:
     """Device-free mesh descriptor: lets the dry-run/roofline layer resolve
-    partition plans (and their D2D costs) without any devices existing."""
+    partition plans (and their per-level D2D costs) without any devices
+    existing.
 
-    shape: dict  # axis name -> size, in axis order
+    Fields: ``shape`` — ``{axis_name: size}`` in axis order (a 2-pod
+    production mesh is ``{"pod": 2, "data": 16, "model": 16}``).
+    """
+
+    shape: dict
 
     @property
     def axis_names(self) -> tuple:
+        """The mesh axis names, in declaration order."""
         return tuple(self.shape)
 
 
 def partition_axis(mesh) -> str:
-    """The axis ops shard over: ``model`` (the chiplet crossbar in the C5
-    mapping) when present, else the innermost mesh axis."""
+    """The innermost axis ops shard over: ``model`` (the chiplet crossbar in
+    the C5 mapping) when present, else the last axis of ``mesh`` (a Mesh or
+    MeshSpec). Two-level plans stack the ``pod`` axis above this one — see
+    ``partition_levels``."""
     names = tuple(mesh.axis_names)
     return "model" if "model" in names else names[-1]
+
+
+def partition_levels(mesh) -> tuple:
+    """The partition-level stack of ``mesh``, outermost first.
+
+    Returns ``(axis, size)`` pairs: ``("pod", P)`` when the mesh has a
+    non-trivial ``pod`` axis (the D2D link), then the ``partition_axis``
+    (the chiplet crossbar). Size-1 axes are dropped, so a flat mesh yields
+    one level and a trivial mesh yields ``()`` (replication). ``mesh`` may
+    be a Mesh or a device-free MeshSpec.
+    """
+    names = tuple(mesh.axis_names)
+    inner = partition_axis(mesh)
+    levels = []
+    if "pod" in names and inner != "pod" and int(mesh.shape["pod"]) > 1:
+        levels.append(("pod", int(mesh.shape["pod"])))
+    if int(mesh.shape[inner]) > 1:
+        levels.append((inner, int(mesh.shape[inner])))
+    return tuple(levels)
+
+
+def _joint(levels) -> str | tuple:
+    """PartitionSpec entry for a joint split over ``levels``: the bare axis
+    name for one level, the axis-name tuple for several."""
+    axes = tuple(a for a, _ in levels)
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _ntot(levels) -> int:
+    return math.prod(n for _, n in levels)
+
+
+def _levels_note(levels) -> str:
+    return "+".join(f"{a}={n}" for a, n in levels)
 
 
 # ---------------------------------------------------------------------------
@@ -116,9 +210,15 @@ _RULES: dict[str, Callable] = {}
 
 
 def register_partition_rule(op: str) -> Callable:
-    """Decorator: ``@register_partition_rule("spmm")``. The rule receives
-    ``(axis, n, *operands, impl=..., **op_kwargs)`` and returns a
-    PartitionPlan, or None to degrade to replication."""
+    """Decorator: ``@register_partition_rule("spmm")`` registers the
+    PartitionRule for the registry op named ``op``.
+
+    The rule receives ``(levels, *operands, impl=..., **op_kwargs)`` —
+    ``levels`` being the outer→inner ``(axis, size)`` stack ``plan_for``
+    offers it — and returns a PartitionPlan, or None when its divisibility
+    checks fail at that level count (``plan_for`` then retries with the
+    outermost level dropped: the replication fallback ladder).
+    """
 
     def deco(fn: Callable) -> Callable:
         _RULES[op] = fn
@@ -128,38 +228,91 @@ def register_partition_rule(op: str) -> Callable:
 
 
 def partitioned_ops() -> list[str]:
+    """Sorted names of every op that registered a PartitionRule."""
     return sorted(_RULES)
 
 
 def plan_for(op: str, mesh, *args, impl: str | None = None, **kwargs):
     """Resolve the op's PartitionRule against ``mesh`` (a Mesh or MeshSpec).
 
-    Returns None — replication — when the op has no rule, the partition axis
-    is trivial, or the rule's divisibility checks fail (the graceful-
-    degradation contract shared with parallel/sharding.py).
+    Args: ``op`` — registry op name; ``mesh`` — the mesh (or device-free
+    MeshSpec) whose partition levels the rule sees; ``*args`` / ``**kwargs``
+    — the op call's operands (arrays or ShapeDtypeStructs; plans resolve
+    from shapes alone) and keyword parameters; ``impl`` — the registry impl
+    the plan's local function will dispatch to.
+
+    Walks the replication fallback ladder: the full level stack (pod×model
+    on a multi-pod mesh) is offered first; each time the rule declines, the
+    outermost level is dropped. Returns None — replication — when the op
+    has no rule, no non-trivial level exists, or every rung fails (the
+    graceful-degradation contract shared with parallel/sharding.py).
     """
     rule = _RULES.get(op)
     if rule is None:
         return None
-    axis = partition_axis(mesh)
-    n = int(mesh.shape[axis])
-    if n <= 1:
-        return None
-    return rule(axis, n, *args, impl=impl, **kwargs)
+    levels = partition_levels(mesh)
+    while levels:
+        plan = rule(levels, *args, impl=impl, **kwargs)
+        if plan is not None:
+            return plan
+        levels = levels[1:]
+    return None
 
 
 def plan_collective_bytes(plan: PartitionPlan | None) -> int:
-    """Total per-device collective payload of a plan (0 for replication)."""
+    """Total per-device collective payload of ``plan``, summed across every
+    level (0 for replication)."""
     if plan is None:
         return 0
     return sum(c.nbytes for c in plan.collectives)
 
 
+def local_operand_structs(plan: PartitionPlan | None, mesh, args) -> tuple:
+    """Per-device shard geometry of each live operand under ``plan``.
+
+    Args: ``plan`` — a plan from ``plan_for`` (None means replication:
+    operands pass through whole); ``mesh`` — the Mesh or MeshSpec the plan
+    was resolved against; ``args`` — the positional operands (arrays or
+    ShapeDtypeStructs; ``None`` entries are skipped, mirroring
+    ``sharded_call``).
+
+    Returns one ``jax.ShapeDtypeStruct`` per live operand with every
+    sharded dimension divided by the product of its spec axes' sizes — the
+    shapes the registered impl actually sees inside ``shard_map``. This is
+    what keys autotune records under a mesh: tuned block geometry is only
+    valid for the *local* shapes the kernel ran on.
+    """
+    live = [a for a in args if a is not None]
+    if plan is None:
+        return tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in live)
+    out = []
+    for a, spec in zip(args, plan.in_specs):
+        if a is None:
+            continue
+        shape = list(a.shape)
+        for d, entry in enumerate(tuple(spec)):
+            if entry is None:
+                continue
+            names = (entry,) if isinstance(entry, str) else tuple(entry)
+            for name in names:
+                shape[d] //= int(mesh.shape[name])
+        out.append(jax.ShapeDtypeStruct(tuple(shape), a.dtype))
+    return tuple(out)
+
+
 def sharded_call(op: str, mesh, *args, impl: str | None = None, **kwargs):
     """Run ``op`` sharded over ``mesh`` through whichever registered impl is
     selected, falling back to a plain (replicated) ``kernel_call`` when no
-    plan applies. This is the single seam ops.py routes mesh-aware calls
-    through — no per-call spec plumbing anywhere else.
+    plan applies.
+
+    Args: ``op`` — registry op name; ``mesh`` — a real ``jax.sharding.Mesh``
+    (a MeshSpec resolves plans but cannot execute them); ``*args`` — the
+    positional operands (``None`` holes allowed, e.g. linear_attention's
+    optional u/s0); ``impl``/``**kwargs`` — forwarded to the registry
+    dispatch. Returns exactly what the unsharded op returns.
+
+    This is the single seam ops.py routes mesh-aware calls through — no
+    per-call spec plumbing anywhere else.
     """
     impl = registry.resolve_impl(impl)
     plan = plan_for(op, mesh, *args, impl=impl, **kwargs)
@@ -190,19 +343,32 @@ def _nbytes(shape, dtype) -> int:
     return math.prod(shape) * jnp.dtype(dtype).itemsize
 
 
+def _per_level_psum_costs(levels, shape, dtype) -> tuple:
+    """One all_reduce CollectiveCost per level, innermost (intra-pod) first —
+    the firing order of ``hierarchical_psum``."""
+    return tuple(
+        CollectiveCost("all_reduce", axis, _nbytes(shape, dtype), n)
+        for axis, n in reversed(tuple(levels))
+    )
+
+
 # ---------------------------------------------------------------------------
 # Rules
 # ---------------------------------------------------------------------------
 
 
 @register_partition_rule("gemm")
-def _gemm_rule(axis, n, a, b, *, impl=None, out_dtype=None,
+def _gemm_rule(levels, a, b, *, impl=None, out_dtype=None,
                accum_dtype=jnp.float32, **blocks):
-    """K-sharded GEMM with a psum epilogue (the paper's split-K over the
-    chiplet axis); M-row sharding when K resists; replication when both do."""
+    """K-sharded GEMM with a hierarchical psum epilogue (the paper's split-K
+    over the chiplet axis; on a multi-pod mesh the intra-pod psum runs
+    before the cross-pod psum so the D2D link moves one buffer per pod);
+    M-row sharding when K resists; the level ladder handles the rest."""
     M, K = a.shape
     N = b.shape[1]
     out_dtype = out_dtype or a.dtype
+    n = _ntot(levels)
+    ax = _joint(levels)
 
     if K % n == 0:
         def local(a_l, b_l):
@@ -210,17 +376,16 @@ def _gemm_rule(axis, n, a, b, *, impl=None, out_dtype=None,
                 "gemm", a_l, b_l, out_dtype=accum_dtype,
                 accum_dtype=accum_dtype, impl=impl, **blocks,
             )
-            return jax.lax.psum(part, axis).astype(out_dtype)
+            return hierarchical_psum(part, levels).astype(out_dtype)
 
         return PartitionPlan(
-            op="gemm", axis=axis, n=n,
-            in_specs=(P(None, axis), P(axis, None)),
+            op="gemm", levels=tuple(levels),
+            in_specs=(P(None, ax), P(ax, None)),
             out_specs=P(None, None),
             local_fn=local,
-            collectives=(
-                CollectiveCost("all_reduce", axis, _nbytes((M, N), accum_dtype)),
-            ),
-            note=f"k-sharded ({K}/{n} per device), psum epilogue",
+            collectives=_per_level_psum_costs(levels, (M, N), accum_dtype),
+            note=f"k-sharded ({K}/{n} per device over {_levels_note(levels)})"
+                 ", psum epilogue",
         )
 
     if M % n == 0:
@@ -231,49 +396,60 @@ def _gemm_rule(axis, n, a, b, *, impl=None, out_dtype=None,
             )
 
         return PartitionPlan(
-            op="gemm", axis=axis, n=n,
-            in_specs=(P(axis, None), P(None, None)),
-            out_specs=P(axis, None),
+            op="gemm", levels=tuple(levels),
+            in_specs=(P(ax, None), P(None, None)),
+            out_specs=P(ax, None),
             local_fn=local,
-            note=f"m-row-sharded ({M}/{n} per device)",
+            note=f"m-row-sharded ({M}/{n} per device over "
+                 f"{_levels_note(levels)})",
         )
     return None
 
 
-def _head_sharded_attn(op, axis, n, q, k, kv_heads: int, in_specs, out_specs,
+def _head_sharded_attn(op, levels, kv_heads: int, in_specs, out_specs,
                        local_fn, note):
-    if kv_heads % n != 0:
-        return None  # TP-hostile head count: replicate (GQA groups stay whole)
+    """Shared GQA head-sharding contract: the kv-head count must divide the
+    total shard count (head groups place per-pod before per-device, and a
+    GQA group never splits across devices); otherwise decline this rung."""
+    if kv_heads % _ntot(levels) != 0:
+        return None
     return PartitionPlan(
-        op=op, axis=axis, n=n, in_specs=in_specs, out_specs=out_specs,
+        op=op, levels=tuple(levels), in_specs=in_specs, out_specs=out_specs,
         local_fn=local_fn, note=note,
     )
 
 
 @register_partition_rule("flash_attention")
-def _flash_rule(axis, n, q, k, v, *, impl=None, **kwargs):
+def _flash_rule(levels, q, k, v, *, impl=None, **kwargs):
     """GQA-aware head sharding: q heads AND kv heads split together so every
-    device keeps whole (kv-head x group) blocks; TP-hostile counts (e.g. 20
-    or 25 heads) replicate instead, via the same divisibility contract as
-    parallel/sharding.py."""
+    device keeps whole (kv-head x group) blocks; on a multi-pod mesh head
+    groups split across pods first, then across the chiplet axis within
+    each pod. TP-hostile counts (e.g. 20 or 25 heads) drop a level or
+    replicate, via the same divisibility contract as parallel/sharding.py."""
     K = k.shape[1]
+    n = _ntot(levels)
+    ax = _joint(levels)
 
     def local(q_l, k_l, v_l):
         return registry.kernel_call(
             "flash_attention", q_l, k_l, v_l, impl=impl, **kwargs
         )
 
-    h4 = P(None, axis, None, None)
+    h4 = P(None, ax, None, None)
     return _head_sharded_attn(
-        "flash_attention", axis, n, q, k, K,
+        "flash_attention", levels, K,
         in_specs=(h4, h4, h4), out_specs=h4, local_fn=local,
-        note=f"head-sharded ({K}/{n} kv heads per device)",
+        note=f"head-sharded ({K}/{n} kv heads per device over "
+             f"{_levels_note(levels)})",
     )
 
 
 @register_partition_rule("decode_attention")
-def _decode_rule(axis, n, q, k, v, position, *, impl=None, **kwargs):
+def _decode_rule(levels, q, k, v, position, *, impl=None, **kwargs):
+    """Same GQA head rule as flash_attention (position stays replicated)."""
     K = k.shape[1]
+    n = _ntot(levels)
+    ax = _joint(levels)
 
     def local(q_l, k_l, v_l, pos_l):
         return registry.kernel_call(
@@ -281,24 +457,28 @@ def _decode_rule(axis, n, q, k, v, position, *, impl=None, **kwargs):
         )
 
     return _head_sharded_attn(
-        "decode_attention", axis, n, q, k, K,
-        in_specs=(P(None, axis, None), P(None, axis, None, None),
-                  P(None, axis, None, None), P(None)),
-        out_specs=P(None, axis, None),
+        "decode_attention", levels, K,
+        in_specs=(P(None, ax, None), P(None, ax, None, None),
+                  P(None, ax, None, None), P(None)),
+        out_specs=P(None, ax, None),
         local_fn=local,
-        note=f"head-sharded ({K}/{n} kv heads per device)",
+        note=f"head-sharded ({K}/{n} kv heads per device over "
+             f"{_levels_note(levels)})",
     )
 
 
 @register_partition_rule("linear_attention")
-def _linear_attention_rule(axis, n, r, k, v, w_log, u=None, s0=None, *,
+def _linear_attention_rule(levels, r, k, v, w_log, u=None, s0=None, *,
                            impl=None, **kwargs):
     """Head-sharded chunked state scan: every stream (r/k/v/decay, the u
-    bonus, the carried state) splits on H, so the recurrence is embarrassingly
-    parallel across devices — no collective epilogue at all."""
+    bonus, the carried state) splits on H — across pods first, then within —
+    so the recurrence is embarrassingly parallel across devices: no
+    collective epilogue at all."""
     H = r.shape[1]
+    n = _ntot(levels)
     if H % n != 0:
         return None
+    ax = _joint(levels)
 
     def local(r_l, k_l, v_l, w_l, u_l, s0_l):
         return registry.kernel_call(
@@ -306,47 +486,55 @@ def _linear_attention_rule(axis, n, r, k, v, w_log, u=None, s0=None, *,
             impl=impl, **kwargs,
         )
 
-    h4 = P(None, axis, None, None)
+    h4 = P(None, ax, None, None)
     return PartitionPlan(
-        op="linear_attention", axis=axis, n=n,
-        in_specs=(h4, h4, h4, h4, P(axis, None), h4),
+        op="linear_attention", levels=tuple(levels),
+        in_specs=(h4, h4, h4, h4, P(ax, None), h4),
         out_specs=(h4, h4),
         local_fn=local,
-        note=f"head-sharded ({H}/{n} heads per device)",
+        note=f"head-sharded ({H}/{n} heads per device over "
+             f"{_levels_note(levels)})",
     )
 
 
 @register_partition_rule("spmm")
-def _spmm_rule(axis, n, values, cols, dense, *, impl=None, **kwargs):
-    """Row-sharded ELL: each device streams its own value/index rows against
+def _spmm_rule(levels, values, cols, dense, *, impl=None, **kwargs):
+    """Row-sharded ELL: rows split across pods, then across the chiplet axis
+    within each pod; each device streams its own value/index rows against
     the replicated dense operand — the chiplet-local SU indirection."""
     R = values.shape[0]
+    n = _ntot(levels)
     if R % n != 0:
         return None
+    ax = _joint(levels)
 
     def local(v_l, c_l, d_l):
         return registry.kernel_call("spmm", v_l, c_l, d_l, impl=impl, **kwargs)
 
     return PartitionPlan(
-        op="spmm", axis=axis, n=n,
-        in_specs=(P(axis, None), P(axis, None), P(None, None)),
-        out_specs=P(axis, None),
+        op="spmm", levels=tuple(levels),
+        in_specs=(P(ax, None), P(ax, None), P(None, None)),
+        out_specs=P(ax, None),
         local_fn=local,
-        note=f"row-sharded ({R}/{n} ELL rows per device)",
+        note=f"row-sharded ({R}/{n} ELL rows per device over "
+             f"{_levels_note(levels)})",
     )
 
 
 @register_partition_rule("bsr_spmm")
-def _bsr_rule(axis, n, tile_values, tile_rows, tile_cols, dense, *,
+def _bsr_rule(levels, tile_values, tile_rows, tile_cols, dense, *,
               num_rows, impl=None, **kwargs):
     """Tile-sharded BSR (nnz-parallel): devices own disjoint tile subsets,
-    each scatter-accumulates a full-height partial, and a psum stitches the
-    rows back — the D2D-crossing sparse reduction."""
+    each scatter-accumulates a full-height partial, and a hierarchical psum
+    stitches the rows back — intra-pod first, so the D2D crossing moves one
+    reduced partial per pod."""
     T = tile_values.shape[0]
+    n = _ntot(levels)
     if T % n != 0 or T == 0:
         return None
     F = dense.shape[1]
     bm_tile = tile_values.shape[1]
+    ax = _joint(levels)
 
     def local(tv_l, tr_l, tc_l, d_l):
         part = registry.kernel_call(
@@ -358,28 +546,29 @@ def _bsr_rule(axis, n, tile_values, tile_rows, tile_cols, dense, *,
         # devices stay uninitialised locally, so mask them before the psum
         present = jnp.zeros((num_rows // bm_tile,), bool).at[tr_l].set(True)
         row_mask = jnp.repeat(present, bm_tile)[:, None]
-        return jax.lax.psum(jnp.where(row_mask, part, 0.0), axis)
+        return hierarchical_psum(jnp.where(row_mask, part, 0.0), levels)
 
     return PartitionPlan(
-        op="bsr_spmm", axis=axis, n=n,
-        in_specs=(P(axis, None, None), P(axis), P(axis), P(None, None)),
+        op="bsr_spmm", levels=tuple(levels),
+        in_specs=(P(ax, None, None), P(ax), P(ax), P(None, None)),
         out_specs=P(None, None),
         local_fn=local,
-        collectives=(
-            CollectiveCost(
-                "all_reduce", axis, _nbytes((num_rows, F), jnp.float32)
-            ),
-        ),
-        note=f"tile-sharded ({T}/{n} nnz tiles per device), psum epilogue",
+        collectives=_per_level_psum_costs(levels, (num_rows, F), jnp.float32),
+        note=f"tile-sharded ({T}/{n} nnz tiles per device over "
+             f"{_levels_note(levels)}), psum epilogue",
     )
 
 
 @register_partition_rule("spmspm")
-def _spmspm_rule(axis, n, a_values, a_cols, b_values, b_rows, *,
+def _spmspm_rule(levels, a_values, a_cols, b_values, b_rows, *,
                  contraction_dim, impl=None, **kwargs):
+    """A-row-sharded sparse×sparse: A's rows split across pods then within,
+    B replicated; each device intersects its own rows independently."""
     R = a_values.shape[0]
+    n = _ntot(levels)
     if R % n != 0:
         return None
+    ax = _joint(levels)
 
     def local(av_l, ac_l, bv_l, br_l):
         return registry.kernel_call(
@@ -388,11 +577,12 @@ def _spmspm_rule(axis, n, a_values, a_cols, b_values, b_rows, *,
         )
 
     return PartitionPlan(
-        op="spmspm", axis=axis, n=n,
-        in_specs=(P(axis, None), P(axis, None), P(None, None), P(None, None)),
-        out_specs=P(axis, None),
+        op="spmspm", levels=tuple(levels),
+        in_specs=(P(ax, None), P(ax, None), P(None, None), P(None, None)),
+        out_specs=P(ax, None),
         local_fn=local,
-        note=f"a-row-sharded ({R}/{n} rows per device)",
+        note=f"a-row-sharded ({R}/{n} rows per device over "
+             f"{_levels_note(levels)})",
     )
 
 
@@ -406,34 +596,58 @@ def _halo_block(width: int, cap: int, halo: int) -> int:
 
 
 @register_partition_rule("stencil")
-def _stencil_rule(axis, n, grid, *, offsets, weights, impl=None, bx=None,
+def _stencil_rule(levels, grid, *, offsets, weights, impl=None, bx=None,
                   **kwargs):
-    """X-sharded grid with ppermute halo exchange (the SARIS boundary planes
-    crossing the D2D link). Each device pads its slab with ``h`` neighbour
-    planes per side — the ring wrap IS the periodic boundary — then runs the
-    registered impl on the padded slab; offsets never reach past the halo, so
-    the impl's own periodic wrap never engages inside the slab.
+    """X-sharded grid with ppermute halo exchange (the SARIS boundary planes).
+
+    Each device pads its slab with ``h`` neighbour planes per side — the
+    ring wrap IS the periodic boundary — then runs the registered impl on
+    the padded slab; offsets never reach past the halo, so the impl's own
+    periodic wrap never engages inside the slab.
+
+    On a two-level mesh the slab order is pod-major: most neighbours sit on
+    the same pod, so the exchange is an intra-pod ``ppermute`` ring over the
+    chiplet axis, plus ONE cross-pod boundary hop per direction — an extra
+    ``ppermute`` over the pod axis whose payload replaces the intra-pod
+    wrap value exactly at the pod-edge devices (its own ring wrap carries
+    the global periodic boundary across the D2D link).
     """
     import numpy as np
 
     X, Y, Z = grid.shape
     offs = np.asarray(offsets)
     h = int(np.abs(offs[:, 0]).max(initial=0))
+    n = _ntot(levels)
     if X % n != 0:
         return None
     lx = X // n
     if h > lx:
-        return None  # halo wider than a slab: replicate rather than multi-hop
+        return None  # halo wider than a slab: drop a level rather than multi-hop
     padded_x = lx + 2 * h
     bx_cap = registry.resolve_blocks("stencil", bx=bx)["bx"]
     bx_local = _halo_block(padded_x, bx_cap, max(h, 1))
-    fwd = [(i, (i + 1) % n) for i in range(n)]
-    bwd = [(i, (i - 1) % n) for i in range(n)]
+    ax = _joint(levels)
+    inner_axis, tp = levels[-1]
+    outer = levels[:-1]  # () or the single ("pod", P) level above
+    fwd = [(i, (i + 1) % tp) for i in range(tp)]
+    bwd = [(i, (i - 1) % tp) for i in range(tp)]
+    if outer:
+        (pod_axis, pods), = outer
+        pod_fwd = [(i, (i + 1) % pods) for i in range(pods)]
+        pod_bwd = [(i, (i - 1) % pods) for i in range(pods)]
 
     def local(g_l):
         if h:
-            lo = jax.lax.ppermute(g_l[-h:], axis, fwd)  # left neighbour tail
-            hi = jax.lax.ppermute(g_l[:h], axis, bwd)  # right neighbour head
+            lo = jax.lax.ppermute(g_l[-h:], inner_axis, fwd)  # left tail
+            hi = jax.lax.ppermute(g_l[:h], inner_axis, bwd)  # right head
+            if outer:
+                # pod-edge devices got the intra-pod wrap; what they need is
+                # the neighbouring pod's boundary slab, one D2D hop away
+                m = jax.lax.axis_index(inner_axis)
+                lo = jnp.where(m == 0,
+                               jax.lax.ppermute(lo, pod_axis, pod_fwd), lo)
+                hi = jnp.where(m == tp - 1,
+                               jax.lax.ppermute(hi, pod_axis, pod_bwd), hi)
             padded = jnp.concatenate([lo, g_l, hi], axis=0)
         else:
             padded = g_l
@@ -444,14 +658,18 @@ def _stencil_rule(axis, n, grid, *, offsets, weights, impl=None, bx=None,
         return out[h:h + lx] if h else out
 
     halo_bytes = _nbytes((h, Y, Z), grid.dtype)
+    colls = []
+    if h:
+        colls += [CollectiveCost("permute", inner_axis, halo_bytes, tp)] * 2
+        if outer:
+            colls += [CollectiveCost("permute", pod_axis, halo_bytes, pods)] * 2
     return PartitionPlan(
-        op="stencil", axis=axis, n=n,
-        in_specs=(P(axis, None, None),),
-        out_specs=P(axis, None, None),
+        op="stencil", levels=tuple(levels),
+        in_specs=(P(ax, None, None),),
+        out_specs=P(ax, None, None),
         local_fn=local,
-        collectives=(
-            CollectiveCost("permute", axis, halo_bytes),
-            CollectiveCost("permute", axis, halo_bytes),
-        ) if h else (),
-        note=f"x-sharded ({lx} planes per device), halo h={h} via ppermute",
+        collectives=tuple(colls),
+        note=f"x-sharded ({lx} planes per device over {_levels_note(levels)})"
+             f", halo h={h} via ppermute"
+             + (" + pod boundary hop" if h and outer else ""),
     )

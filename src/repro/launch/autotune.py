@@ -20,7 +20,20 @@ translation: per **(op, operand shapes, dtypes, backend, impl)** it
 
 A candidate is only selected if it measured strictly faster than the
 default geometry, so a recorded selection is never worse than the default
-it replaced. CLI::
+it replaced.
+
+**Tuning under a mesh.** When a ``mesh`` is passed (``benchmarks/run.py
+--autotune --mesh DxM`` or ``PxDxM``), every case is timed through the
+sharded dispatch (``ops.* (mesh=...)``) and — the part that matters for
+record validity — the entry is keyed by the **local shard geometry**
+(``partition.local_operand_structs``), not the global operand shapes: the
+kernel the block override feeds only ever sees the per-device shard, so a
+record tuned at global shape 256x256 over a 4-way K-shard is really
+evidence about 256x64 tiles. Records carry the mesh they were tuned under
+and ``record_matches_environment`` refuses to silently apply one across
+mesh boundaries.
+
+CLI::
 
     PYTHONPATH=src python -m repro.launch.autotune --out autotune_record.json
 
@@ -34,7 +47,7 @@ import dataclasses
 import json
 import os
 import time
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -51,17 +64,69 @@ RECORD_VERSION = 1
 
 @dataclasses.dataclass
 class TuneCase:
-    """One tunable call: operands, the dispatch-level callable, the candidate
-    geometries, and the StreamProgram builder the feasibility probe uses."""
+    """One tunable call.
+
+    Fields: ``op`` — the registry op name; ``args`` — the jax array
+    operands, passed positionally to ``fn``; ``fn`` — the dispatch-level
+    callable ``fn(*args, mesh=None)`` routed through ``ops.*`` (the measured
+    path is exactly the production path, sharded when a mesh is given);
+    ``candidates`` — partial block dicts, merged onto the registry defaults;
+    ``program`` — the StreamProgram builder the VMEM feasibility probe
+    uses; ``plan_kwargs`` — extra keyword operands the op's PartitionRule
+    needs to resolve a plan (e.g. ``num_rows`` for bsr_spmm, ``offsets`` /
+    ``weights`` for stencil); ``mesh`` — the mesh the case is tuned under
+    (None for single-device tuning; set by ``autotune``, not by factories).
+    """
 
     op: str
-    args: tuple  # jax array operands, passed positionally to fn
-    fn: Callable  # fn(*args) -> result, through ops.* dispatch
-    candidates: list[dict[str, int]]  # partial block dicts, merged on defaults
+    args: tuple
+    fn: Callable
+    candidates: list[dict[str, int]]
     program: Callable[[dict[str, int]], StreamProgram]
+    plan_kwargs: dict = dataclasses.field(default_factory=dict)
+    mesh: Any = None
+
+
+def mesh_tag(mesh) -> str | None:
+    """Canonical record tag for the mesh a search ran under: ``"2x4"`` /
+    ``"2x2x2"`` style (axis sizes in axis order), or None for no mesh.
+    Works for a Mesh or a device-free partition.MeshSpec."""
+    if mesh is None:
+        return None
+    return "x".join(str(int(mesh.shape[a])) for a in mesh.axis_names)
+
+
+def local_case_shapes(case: TuneCase, impl: str) -> tuple:
+    """The operand geometry that keys ``case``'s record entry.
+
+    Args: ``case`` — the TuneCase (its ``mesh`` decides); ``impl`` — the
+    resolved registry impl the plan would dispatch to.
+
+    Without a mesh this is just ``case.args``. Under a mesh it is the
+    per-device shard geometry from ``partition.local_operand_structs`` —
+    the shapes the kernel actually runs on, which is the only geometry a
+    tuned block size is evidence about. A case whose plan resolves to
+    replication keys identically to the unmeshed case (same local kernel,
+    same record entry — deliberately shared).
+    """
+    if case.mesh is None:
+        return case.args
+    from repro.kernels import partition
+
+    plan = partition.plan_for(
+        case.op, case.mesh, *case.args, impl=impl, **case.plan_kwargs
+    )
+    return partition.local_operand_structs(plan, case.mesh, case.args)
 
 
 def case_key(op: str, arrays, backend: str, impl: str) -> str:
+    """Record key for one tuning entry: ``op|shapes:dtypes|backend|impl``.
+
+    Args: ``op`` — op name; ``arrays`` — the operands whose shape/dtype
+    identify the tuned kernel geometry (pass the *local shard* structs when
+    tuning under a mesh — see ``local_case_shapes``); ``backend`` /
+    ``impl`` — the jax backend and registry impl the timings belong to.
+    """
     shapes = ",".join(
         f"{'x'.join(map(str, a.shape))}:{a.dtype}" for a in arrays
     )
@@ -69,7 +134,8 @@ def case_key(op: str, arrays, backend: str, impl: str) -> str:
 
 
 def _time_call(fn, args, *, reps: int, warmup: int = 1) -> float:
-    """Median wall-time per call in seconds (jit compile paid in warmup)."""
+    """Median wall-time of ``fn(*args)`` per call in seconds over ``reps``
+    measured calls (jit compile paid in ``warmup`` untimed calls)."""
     for _ in range(warmup):
         out = fn(*args)
     jax.block_until_ready(out)
@@ -92,9 +158,16 @@ def autotune_case(
 ) -> dict:
     """Search one case. Returns the record entry (winner + full audit trail).
 
-    ``time_candidate(case, blocks)`` may be injected for tests; the default
-    jits a fresh wrapper per candidate (a shared jit cache would silently
-    reuse the first candidate's compiled geometry).
+    Args: ``case`` — the TuneCase to search (its ``mesh`` field, when set,
+    routes every timed call through the sharded dispatch); ``budget_bytes``
+    — the VMEM ceiling the analytic prune checks candidates against;
+    ``reps`` — measured repetitions per candidate; ``time_candidate(case,
+    blocks)`` — may be injected for tests; the default jits a fresh wrapper
+    per candidate (a shared jit cache would silently reuse the first
+    candidate's compiled geometry).
+
+    Invariant: a non-default candidate is recorded only if it measured
+    strictly faster than the default geometry.
     """
     defaults = registry.block_defaults(case.op, overrides=False)
 
@@ -118,7 +191,8 @@ def autotune_case(
     if time_candidate is None:
 
         def time_candidate(case, blocks):
-            fn = jax.jit(lambda *a: case.fn(*a))  # fresh wrapper, fresh cache
+            # fresh wrapper, fresh cache; the mesh (if any) rides the closure
+            fn = jax.jit(lambda *a: case.fn(*a, mesh=case.mesh))
             return _time_call(fn, case.args, reps=reps)
 
     timed = []
@@ -170,7 +244,7 @@ def _gemm_case(rng) -> TuneCase:
         )
 
     return TuneCase(
-        "gemm", (a, b), lambda a, b: ops.gemm(a, b),
+        "gemm", (a, b), lambda a, b, mesh=None: ops.gemm(a, b, mesh=mesh),
         [{"bm": s, "bk": s, "bn": s} for s in (64, 128, 256)], program,
     )
 
@@ -194,7 +268,8 @@ def _flash_attention_case(rng) -> TuneCase:
 
     return TuneCase(
         "flash_attention", (q, k, v),
-        lambda q, k, v: ops.flash_attention(q, k, v, causal=True),
+        lambda q, k, v, mesh=None: ops.flash_attention(
+            q, k, v, causal=True, mesh=mesh),
         [{"bk": s} for s in (32, 64, 128, 256)], program,
     )
 
@@ -219,7 +294,8 @@ def _linear_attention_case(rng) -> TuneCase:
 
     return TuneCase(
         "linear_attention", (r, k, v, w),
-        lambda r, k, v, w: ops.linear_attention(r, k, v, w),
+        lambda r, k, v, w, mesh=None: ops.linear_attention(
+            r, k, v, w, mesh=mesh),
         [{"chunk": s} for s in (8, 16, 32)], program,
     )
 
@@ -241,7 +317,7 @@ def _spmm_case(rng) -> TuneCase:
 
     return TuneCase(
         "spmm", (A.values, A.cols, dense),
-        lambda v, c, d: ops.spmm(v, c, d),
+        lambda v, c, d, mesh=None: ops.spmm(v, c, d, mesh=mesh),
         [{"bm": s} for s in (32, 64, 128, 256)], program,
     )
 
@@ -267,8 +343,10 @@ def _bsr_spmm_case(rng) -> TuneCase:
 
     return TuneCase(
         "bsr_spmm", (A.tile_values, A.tile_rows, A.tile_cols, dense),
-        lambda tv, tr, tc, d: ops.bsr_spmm(tv, tr, tc, d, R),
+        lambda tv, tr, tc, d, mesh=None: ops.bsr_spmm(
+            tv, tr, tc, d, R, mesh=mesh),
         [{"bf": s} for s in (128, 256, 512)], program,
+        plan_kwargs={"num_rows": R},
     )
 
 
@@ -290,8 +368,10 @@ def _spmspm_case(rng) -> TuneCase:
 
     return TuneCase(
         "spmspm", (A.values, A.cols, B.values, B.cols),
-        lambda av, ac, bv, br: ops.spmspm(av, ac, bv, br, K),
+        lambda av, ac, bv, br, mesh=None: ops.spmspm(
+            av, ac, bv, br, K, mesh=mesh),
         [{"bm": m, "bn": n} for m in (8, 16, 32) for n in (64, 128)], program,
+        plan_kwargs={"contraction_dim": K},
     )
 
 
@@ -312,8 +392,9 @@ def _stencil_case(rng) -> TuneCase:
 
     return TuneCase(
         "stencil", (grid,),
-        lambda g: ops.stencil(g, offsets, weights),
+        lambda g, mesh=None: ops.stencil(g, offsets, weights, mesh=mesh),
         [{"bx": s} for s in (4, 8, 16, 32)], program,
+        plan_kwargs={"offsets": offsets, "weights": weights},
     )
 
 
@@ -346,7 +427,8 @@ def _decode_attention_case(rng) -> TuneCase:
 
     return TuneCase(
         "decode_attention", (q, k, v, pos),
-        lambda q, k, v, p: ops.decode_attention(q, k, v, p),
+        lambda q, k, v, p, mesh=None: ops.decode_attention(
+            q, k, v, p, mesh=mesh),
         [{"bs": s} for s in (128, 256, 512, 1024)], program,
     )
 
@@ -375,9 +457,23 @@ def autotune(
     reps: int = 3,
     seed: int = 0,
     suite: dict[str, Callable] | None = None,
+    mesh: Any = None,
+    time_candidate: Callable | None = None,
 ) -> dict:
-    """Search every suite case and return the tuning record (winners are NOT
-    yet applied — call ``apply_record``)."""
+    """Search every suite case and return the tuning record.
+
+    Args: ``ops_subset`` — restrict to these op names (KeyError on unknown
+    names); ``budget_bytes`` — VMEM ceiling for the analytic prune;
+    ``reps`` — measured repetitions per candidate; ``seed`` — operand RNG
+    seed (records are deterministic given a seed); ``suite`` — factory
+    table, defaulting to DEFAULT_SUITE; ``mesh`` — tune through the sharded
+    dispatch over this mesh, keying every entry by the LOCAL shard geometry
+    (see ``local_case_shapes``); ``time_candidate`` — test injection
+    forwarded to ``autotune_case``.
+
+    Returns the record dict (version, backend, impl, mesh tag, entries).
+    Winners are NOT yet applied — call ``apply_record``.
+    """
     suite = DEFAULT_SUITE if suite is None else suite
     if ops_subset:
         unknown = set(ops_subset) - set(suite)
@@ -393,23 +489,33 @@ def autotune(
         if ops_subset and name not in ops_subset:
             continue
         case = factory(rng)
-        entry = autotune_case(case, budget_bytes=budget_bytes, reps=reps)
-        entries[case_key(case.op, case.args, backend, impl)] = entry
+        case.mesh = mesh
+        entry = autotune_case(
+            case, budget_bytes=budget_bytes, reps=reps,
+            time_candidate=time_candidate,
+        )
+        key = case_key(case.op, local_case_shapes(case, impl), backend, impl)
+        entries[key] = entry
     return {
         "version": RECORD_VERSION,
         "backend": backend,
         "impl": impl,
+        "mesh": mesh_tag(mesh),
         "entries": entries,
     }
 
 
 def save_record(record: dict, path: str) -> None:
+    """Persist ``record`` to ``path`` as deterministic (sorted, indented)
+    JSON with a trailing newline."""
     with open(path, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
         f.write("\n")
 
 
 def load_record(path: str) -> dict:
+    """Load a tuning record from ``path``; raises ValueError when its
+    version is not the RECORD_VERSION this module writes."""
     with open(path) as f:
         record = json.load(f)
     if record.get("version") != RECORD_VERSION:
@@ -420,30 +526,42 @@ def load_record(path: str) -> dict:
     return record
 
 
-def record_matches_environment(record: dict) -> bool:
-    """Was this record tuned for the current (backend, impl)? Geometry tuned
-    for one impl is not evidence about another."""
+def record_matches_environment(record: dict, *, mesh: Any = None) -> bool:
+    """Was ``record`` tuned for the current (backend, impl) and for ``mesh``?
+
+    Geometry tuned for one impl is not evidence about another; likewise a
+    record tuned under one mesh keys (and tuned) the local shard shapes of
+    THAT mesh, so it only applies where the same mesh (by ``mesh_tag``) is
+    in play. Records predating the mesh field match ``mesh=None``.
+    """
     return (
         record.get("backend") == jax.default_backend()
         and record.get("impl") == registry.resolve_impl(None)
+        and record.get("mesh") == mesh_tag(mesh)
     )
 
 
-def apply_record(record: dict, *, force: bool = False) -> dict[str, dict[str, int]]:
+def apply_record(record: dict, *, force: bool = False,
+                 mesh: Any = None) -> dict[str, dict[str, int]]:
     """Write every recorded winner through ``registry.set_block_override``
-    (deterministic: no timing, no search). Returns {op: blocks} applied.
+    (deterministic: no timing, no search).
 
-    Raises if the record was tuned for a different backend/impl than the one
-    currently dispatching — applying it would silently mistune, the exact
-    bug class the tuner exists to remove. ``force=True`` overrides.
+    Args: ``record`` — a dict from ``autotune``/``load_record``; ``force``
+    — skip the environment check; ``mesh`` — the mesh this session
+    dispatches kernels over (None for single-device), matched against the
+    record's tuned mesh. Returns {op: blocks} applied.
+
+    Raises if the record was tuned for a different backend/impl/mesh than
+    the one currently dispatching — applying it would silently mistune, the
+    exact bug class the tuner exists to remove. ``force=True`` overrides.
     """
-    if not force and not record_matches_environment(record):
+    if not force and not record_matches_environment(record, mesh=mesh):
         raise ValueError(
             f"tuning record is for backend={record.get('backend')!r} "
-            f"impl={record.get('impl')!r} but this session dispatches "
-            f"backend={jax.default_backend()!r} "
-            f"impl={registry.resolve_impl(None)!r}; re-run the autotuner "
-            f"(or pass force=True)"
+            f"impl={record.get('impl')!r} mesh={record.get('mesh')!r} but "
+            f"this session dispatches backend={jax.default_backend()!r} "
+            f"impl={registry.resolve_impl(None)!r} mesh={mesh_tag(mesh)!r}; "
+            f"re-run the autotuner (or pass force=True)"
         )
     applied = {}
     for entry in record["entries"].values():
@@ -454,7 +572,10 @@ def apply_record(record: dict, *, force: bool = False) -> dict[str, dict[str, in
 
 
 def record_deltas(record: dict) -> dict[str, dict]:
-    """Tuned-vs-default summary per op: the perf-harness reporting view."""
+    """Tuned-vs-default summary per op of one tuning ``record`` — the
+    perf-harness reporting view. Returns {op: {blocks, default_blocks,
+    us_per_call, default_us, delta_pct, non_default}} with None times
+    preserved (a case whose candidates were all pruned has no timing)."""
     out = {}
     for entry in record["entries"].values():
         tuned, default = entry["us_per_call"], entry["default_us"]
@@ -475,6 +596,8 @@ def record_deltas(record: dict) -> dict[str, dict]:
 
 
 def main(argv=None) -> None:
+    """CLI entry point: search, persist, and report. ``argv`` defaults to
+    sys.argv (see ``--help`` for the flags)."""
     ap = argparse.ArgumentParser(
         description="benchmark-driven block-size autotuner; persists a JSON "
         "tuning record later runs load deterministically"

@@ -380,7 +380,11 @@ def op_roofline_cells(multi_pod: bool = False) -> list[dict]:
     """Per-op D2D-costed rooflines on the production mesh — the Fig. 13
     scaling story as numbers: each partitioned op's operational-intensity
     figures gain a ``topology.collective_seconds`` term for the collectives
-    its PartitionRule fires (psum / halo ppermute) at the level it crosses.
+    its PartitionRule fires (psum / halo ppermute) at each level it crosses.
+    With ``multi_pod`` the plans resolve two-level (pod×model) and every
+    cell carries ``collective_s_per_level`` — intra-pod (``model``, ICI
+    bandwidth) vs cross-pod (``pod``, D2D bandwidth) seconds side by side —
+    so the cells show where the narrow D2D link, not HBM, is binding.
 
     Uses a device-free partition.MeshSpec: no devices are constructed, so
     this runs anywhere the dry-run runs.
@@ -394,16 +398,20 @@ def op_roofline_cells(multi_pod: bool = False) -> list[dict]:
     for op, args, kwargs, flops, nbytes in _op_roofline_cases():
         plan = partition.plan_for(op, mesh, *args, **kwargs)
         n = plan.n if plan else 1
-        d2d = roofline.plan_collective_seconds(plan)
+        by_level = roofline.plan_collective_seconds_by_level(plan)
+        d2d = sum(by_level.values())
         terms = roofline.roofline_terms(flops / n, nbytes / n, 0.0, d2d_s=d2d)
         out.append({
             "op": op,
             "mesh": "x".join(str(s) for s in shape.values()),
             "partition": plan.note if plan else "replicated",
+            "partition_levels": [f"{a}={ln}" for a, ln in plan.levels]
+            if plan else [],
             "devices_used": n,
             "flops_per_device": flops / n,
             "bytes_per_device": nbytes / n,
             "d2d_bytes": partition.plan_collective_bytes(plan),
+            "collective_s_per_level": by_level,
             "oi_flops_per_byte": flops / nbytes if nbytes else 0.0,
             "roofline": terms,
         })

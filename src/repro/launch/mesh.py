@@ -23,26 +23,42 @@ def make_mesh(shape: tuple, axes: tuple):
     return jax.make_mesh(shape, axes)
 
 
-def host_device_mesh(tp: int = 1):
-    """Whatever devices exist locally, as (data, model).
+def host_device_mesh(tp: int = 1, pods: int = 1):
+    """Whatever devices exist locally, as (data, model) — or, when ``pods``
+    is requested, as the three-axis (pod, data, model) hierarchy.
 
-    When ``tp`` does not divide the device count, degrades to the largest
-    dividing tp with a warning — the same graceful-degradation contract as
-    ``parallel/sharding.py`` — and raises ``ValueError`` when no valid
-    factorisation exists at all (tp < 1).
+    Args: ``tp`` — the model-axis (chiplet-crossbar) size; ``pods`` — the
+    pod-axis (D2D-link) size. ``pods=1`` keeps the historical two-axis
+    shape; any other value yields a three-axis mesh (the pod axis is kept
+    even if it degrades to size 1, so callers written for the pod axis see
+    a stable set of axis names).
+
+    When ``pods * tp`` does not divide the device count, degrades with a
+    warning — the largest dividing ``pods`` first, then the largest ``tp``
+    that divides the per-pod remainder — the same graceful-degradation
+    contract as ``parallel/sharding.py``. Raises ``ValueError`` when no
+    valid factorisation exists at all (``tp < 1`` or ``pods < 1``).
     """
     n = len(jax.devices())
-    if tp < 1:
+    if tp < 1 or pods < 1:
         raise ValueError(
-            f"host_device_mesh: tp={tp} is not a valid model-axis size "
-            f"(need 1 <= tp, have {n} devices)"
+            f"host_device_mesh: tp={tp}, pods={pods} is not a valid mesh "
+            f"factorisation (need 1 <= pods and 1 <= tp, have {n} devices)"
         )
-    if n % tp != 0:
-        fit = max(t for t in range(1, min(tp, n) + 1) if n % t == 0)
+    want_tp, want_pods = tp, pods
+    if n % pods != 0:
+        pods = max(p for p in range(1, min(pods, n) + 1) if n % p == 0)
+    per_pod = n // pods
+    if per_pod % tp != 0:
+        tp = max(t for t in range(1, min(tp, per_pod) + 1) if per_pod % t == 0)
+    if (tp, pods) != (want_tp, want_pods):
         warnings.warn(
-            f"host_device_mesh: tp={tp} does not divide {n} devices; "
-            f"degrading to tp={fit}",
+            f"host_device_mesh: pods={want_pods} x tp={want_tp} does not "
+            f"divide {n} devices; degrading to tp={tp}, pods={pods}",
             stacklevel=2,
         )
-        tp = fit
-    return jax.make_mesh((n // tp, tp), ("data", "model"))
+    if want_pods == 1:
+        return jax.make_mesh((n // tp, tp), ("data", "model"))
+    return jax.make_mesh(
+        (pods, per_pod // tp, tp), ("pod", "data", "model")
+    )

@@ -108,15 +108,31 @@ def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
     return terms
 
 
-def plan_collective_seconds(plan) -> float:
-    """Price one partition plan's collective epilogue through the topology
-    bandwidth model (ring-algorithm time per mesh level)."""
+def plan_collective_seconds_by_level(plan) -> dict:
+    """Price one partition plan's collectives per mesh level.
+
+    Returns ``{axis: seconds}`` — e.g. ``{"model": ..., "pod": ...}`` for a
+    two-level plan — where each collective is priced through the topology
+    bandwidth model at its own level's link bandwidth (on-chiplet ICI for
+    ``model``, the D2D link for ``pod``) and its own participant count
+    (``CollectiveCost.n``; 0 falls back to the plan's total shard count).
+    Empty dict for replication."""
     if plan is None:
-        return 0.0
-    return sum(
-        topology.collective_seconds(c.kind, c.nbytes, c.axis, plan.n)
-        for c in plan.collectives
-    )
+        return {}
+    out: dict[str, float] = {}
+    for c in plan.collectives:
+        n = c.n or plan.n
+        out[c.axis] = out.get(c.axis, 0.0) + topology.collective_seconds(
+            c.kind, c.nbytes, c.axis, n
+        )
+    return out
+
+
+def plan_collective_seconds(plan) -> float:
+    """Total collective time of one partition plan: the per-level prices of
+    ``plan_collective_seconds_by_level`` summed (the single ``d2d_s``
+    roofline term)."""
+    return sum(plan_collective_seconds_by_level(plan).values())
 
 
 def op_collective_seconds(op: str, mesh, *args, **kwargs) -> float:

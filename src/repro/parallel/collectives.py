@@ -16,6 +16,27 @@ from jax.sharding import PartitionSpec as P
 from repro.parallel.compat import shard_map
 
 
+def hierarchical_psum(x, levels):
+    """Reduce ``x`` across a hierarchy of mesh axes, innermost level first.
+
+    ``levels`` is an outer→inner tuple of ``(axis_name, size)`` pairs (the
+    ``PartitionPlan.levels`` vocabulary from ``kernels/partition.py``): for
+    Occamy's two-level pod×model plans this fires the intra-pod (chiplet
+    crossbar) psum before the cross-pod (D2D link) psum, so the narrow D2D
+    hop carries one already-reduced buffer per pod instead of one per device
+    — the hierarchical all-reduce the paper's Fig. 13 scaling relies on.
+
+    Args: ``x`` — the per-device partial (any array); ``levels`` — the
+    ``((axis, n), ...)`` hierarchy, outermost first. Size-1 levels are
+    skipped. Returns the fully reduced array, replicated across every level's
+    axis. Must run inside a ``shard_map`` whose mesh names all the axes.
+    """
+    for axis, n in reversed(tuple(levels)):
+        if n > 1:
+            x = jax.lax.psum(x, axis)
+    return x
+
+
 def ep_expert_ffn(disp, wi, wg, wo, act, mesh, dp, *, ep_axis="model"):
     """Expert-parallel FFN on capacity-dispatched tokens.
 

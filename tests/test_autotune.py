@@ -197,3 +197,70 @@ def test_case_key_is_shape_and_dtype_specific():
     k2 = at.case_key("gemm", (b,), "cpu", "xla")
     assert k1 != k2
     assert "4x8" in k1 and "float32" in k1 and "cpu" in k1 and "xla" in k1
+
+
+# ---------------------------------------------------------------------------
+# Tuning under a mesh: records key by the LOCAL shard geometry
+# (regression for the ROADMAP bug: global-shape keys made mesh-tuned
+# records indistinguishable from — and silently interchangeable with —
+# single-device ones, despite tuning entirely different kernel shapes)
+# ---------------------------------------------------------------------------
+
+
+def _mesh_2x4():
+    from repro.kernels import partition
+
+    return partition.MeshSpec({"data": 2, "model": 4})
+
+
+def test_autotune_record_keys_by_local_shard_geometry():
+    mesh = _mesh_2x4()
+    rec = at.autotune(["gemm"], mesh=mesh, time_candidate=lambda c, b: 1.0)
+    (key,) = rec["entries"]
+    # the 256x256x256 gemm K-shards 4-way over model: the tuned geometry is
+    # the 256x64 / 64x256 local tiles, and the record key says so
+    assert "256x64" in key and "64x256" in key and "256x256" not in key
+    assert rec["mesh"] == "2x4"
+    rec_flat = at.autotune(["gemm"], time_candidate=lambda c, b: 1.0)
+    (key_flat,) = rec_flat["entries"]
+    assert "256x256" in key_flat and rec_flat.get("mesh") is None
+    assert key != key_flat
+
+
+def test_autotune_mesh_keys_ops_with_plan_kwargs():
+    # ops whose PartitionRule needs keyword operands (num_rows, offsets,
+    # contraction_dim) must still resolve local geometry for keying
+    mesh = _mesh_2x4()
+    rec = at.autotune(["bsr_spmm", "spmspm", "stencil"], mesh=mesh,
+                      time_candidate=lambda c, b: 1.0)
+    keys = sorted(rec["entries"])
+    by_op = {k.split("|")[0]: k for k in keys}
+    # stencil: X=64 x-sharded 4-way -> 16-plane slabs key the record
+    assert by_op["stencil"].split("|")[1].startswith("16x32x32")
+    # spmspm: A rows 128 -> 32 per device; B replicated stays whole
+    assert "32x" in by_op["spmspm"] and "128x" in by_op["spmspm"]
+
+
+def test_local_case_shapes_replicated_plan_matches_flat_key():
+    # a case whose plan resolves to replication keys exactly like the
+    # unmeshed case: same local kernel, same evidence, same record entry
+    rng = _rng()
+    case = at.DEFAULT_SUITE["flash_attention"](rng)
+    case.mesh = _mesh_2x4()  # 4 heads on a 4-way axis shards; force a miss
+    case.args = tuple(
+        jnp.zeros((1, 5, 64, 16), jnp.float32) for _ in range(3)
+    )  # 5 kv heads: TP-hostile, replicates
+    shapes = at.local_case_shapes(case, "xla")
+    assert [s.shape for s in shapes] == [a.shape for a in case.args]
+
+
+def test_record_matches_environment_is_mesh_aware(tmp_path):
+    record = _toy_record()  # tuned without a mesh
+    assert at.record_matches_environment(record)
+    assert not at.record_matches_environment(record, mesh=_mesh_2x4())
+    with pytest.raises(ValueError, match="re-run the autotuner"):
+        at.apply_record(record, mesh=_mesh_2x4())
+    record["mesh"] = "2x4"
+    assert at.record_matches_environment(record, mesh=_mesh_2x4())
+    at.apply_record(record, mesh=_mesh_2x4())  # applies cleanly when tuned
+    assert not at.record_matches_environment(record)  # and not flat anymore

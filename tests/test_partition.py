@@ -28,6 +28,7 @@ def _clean_registry_state():
 
 S = jax.ShapeDtypeStruct
 MESH8 = partition.MeshSpec({"data": 2, "model": 4})
+MESH_2POD = partition.MeshSpec({"pod": 2, "data": 2, "model": 4})
 
 
 # ---------------------------------------------------------------------------
@@ -42,6 +43,117 @@ def test_every_block_table_op_has_a_partition_rule():
 def test_partition_axis_prefers_model():
     assert partition.partition_axis(MESH8) == "model"
     assert partition.partition_axis(partition.MeshSpec({"pod": 2, "x": 4})) == "x"
+
+
+def test_partition_levels_resolution():
+    assert partition.partition_levels(MESH8) == (("model", 4),)
+    assert partition.partition_levels(MESH_2POD) == (("pod", 2), ("model", 4))
+    # size-1 axes drop out of the level stack
+    assert partition.partition_levels(
+        partition.MeshSpec({"pod": 1, "data": 2, "model": 4})
+    ) == (("model", 4),)
+    assert partition.partition_levels(
+        partition.MeshSpec({"pod": 2, "data": 2, "model": 1})
+    ) == (("pod", 2),)
+    assert partition.partition_levels(
+        partition.MeshSpec({"data": 1, "model": 1})
+    ) == ()
+
+
+def test_gemm_two_level_plan_and_per_level_costs():
+    f32 = jnp.float32
+    plan = partition.plan_for(
+        "gemm", MESH_2POD, S((32, 64), f32), S((64, 16), f32))
+    assert plan.levels == (("pod", 2), ("model", 4)) and plan.n == 8
+    assert plan.axis == ("pod", "model")
+    assert "k-sharded" in plan.note and "pod=2+model=4" in plan.note
+    # hierarchical all-reduce: intra-pod psum fires first, then the D2D hop,
+    # each costed at its own level's ring size
+    assert [(c.kind, c.axis, c.n) for c in plan.collectives] == [
+        ("all_reduce", "model", 4), ("all_reduce", "pod", 2)]
+    assert all(c.nbytes == 32 * 16 * 4 for c in plan.collectives)
+    by_level = roofline.plan_collective_seconds_by_level(plan)
+    assert set(by_level) == {"model", "pod"}
+    # same payload, but the pod hop rides the narrow D2D link: the 2-ring at
+    # half bandwidth must out-cost nothing implicitly — check against the
+    # topology model directly
+    from repro.core import topology
+
+    nb = 32 * 16 * 4
+    assert by_level["model"] == pytest.approx(
+        topology.collective_seconds("all_reduce", nb, "model", 4))
+    assert by_level["pod"] == pytest.approx(
+        topology.collective_seconds("all_reduce", nb, "pod", 2))
+    assert roofline.plan_collective_seconds(plan) == pytest.approx(
+        by_level["model"] + by_level["pod"])
+
+
+def test_fallback_ladder_drops_pod_level_before_replicating():
+    f32 = jnp.float32
+    # 4 kv heads divide model=4 but not pod*model=8: the ladder drops the
+    # pod level and head-shards intra-pod instead of replicating outright
+    q, kv = S((2, 8, 32, 16), f32), S((2, 4, 32, 16), f32)
+    plan = partition.plan_for("flash_attention", MESH_2POD, q, kv, kv)
+    assert plan is not None and plan.levels == (("model", 4),)
+    # 8 kv heads divide pod*model=8: full two-level head placement
+    kv8 = S((2, 8, 32, 16), f32)
+    plan = partition.plan_for("flash_attention", MESH_2POD, q, kv8, kv8)
+    assert plan.levels == (("pod", 2), ("model", 4))
+    # nothing divides: replicate
+    kv5 = S((2, 5, 32, 16), f32)
+    q20 = S((2, 20, 32, 16), f32)
+    assert partition.plan_for("flash_attention", MESH_2POD, q20, kv5, kv5) is None
+
+
+def test_stencil_two_level_distinguishes_pod_boundary_hop():
+    f32 = jnp.float32
+    offs = np.array([(-1, 0, 0), (0, 0, 0), (1, 0, 0)], np.int32)
+    w = np.ones((3,), np.float32)
+    plan = partition.plan_for(
+        "stencil", MESH_2POD, S((32, 8, 8), f32), offsets=offs, weights=w)
+    assert plan.levels == (("pod", 2), ("model", 4))
+    assert "pod boundary hop" in plan.note
+    # two intra-pod ring hops (model axis) + two cross-pod boundary hops
+    kinds = [(c.kind, c.axis, c.n) for c in plan.collectives]
+    assert kinds == [("permute", "model", 4), ("permute", "model", 4),
+                     ("permute", "pod", 2), ("permute", "pod", 2)]
+    by_level = roofline.plan_collective_seconds_by_level(plan)
+    assert by_level["pod"] > 0 and by_level["model"] > 0
+    # single-level meshes keep the flat note (no phantom pod hop)
+    plan1 = partition.plan_for(
+        "stencil", MESH8, S((32, 8, 8), f32), offsets=offs, weights=w)
+    assert "pod boundary hop" not in plan1.note
+    assert {c.axis for c in plan1.collectives} == {"model"}
+
+
+def test_two_level_sparse_rules_divide_over_pod_times_model():
+    f32, i32 = jnp.float32, jnp.int32
+    plan = partition.plan_for(
+        "spmm", MESH_2POD, S((64, 8), f32), S((64, 8), i32), S((32, 4), f32))
+    assert plan.levels == (("pod", 2), ("model", 4))
+    plan = partition.plan_for(
+        "bsr_spmm", MESH_2POD, S((8, 8, 128), f32), S((8,), i32),
+        S((8,), i32), S((256, 16), f32), num_rows=64)
+    assert [(c.axis, c.n) for c in plan.collectives] == [("model", 4),
+                                                         ("pod", 2)]
+    # rows divide model but not pod*model: ladder lands on the model level
+    plan = partition.plan_for(
+        "spmm", MESH_2POD, S((36, 8), f32), S((36, 8), i32), S((32, 4), f32))
+    assert plan is not None and plan.levels == (("model", 4),)
+
+
+def test_local_operand_structs_shard_geometry():
+    f32 = jnp.float32
+    a, b = S((256, 256), f32), S((256, 256), f32)
+    plan = partition.plan_for("gemm", MESH8, a, b)
+    la, lb = partition.local_operand_structs(plan, MESH8, (a, b))
+    assert la.shape == (256, 64) and lb.shape == (64, 256)  # K/4 each side
+    plan2 = partition.plan_for("gemm", MESH_2POD, a, b)
+    la2, lb2 = partition.local_operand_structs(plan2, MESH_2POD, (a, b))
+    assert la2.shape == (256, 32) and lb2.shape == (32, 256)  # K/(2*4)
+    # replication passes shapes through whole; None holes are skipped
+    structs = partition.local_operand_structs(None, MESH8, (a, None, b))
+    assert [s.shape for s in structs] == [(256, 256), (256, 256)]
 
 
 def test_gemm_rule_k_shard_then_m_shard_then_replicate():
@@ -178,6 +290,29 @@ def test_dryrun_op_roofline_cells():
     assert by_op["stencil"]["d2d_bytes"] > 0  # halo planes
 
 
+def test_dryrun_op_roofline_multi_pod_emits_per_level_seconds():
+    from repro.launch import dryrun
+
+    cells = dryrun.op_roofline_cells(multi_pod=True)
+    assert {c["op"] for c in cells} == set(partition.partitioned_ops())
+    by_op = {c["op"]: c for c in cells}
+    # every cell carries the per-level breakdown (empty only if no collective)
+    for c in cells:
+        assert "collective_s_per_level" in c and "partition_levels" in c
+    # hierarchical psums price intra-pod (model/ICI) vs cross-pod (pod/D2D)
+    for op in ("gemm", "bsr_spmm", "stencil"):
+        per = by_op[op]["collective_s_per_level"]
+        assert per.get("model", 0) > 0 and per.get("pod", 0) > 0, op
+        assert by_op[op]["partition_levels"] == ["pod=2", "model=16"]
+        total = sum(per.values())
+        assert by_op[op]["roofline"]["d2d_s"] == pytest.approx(total)
+    # 16 kv heads resist pod*model=32: the ladder drops to the model level,
+    # so these cells show a single-level plan with no pod term
+    for op in ("flash_attention", "decode_attention", "linear_attention"):
+        assert by_op[op]["partition_levels"] == ["model=16"], op
+        assert "pod" not in by_op[op]["collective_s_per_level"]
+
+
 # ---------------------------------------------------------------------------
 # decode_attention: the blocked xla impl (single device)
 # ---------------------------------------------------------------------------
@@ -275,10 +410,53 @@ def test_autotune_suite_covers_every_block_table_op():
 def test_host_device_mesh_rejects_invalid_tp():
     from repro.launch.mesh import host_device_mesh
 
-    with pytest.raises(ValueError, match="not a valid model-axis size"):
+    with pytest.raises(ValueError, match="not a valid mesh factorisation"):
         host_device_mesh(tp=0)
+    with pytest.raises(ValueError, match="not a valid mesh factorisation"):
+        host_device_mesh(tp=1, pods=0)
     mesh = host_device_mesh(tp=1)  # exact fit: no warning path
     assert mesh.shape["model"] == 1
+    assert tuple(mesh.axis_names) == ("data", "model")  # pods=1: legacy shape
+
+
+def test_host_device_mesh_three_axis_construction():
+    from repro.launch.mesh import host_device_mesh
+
+    n = len(jax.devices())
+    # an exactly-dividing pod request yields the (pod, data, model) hierarchy
+    # with no warning; with 1 device the pod axis degrades to 1 but the axis
+    # names stay stable for pod-aware callers
+    if n % 2 == 0:
+        import warnings as _w
+
+        with _w.catch_warnings():
+            _w.simplefilter("error")
+            mesh = host_device_mesh(tp=1, pods=2)
+        assert mesh.shape["pod"] == 2
+    else:
+        with pytest.warns(UserWarning, match="degrading to tp="):
+            mesh = host_device_mesh(tp=1, pods=2)
+        assert mesh.shape["pod"] == 1
+    assert tuple(mesh.axis_names) == ("pod", "data", "model")
+    assert mesh.shape["pod"] * mesh.shape["data"] * mesh.shape["model"] == n
+    # the mesh feeds the partition layer: pod level present iff pod > 1
+    levels = partition.partition_levels(mesh)
+    if mesh.shape["pod"] > 1:
+        assert levels[0] == ("pod", mesh.shape["pod"])
+    else:
+        assert all(a != "pod" for a, _ in levels)
+
+
+def test_host_device_mesh_degrades_when_pod_times_tp_indivisible():
+    from repro.launch.mesh import host_device_mesh
+
+    n = len(jax.devices())
+    # pods*tp cannot divide n (both exceed it): degrade both with a warning
+    with pytest.warns(UserWarning, match="degrading to tp="):
+        mesh = host_device_mesh(tp=n + 1, pods=n + 1)
+    assert tuple(mesh.axis_names) == ("pod", "data", "model")
+    assert mesh.shape["pod"] * mesh.shape["data"] * mesh.shape["model"] == n
+    assert mesh.shape["pod"] <= n and mesh.shape["model"] <= n
 
 
 # ---------------------------------------------------------------------------
@@ -425,3 +603,142 @@ def test_sharded_equivalence_all_ops():
     assert set(out["fallbacks"]) == {"flash", "spmm"}
     assert {"stencil_halo_tp2", "stencil_halo_tp4", "stencil_halo_tp8",
             "gcn_mesh_kwarg", "gcn_use_mesh"} <= set(out["ok"])
+
+
+# Three-axis variant: the same every-op x every-impl equivalence on a
+# (pod, data, model) = 2x2x2 mesh, where plans resolve TWO-LEVEL (joint
+# pod x model sharding, hierarchical psums, cross-pod halo hop) and the
+# level ladder drops to model-only for pod-indivisible shapes.
+_EQUIV_3AX = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import sparse as sp
+    from repro.kernels import ops, partition
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    rng = np.random.default_rng(0)
+    f32 = jnp.float32
+    out = {"ok": [], "two_level": [], "ladder": []}
+
+    def check(name, got, want, tol=1e-4):
+        pairs = zip(got, want) if isinstance(got, tuple) else [(got, want)]
+        err = max(float(jnp.max(jnp.abs(jnp.asarray(g) - jnp.asarray(w))))
+                  for g, w in pairs)
+        assert err < tol, (name, err)
+        out["ok"].append(name)
+
+    a = jnp.asarray(rng.standard_normal((32, 64)), f32)
+    b = jnp.asarray(rng.standard_normal((64, 32)), f32)
+    q = jnp.asarray(rng.standard_normal((2, 8, 32, 16)), f32)
+    kv = jnp.asarray(rng.standard_normal((2, 4, 32, 16)), f32)
+    qd = jnp.asarray(rng.standard_normal((2, 8, 16)), f32)
+    pos = jnp.asarray([5, 30], jnp.int32)
+    r = jnp.asarray(rng.standard_normal((1, 4, 64, 8)), f32)
+    wl = jnp.asarray(-rng.uniform(0.01, 1.0, (1, 4, 64, 8)), f32)
+    u = jnp.asarray(rng.standard_normal((4, 8)), f32)
+    ell = sp.random_ell(rng, 64, 32, 0.1)
+    dn = jnp.asarray(rng.standard_normal((32, 8)), f32)
+    bsr_dense = np.zeros((16, 256), np.float32)
+    bsr_dense[::3, ::17] = 1.0
+    bsrA = sp.dense_to_bsr(bsr_dense, bm=8, bk=128)
+    brhs = jnp.asarray(rng.standard_normal((256, 16)), f32)
+    sA, sB = sp.random_ell(rng, 32, 64, 0.1), sp.random_ell(rng, 64, 64, 0.1)
+    grid = jnp.asarray(rng.standard_normal((16, 8, 8)), f32)
+    # |dx|=2 on 4-plane slabs: halo planes cross slab AND pod boundaries
+    offs = np.array([(-2, 0, 0), (0, 0, 0), (1, 1, 0), (2, 0, 1)], np.int32)
+    w = np.array([0.2, 0.3, 0.4, 0.1], np.float32)
+
+    # every op resolves two-level here: pod*model = 4 divides K=64, kv=4
+    # heads, H=4, 64 rows, 4 tiles, 32 rows, X=16
+    two_level_cases = [
+        ("gemm", (a, b), {}),
+        ("flash", (q, kv, kv), {}),
+        ("decode", (qd, kv, kv, pos), {}),
+        ("linattn", (r, r, r, wl), {}),
+        ("spmm", (ell.values, ell.cols, dn), {}),
+        ("bsr_spmm", (bsrA.tile_values, bsrA.tile_rows, bsrA.tile_cols,
+                      brhs), {"num_rows": 16}),
+        ("spmspm", (sA.values, sA.cols, sB.values, sB.cols),
+         {"contraction_dim": 64}),
+        ("stencil", (grid,), {"offsets": offs, "weights": w}),
+    ]
+    op_names = {"linattn": "linear_attention", "flash": "flash_attention",
+                "decode": "decode_attention"}
+    for tag, args, kw in two_level_cases:
+        plan = partition.plan_for(op_names.get(tag, tag), mesh, *args, **kw)
+        assert plan.levels == (("pod", 2), ("model", 2)), (tag, plan.levels)
+        out["two_level"].append(tag)
+
+    # the ladder on a live mesh: kv=2 heads / 38 rows resist pod*model=4
+    # but divide model=2 -> single-level plans that still execute correctly
+    kv2 = jnp.asarray(rng.standard_normal((2, 2, 32, 16)), f32)
+    plan = partition.plan_for("flash_attention", mesh, q, kv2, kv2)
+    assert plan.levels == (("model", 2),), plan.levels
+    check("ladder_flash",
+          ops.flash_attention(q, kv2, kv2, mesh=mesh, impl="xla"),
+          ops.flash_attention(q, kv2, kv2, impl="ref"))
+    out["ladder"].append("flash")
+    ell38 = sp.random_ell(rng, 38, 32, 0.1)
+    plan = partition.plan_for("spmm", mesh, ell38.values, ell38.cols, dn)
+    assert plan.levels == (("model", 2),), plan.levels
+    check("ladder_spmm", ops.spmm(ell38, dn, mesh=mesh, impl="xla"),
+          ops.spmm(ell38, dn, impl="ref"))
+    out["ladder"].append("spmm")
+
+    for impl in ("interpret", "xla", "ref"):
+        check(f"gemm[{impl}]",
+              ops.gemm(a, b, mesh=mesh, impl=impl, out_dtype=f32),
+              ops.gemm(a, b, impl="ref", out_dtype=f32))
+        check(f"flash[{impl}]",
+              ops.flash_attention(q, kv, kv, mesh=mesh, impl=impl),
+              ops.flash_attention(q, kv, kv, impl="ref"))
+        check(f"linattn_rwkv[{impl}]",
+              ops.linear_attention(r, r, r, wl, u, mesh=mesh, impl=impl),
+              ops.linear_attention(r, r, r, wl, u, impl="ref"))
+        check(f"linattn_ssd[{impl}]",
+              ops.linear_attention(r, r, r, wl, mesh=mesh, impl=impl),
+              ops.linear_attention(r, r, r, wl, impl="ref"))
+        check(f"spmm[{impl}]", ops.spmm(ell, dn, mesh=mesh, impl=impl),
+              ops.spmm(ell, dn, impl="ref"))
+        check(f"bsr_spmm[{impl}]",
+              ops.bsr_spmm(bsrA, brhs, mesh=mesh, impl=impl),
+              ops.bsr_spmm(bsrA, brhs, impl="xla"))
+        check(f"spmspm[{impl}]",
+              ops.spmspm(sA, sB, 64, mesh=mesh, impl=impl),
+              ops.spmspm(sA, sB, 64, impl="ref"))
+        check(f"stencil[{impl}]",
+              ops.stencil(grid, offs, w, mesh=mesh, impl=impl),
+              ops.stencil(grid, offs, w, impl="ref"))
+    for impl in ("pallas", "interpret", "xla", "ref"):
+        check(f"decode[{impl}]",
+              ops.decode_attention(qd, kv, kv, pos, mesh=mesh, impl=impl),
+              ops.decode_attention(qd, kv, kv, pos, impl="ref"))
+    print("RESULT:" + json.dumps(out))
+    """
+)
+
+
+def test_sharded_equivalence_all_ops_three_axis():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _EQUIV_3AX],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    out = json.loads(line[len("RESULT:"):])
+    for op_tag in ("gemm", "flash", "linattn_rwkv", "linattn_ssd", "spmm",
+                   "bsr_spmm", "spmspm", "stencil"):
+        for impl in ("interpret", "xla", "ref"):
+            assert f"{op_tag}[{impl}]" in out["ok"], (op_tag, impl)
+    for impl in ("pallas", "interpret", "xla", "ref"):
+        assert f"decode[{impl}]" in out["ok"]
+    # the joint pod x model plans actually engaged (not a silent fallback)
+    assert set(out["two_level"]) == {"gemm", "flash", "decode", "linattn",
+                                     "spmm", "bsr_spmm", "spmspm", "stencil"}
+    assert set(out["ladder"]) == {"flash", "spmm"}
+    assert {"ladder_flash", "ladder_spmm"} <= set(out["ok"])

@@ -9,6 +9,12 @@ topology-model collective seconds for the plan — total (``d2d_model``) and
 per level (``coll_per_level``, intra-pod vs cross-pod) — so the
 measured-vs-model comparison of the scaling story sits in one CSV row.
 
+Two flash_attention rows run: the GPT-J-shaped batch/head case and a
+``flash_attention_long`` long-context case (B=1, so the batch split cannot
+engage) that exercises the sequence-parallel KV ring — its ``derived``
+column carries the per-hop ppermute seconds the ring's (n-1) hops cost on
+the ``data`` level.
+
 CPU caveat: forced host devices share the machine, so wall-clock speedups
 are NOT the point here — numerical agreement and the collective schedule
 are; the model column carries the bandwidth-scaled expectation.
@@ -24,13 +30,19 @@ from repro.launch import roofline
 
 
 def _cases(rng):
-    """(op, call(mesh) -> out, plan_args, plan_kwargs) per partitioned op."""
+    """(label, op, call(mesh) -> out, plan_args, plan_kwargs) rows; labels
+    are unique per row (op names repeat for the long-context variant)."""
     f32 = jnp.float32
     a = jnp.asarray(rng.standard_normal((256, 256)), f32)
     b = jnp.asarray(rng.standard_normal((256, 256)), f32)
-    q = jnp.asarray(rng.standard_normal((1, 8, 256, 64)), f32)
-    k = jnp.asarray(rng.standard_normal((1, 8, 256, 64)), f32)
-    v = jnp.asarray(rng.standard_normal((1, 8, 256, 64)), f32)
+    q = jnp.asarray(rng.standard_normal((4, 8, 256, 64)), f32)
+    k = jnp.asarray(rng.standard_normal((4, 8, 256, 64)), f32)
+    v = jnp.asarray(rng.standard_normal((4, 8, 256, 64)), f32)
+    # long context: B=1 blocks the batch split, so the data axis carries the
+    # sequence — the ring seq-parallel row
+    qL = jnp.asarray(rng.standard_normal((1, 8, 2048, 64)), f32)
+    kL = jnp.asarray(rng.standard_normal((1, 4, 2048, 64)), f32)
+    vL = jnp.asarray(rng.standard_normal((1, 4, 2048, 64)), f32)
     qd = jnp.asarray(rng.standard_normal((8, 8, 64)), f32)
     kd = jnp.asarray(rng.standard_normal((8, 8, 512, 64)), f32)
     vd = jnp.asarray(rng.standard_normal((8, 8, 512, 64)), f32)
@@ -50,23 +62,25 @@ def _cases(rng):
                      (0, 0, 1)], np.int32)
     w = np.full((5,), 0.2, np.float32)
     return [
-        ("gemm", lambda m: ops.gemm(a, b, mesh=m), (a, b), {}),
-        ("flash_attention", lambda m: ops.flash_attention(q, k, v, mesh=m),
-         (q, k, v), {}),
-        ("decode_attention",
+        ("gemm", "gemm", lambda m: ops.gemm(a, b, mesh=m), (a, b), {}),
+        ("flash_attention", "flash_attention",
+         lambda m: ops.flash_attention(q, k, v, mesh=m), (q, k, v), {}),
+        ("flash_attention_long", "flash_attention",
+         lambda m: ops.flash_attention(qL, kL, vL, mesh=m), (qL, kL, vL), {}),
+        ("decode_attention", "decode_attention",
          lambda m: ops.decode_attention(qd, kd, vd, pos, mesh=m),
          (qd, kd, vd, pos), {}),
-        ("linear_attention",
+        ("linear_attention", "linear_attention",
          lambda m: ops.linear_attention(r, r, r, wl, mesh=m)[0],
          (r, r, r, wl), {}),
-        ("spmm", lambda m: ops.spmm(ell, dn, mesh=m),
+        ("spmm", "spmm", lambda m: ops.spmm(ell, dn, mesh=m),
          (ell.values, ell.cols, dn), {}),
-        ("bsr_spmm", lambda m: ops.bsr_spmm(bsrA, brhs, mesh=m),
+        ("bsr_spmm", "bsr_spmm", lambda m: ops.bsr_spmm(bsrA, brhs, mesh=m),
          (bsrA.tile_values, bsrA.tile_rows, bsrA.tile_cols, brhs),
          {"num_rows": bsrA.shape[0]}),
-        ("spmspm", lambda m: ops.spmspm(sA, sB, 512, mesh=m),
+        ("spmspm", "spmspm", lambda m: ops.spmspm(sA, sB, 512, mesh=m),
          (sA.values, sA.cols, sB.values, sB.cols), {"contraction_dim": 512}),
-        ("stencil", lambda m: ops.stencil(grid, offs, w, mesh=m),
+        ("stencil", "stencil", lambda m: ops.stencil(grid, offs, w, mesh=m),
          (grid,), {"offsets": offs, "weights": w}),
     ]
 
@@ -77,7 +91,7 @@ def run(mesh=None):
     rng = np.random.default_rng(0)
     levels = partition.partition_levels(mesh)
     levels_tag = "*".join(f"{a}{n}" for a, n in levels) or "none"
-    for op, call, plan_args, plan_kwargs in _cases(rng):
+    for label, op, call, plan_args, plan_kwargs in _cases(rng):
         plan = partition.plan_for(op, mesh, *plan_args, **plan_kwargs)
         note = plan.note.replace(",", ";") if plan else "replicated"
         by_level = roofline.plan_collective_seconds_by_level(plan)
@@ -93,7 +107,7 @@ def run(mesh=None):
             jnp.max(jnp.abs(jnp.asarray(f_shard()) - jnp.asarray(f_single())))
         )
         row(
-            f"mesh_{op}", t_shard,
+            f"mesh_{label}", t_shard,
             f"single_us={t_single * 1e6:.1f};speedup={t_single / t_shard:.2f}x;"
             f"levels={levels_tag};{note};"
             f"d2d_model={d2d * 1e6:.2f}us;coll_per_level={per_level};"

@@ -69,12 +69,11 @@ def main(argv=None) -> None:
     mesh_shape = _parse_mesh(args.mesh) if args.mesh else None
     mesh_devices = math.prod(mesh_shape) if mesh_shape else 0
     if mesh_shape is not None:
-        flags = os.environ.get("XLA_FLAGS", "")
-        if "--xla_force_host_platform_device_count" not in flags:
-            os.environ["XLA_FLAGS"] = (
-                flags
-                + f" --xla_force_host_platform_device_count={mesh_devices}"
-            ).strip()
+        # the shared append-only bootstrap (launch/xla_flags.py): caller
+        # flags survive, and a caller-chosen device count wins
+        from repro.launch.xla_flags import ensure_host_device_count
+
+        ensure_host_device_count(mesh_devices)
 
     import jax
 

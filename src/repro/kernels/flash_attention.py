@@ -24,9 +24,14 @@ NEG = -1e30
 
 
 def _fa_kernel(
-    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-    *, scale, causal, window, q_offset, sk, bq, bk, nk,
+    q_ref, k_ref, v_ref, o_ref, *refs,
+    scale, causal, window, q_offset, sk, bq, bk, nk, return_lse,
 ):
+    # refs is the (m, l, acc) scratch — preceded by the lse out-ref when
+    # the program was built with return_lse (out refs bind before scratch)
+    lse_ref, (m_ref, l_ref, acc_ref) = (
+        (refs[0], refs[1:]) if return_lse else (None, refs)
+    )
     ik = pl.program_id(3)
     iq = pl.program_id(2)
 
@@ -39,13 +44,15 @@ def _fa_kernel(
     q_pos = q_offset + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
     k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
 
-    # block-level early-out: skip fully-masked KV blocks
+    # block-level early-out: skip fully-masked KV blocks. A lookback window
+    # bounds positions like causal does (k_pos <= q_pos), so the
+    # above-the-diagonal skip applies to windowed non-causal blocks too.
     run = None
-    if causal:  # block strictly above the causal diagonal
+    if causal or window:  # block strictly above the (implied) diagonal
         run = ik * bk <= q_offset + (iq + 1) * bq - 1
     if window:  # block entirely older than every q row's window
         in_window = (ik + 1) * bk - 1 > q_offset + iq * bq - window
-        run = in_window if run is None else jnp.logical_and(run, in_window)
+        run = jnp.logical_and(run, in_window)
 
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale
@@ -54,7 +61,7 @@ def _fa_kernel(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (bq, bk)
         mask = k_pos < sk
-        if causal:
+        if causal or window:
             mask &= k_pos <= q_pos
         if window:
             mask &= k_pos > q_pos - window
@@ -81,21 +88,38 @@ def _fa_kernel(
         o_ref[0, 0] = (
             acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
         ).astype(o_ref.dtype)
+        if lse_ref is not None:
+            lse_ref[0, 0] = (
+                m_ref[..., 0] + jnp.log(jnp.maximum(l_ref[..., 0], 1e-30))
+            )
 
 
 def flash_attention_program(
     B, H, G, Sqp, D, nq, nk, bq, bk, dtype, k_dtype, v_dtype,
-    *, scale, causal, window, q_offset, sk,
+    *, scale, causal, window, q_offset, sk, return_lse=False,
 ) -> StreamProgram:
     """FA-2 as a stream program: q/o stream over (b, h, iq); the k/v streams
-    revisit the shared KV head h//G — the GQA index map."""
+    revisit the shared KV head h//G — the GQA index map. ``return_lse``
+    adds a second (B, H, Sqp) fp32 output stream carrying the per-row
+    log-sum-exp (the ring-attention merge statistic)."""
     body = functools.partial(
         _fa_kernel, scale=scale, causal=causal, window=window,
-        q_offset=q_offset, sk=sk, bq=bq, bk=bk, nk=nk,
+        q_offset=q_offset, sk=sk, bq=bq, bk=bk, nk=nk, return_lse=return_lse,
     )
     kv_stream = lambda dt: AffineStream(
         (1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0), dtype=dt
     )
+    out_streams = [
+        AffineStream(
+            (1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0), dtype=dtype
+        ),
+    ]
+    out_shapes = [jax.ShapeDtypeStruct((B, H, Sqp, D), dtype)]
+    if return_lse:
+        out_streams.append(AffineStream(
+            (1, 1, bq), lambda b, h, i, j: (b, h, i), dtype=jnp.float32
+        ))
+        out_shapes.append(jax.ShapeDtypeStruct((B, H, Sqp), jnp.float32))
     return StreamProgram(
         name="flash_attention",
         body=body,
@@ -107,12 +131,8 @@ def flash_attention_program(
             kv_stream(k_dtype),
             kv_stream(v_dtype),
         ),
-        out_streams=(
-            AffineStream(
-                (1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0), dtype=dtype
-            ),
-        ),
-        out_shapes=(jax.ShapeDtypeStruct((B, H, Sqp, D), dtype),),
+        out_streams=tuple(out_streams),
+        out_shapes=tuple(out_shapes),
         scratch=(
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -133,8 +153,9 @@ def flash_attention_pallas(
     scale: float | None = None,
     bq: int | None = None,
     bk: int | None = None,
+    return_lse: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
     B, H, Sq, D = q.shape
     K, Sk = k.shape[1], k.shape[2]
     G = H // K
@@ -153,6 +174,10 @@ def flash_attention_pallas(
     program = flash_attention_program(
         B, H, G, Sq + pq, D, nq, nk, bq, bk, q.dtype, k.dtype, v.dtype,
         scale=scale, causal=causal, window=window, q_offset=q_offset, sk=Sk,
+        return_lse=return_lse,
     )
     out = stream_compute(program, q, k, v, interpret=interpret)
+    if return_lse:
+        o, lse = out
+        return o[:, :, :Sq], lse[:, :, :Sq]
     return out[:, :, :Sq]

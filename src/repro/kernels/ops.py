@@ -103,9 +103,16 @@ def _gemm_ref(a, b, *, out_dtype=None, accum_dtype=jnp.float32,
 
 def flash_attention(
     q, k, v, *, causal=True, window=0, q_offset=0, scale=None, impl=None,
-    mesh=None, bq=None, bk=None, block_k=None,
+    mesh=None, bq=None, bk=None, block_k=None, return_lse=False,
 ):
     """q: (B,H,Sq,D); k,v: (B,K,Sk,D). Returns (B,H,Sq,D).
+
+    ``window > 0`` is a *lookback* window: each query attends to keys in
+    ``(q_pos - window, q_pos]``, so a window bounds future positions even
+    with ``causal=False`` (identical semantics across every impl).
+    ``return_lse=True`` additionally returns the per-row log-sum-exp,
+    (B,H,Sq) fp32 — the statistic the sequence-parallel ring merge
+    (``parallel.collectives.online_softmax_merge``) consumes.
 
     ``block_k`` is the historical spelling of ``bk``; both resolve through
     the registry, so an explicit argument and ``set_block_override`` reach
@@ -120,33 +127,37 @@ def flash_attention(
     blocks = resolve_blocks("flash_attention", bq=bq, bk=bk)
     return _dispatch(
         "flash_attention", q, k, v, causal=causal, window=window,
-        q_offset=q_offset, scale=scale, mesh=mesh, impl=impl, **blocks,
+        q_offset=q_offset, scale=scale, return_lse=return_lse, mesh=mesh,
+        impl=impl, **blocks,
     )
 
 
 @registry.register_stream_kernel("flash_attention")
 def _fa_stream(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None,
-               interpret=False):
+               return_lse=False, interpret=False):
     from repro.kernels import flash_attention as _fa
 
     return _fa.flash_attention_pallas(
         q, k, v, causal=causal, window=window, q_offset=q_offset,
-        scale=scale, bq=bq, bk=bk, interpret=interpret,
+        scale=scale, bq=bq, bk=bk, return_lse=return_lse, interpret=interpret,
     )
 
 
 @registry.register_kernel("flash_attention", impl="xla")
-def _fa_xla(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None):
+def _fa_xla(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None,
+            return_lse=False):
     return _xla.flash_attention_xla(
         q, k, v, causal=causal, window=window, q_offset=q_offset,
-        scale=scale, bk=bk,
+        scale=scale, bq=bq, bk=bk, return_lse=return_lse,
     )
 
 
 @registry.register_kernel("flash_attention", impl="ref")
-def _fa_ref(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None):
+def _fa_ref(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None,
+            return_lse=False):
     return _ref.mha_ref(
-        q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale
+        q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale,
+        return_lse=return_lse,
     )
 
 

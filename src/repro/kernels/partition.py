@@ -33,11 +33,21 @@ Rule table (the op's logical-axis split over the partition levels):
                     already-reduced buffer per pod. Falls back to M-row
                     sharding, then (via the level ladder) to model-only,
                     then replication
-  flash_attention   GQA head-sharded (q heads AND kv heads): head groups
-                    place per-pod before per-device; replicates on
-                    TP-hostile head counts
-  decode_attention  same GQA head rule (position stays replicated)
-  linear_attention  head-sharded state/decay streams (u, s0 included)
+  flash_attention   GQA head-sharded (q heads AND kv heads) over pod×model,
+                    COMPOSED with the ``data`` level (attention_levels):
+                    B over ``data`` when the batch divides it, else the
+                    sequence-parallel KV ring — Sq/Sk sharded over ``data``
+                    with the K/V chunks rotating through (n-1) ppermute
+                    hops, each hop re-entering the registered kernel at its
+                    static q_offset and folding through the online-softmax
+                    merge (collectives.ring_scan / online_softmax_merge) —
+                    the latency-tolerant C4/C5 tile-rotation pattern at
+                    mesh scale. TP-hostile head counts keep the data-level
+                    composition and drop only the head split
+  decode_attention  same composed GQA head × batch rule (cache and
+                    position rows ride the batch split); no ring
+  linear_attention  head-sharded state/decay streams (u, s0 included),
+                    composed with B over ``data``
   spmm              row-sharded ELL value/index streams — rows split across
                     pods, then within each pod — dense replicated
   bsr_spmm          tile-sharded (nnz-parallel), hierarchical ``psum``
@@ -187,6 +197,29 @@ def partition_levels(mesh) -> tuple:
     return tuple(levels)
 
 
+def attention_levels(mesh) -> tuple:
+    """The attention family's level stack: ``partition_levels`` with the
+    ``data`` axis (the group-interconnect level) slotted between ``pod``
+    and the chiplet axis.
+
+    Attention rules use the extra level for the *batch or sequence*
+    dimension — B-sharding when the batch divides it, else the
+    sequence-parallel KV ring for ``flash_attention`` — composed with the
+    GQA head sharding the remaining levels carry. Size-1 axes are dropped;
+    a mesh without a ``data`` axis degenerates to ``partition_levels``.
+    """
+    names = tuple(mesh.axis_names)
+    inner = partition_axis(mesh)
+    levels = []
+    if "pod" in names and inner != "pod" and int(mesh.shape["pod"]) > 1:
+        levels.append(("pod", int(mesh.shape["pod"])))
+    if "data" in names and inner != "data" and int(mesh.shape["data"]) > 1:
+        levels.append(("data", int(mesh.shape["data"])))
+    if int(mesh.shape[inner]) > 1:
+        levels.append((inner, int(mesh.shape[inner])))
+    return tuple(levels)
+
+
 def _joint(levels) -> str | tuple:
     """PartitionSpec entry for a joint split over ``levels``: the bare axis
     name for one level, the axis-name tuple for several."""
@@ -207,9 +240,10 @@ def _levels_note(levels) -> str:
 # ---------------------------------------------------------------------------
 
 _RULES: dict[str, Callable] = {}
+_LEVEL_FNS: dict[str, Callable] = {}
 
 
-def register_partition_rule(op: str) -> Callable:
+def register_partition_rule(op: str, *, levels: Callable | None = None) -> Callable:
     """Decorator: ``@register_partition_rule("spmm")`` registers the
     PartitionRule for the registry op named ``op``.
 
@@ -218,10 +252,17 @@ def register_partition_rule(op: str) -> Callable:
     offers it — and returns a PartitionPlan, or None when its divisibility
     checks fail at that level count (``plan_for`` then retries with the
     outermost level dropped: the replication fallback ladder).
+
+    ``levels`` selects the op's level vocabulary — the function mapping a
+    mesh to the stack ``plan_for`` offers (default ``partition_levels``;
+    the attention family uses ``attention_levels``, which adds the ``data``
+    axis for batch/sequence parallelism).
     """
 
     def deco(fn: Callable) -> Callable:
         _RULES[op] = fn
+        if levels is not None:
+            _LEVEL_FNS[op] = levels
         return fn
 
     return deco
@@ -250,7 +291,7 @@ def plan_for(op: str, mesh, *args, impl: str | None = None, **kwargs):
     rule = _RULES.get(op)
     if rule is None:
         return None
-    levels = partition_levels(mesh)
+    levels = _LEVEL_FNS.get(op, partition_levels)(mesh)
     while levels:
         plan = rule(levels, *args, impl=impl, **kwargs)
         if plan is not None:
@@ -406,79 +447,235 @@ def _gemm_rule(levels, a, b, *, impl=None, out_dtype=None,
     return None
 
 
-def _head_sharded_attn(op, levels, kv_heads: int, in_specs, out_specs,
-                       local_fn, note):
-    """Shared GQA head-sharding contract: the kv-head count must divide the
-    total shard count (head groups place per-pod before per-device, and a
-    GQA group never splits across devices); otherwise decline this rung."""
-    if kv_heads % _ntot(levels) != 0:
-        return None
-    return PartitionPlan(
-        op=op, levels=tuple(levels), in_specs=in_specs, out_specs=out_specs,
-        local_fn=local_fn, note=note,
+def _attn_levels_split(levels, batch: int):
+    """Split the attention level stack into its parts.
+
+    Returns ``(head_levels, data_level, batch_ok)``: the non-``data``
+    levels (the GQA head-sharding stack), the ``("data", n)`` level if
+    offered (else None), and whether ``batch`` divides it (B-over-``data``
+    composition is legal).
+    """
+    heads = tuple(l for l in levels if l[0] != "data")
+    data = next((l for l in levels if l[0] == "data"), None)
+    batch_ok = data is not None and batch % data[1] == 0
+    return heads, data, batch_ok
+
+
+def _attn_used(levels, head_ok: bool, data_used: bool):
+    """The subset of ``levels`` a composed attention plan actually shards
+    over, preserving mesh (outer→inner) order."""
+    return tuple(
+        l for l in levels
+        if (l[0] == "data" and data_used) or (l[0] != "data" and head_ok)
     )
 
 
-@register_partition_rule("flash_attention")
-def _flash_rule(levels, q, k, v, *, impl=None, **kwargs):
-    """GQA-aware head sharding: q heads AND kv heads split together so every
-    device keeps whole (kv-head x group) blocks; on a multi-pod mesh head
-    groups split across pods first, then across the chiplet axis within
-    each pod. TP-hostile counts (e.g. 20 or 25 heads) drop a level or
-    replicate, via the same divisibility contract as parallel/sharding.py."""
-    K = k.shape[1]
-    n = _ntot(levels)
-    ax = _joint(levels)
+def _attn_head_ok(heads, count: int):
+    """GQA head divisibility at this rung, or ``None`` to decline it.
 
-    def local(q_l, k_l, v_l):
-        return registry.kernel_call(
-            "flash_attention", q_l, k_l, v_l, impl=impl, **kwargs
+    ``count`` heads must divide the whole head stack for the split to
+    engage. When they don't but the stack can still shrink (two head
+    levels offered), the rule DECLINES the rung instead of settling for a
+    data-only plan — the ladder then drops the outermost level and the
+    retry may recover an intra-pod head split (e.g. 4 kv heads on
+    pod=2 × model=4 head-shard 4-way after the pod level drops). Only a
+    minimal (single-level) head stack that still fails degrades to the
+    data-only composition.
+    """
+    ok = bool(heads) and count % _ntot(heads) == 0
+    if not ok and len(heads) > 1:
+        return None
+    return ok
+
+
+@register_partition_rule("flash_attention", levels=attention_levels)
+def _flash_rule(levels, q, k, v, *, impl=None, causal=True, window=0,
+                q_offset=0, scale=None, return_lse=False, **blocks):
+    """The attention family's composed rule: GQA head sharding × a ``data``
+    level carrying either the batch or the sequence.
+
+    Heads: q heads AND kv heads split together over the non-``data``
+    levels (pods first, then the chiplet axis) so every device keeps whole
+    (kv-head × group) blocks; TP-hostile counts drop the head split.
+
+    Data level, in preference order:
+
+    - **batch**: ``B % data == 0`` → B-sharding, collective-free;
+    - **sequence-parallel KV ring**: the long-context form (B too small to
+      split, ``Sq == Sk`` divisible by ``data``). Each device keeps its Q
+      chunk resident and the K/V chunks rotate through an (n−1)-hop
+      ``ppermute`` ring (``collectives.ring_scan``); every hop re-enters
+      the registered kernel with the hop's static ``q_offset`` so the
+      causal/window mask lands on the right absolute positions, and the
+      per-hop partials fold through the (m, l, acc)-equivalent
+      ``online_softmax_merge``. Under causal/window masking the hops where
+      the KV chunk sits in a rank's future merge as no-ops (the ring wrap
+      is exactly the masked-out triangle); a lookback window prunes whole
+      tail hops statically. The ring declines bounded masks at nonzero
+      ``q_offset`` (the wrap would alias past positions).
+
+    If neither composition applies at this rung the ladder drops the
+    outermost level and retries; ``None`` only once every level is gone.
+    """
+    from repro.parallel.collectives import (
+        NEG_LSE, online_softmax_merge, ring_scan,
+    )
+
+    B, H, Sq, _ = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    heads, data, batch_ok = _attn_levels_split(levels, B)
+    head_ok = _attn_head_ok(heads, K)
+    if head_ok is None:
+        return None  # decline: a shorter head stack may still divide
+    bounded = bool(causal or window)
+    ring_ok = (
+        data is not None and not batch_ok
+        and Sq == Sk and Sq % data[1] == 0
+        and not (bounded and q_offset != 0)
+    )
+    if not head_ok and not batch_ok and not ring_ok:
+        return None
+    ax = _joint(heads) if head_ok else None
+    used = _attn_used(levels, head_ok, batch_ok or ring_ok)
+    notes = []
+    if head_ok:
+        notes.append(
+            f"head-sharded ({K}/{_ntot(heads)} kv heads over "
+            f"{_levels_note(heads)})"
         )
 
-    h4 = P(None, ax, None, None)
-    return _head_sharded_attn(
-        "flash_attention", levels, K,
-        in_specs=(h4, h4, h4), out_specs=h4, local_fn=local,
-        note=f"head-sharded ({K}/{n} kv heads per device over "
-             f"{_levels_note(levels)})",
+    if batch_ok or not ring_ok:
+        dt = "data" if batch_ok else None
+        h4 = P(dt, ax, None, None)
+
+        def local(q_l, k_l, v_l):
+            return registry.kernel_call(
+                "flash_attention", q_l, k_l, v_l, causal=causal,
+                window=window, q_offset=q_offset, scale=scale,
+                return_lse=return_lse, impl=impl, **blocks,
+            )
+
+        if batch_ok:
+            notes.append(f"batch-sharded (B={B}/{data[1]} over data)")
+        return PartitionPlan(
+            op="flash_attention", levels=used,
+            in_specs=(h4, h4, h4),
+            out_specs=(h4, P(dt, ax, None)) if return_lse else h4,
+            local_fn=local,
+            note=" + ".join(notes),
+        )
+
+    # sequence-parallel ring: Sq/Sk over `data`, KV rotating
+    d = data[1]
+    c = Sq // d  # per-device chunk length (static)
+    hops = d
+    if window:
+        # hop t's nearest k sits c*t - (c-1) behind the earliest q; hops
+        # entirely beyond every row's lookback are pruned statically
+        hops = min(d, max(1, -(-(window + c - 1) // c)))
+
+    def local(q_l, k_l, v_l):
+        me = jax.lax.axis_index("data")
+        o0 = jnp.zeros(q_l.shape, jnp.float32)
+        lse0 = jnp.full(q_l.shape[:-1], NEG_LSE, jnp.float32)
+
+        def step(carry, kv, t):
+            o, lse = carry
+            k_b, v_b = kv
+            o_t, lse_t = registry.kernel_call(
+                "flash_attention", q_l, k_b, v_b, causal=causal,
+                window=window, q_offset=q_offset + t * c, scale=scale,
+                return_lse=True, impl=impl, **blocks,
+            )
+            if bounded and t:
+                # ranks me < t hold a wrapped (future) KV chunk this hop:
+                # causal/window semantics mask it entirely, so the partial
+                # merges as a no-op
+                valid = me >= t
+                lse_t = jnp.where(valid, lse_t, NEG_LSE)
+                o_t = jnp.where(valid, o_t.astype(jnp.float32), 0.0)
+            return online_softmax_merge(o, lse, o_t, lse_t)
+
+        o, lse = ring_scan(step, (o0, lse0), (k_l, v_l), "data", d, hops=hops)
+        o = o.astype(q_l.dtype)
+        return (o, lse) if return_lse else o
+
+    h4 = P(None, ax, "data", None)
+    kv_local_bytes = _nbytes(
+        (B, (K // _ntot(heads)) if head_ok else K, Sk // d, k.shape[-1]),
+        k.dtype,
+    )
+    notes.append(
+        f"ring seq-parallel (Sq={Sq}/{d} per device over data={d}, "
+        f"{hops - 1} kv hops)"
+    )
+    return PartitionPlan(
+        op="flash_attention", levels=used,
+        in_specs=(h4, h4, h4),
+        out_specs=(h4, P(None, ax, "data")) if return_lse else h4,
+        local_fn=local,
+        collectives=tuple(
+            CollectiveCost("permute", "data", kv_local_bytes, d)
+            for _ in range(2 * (hops - 1))  # k and v, per hop
+        ),
+        note=" + ".join(notes),
     )
 
 
-@register_partition_rule("decode_attention")
+@register_partition_rule("decode_attention", levels=attention_levels)
 def _decode_rule(levels, q, k, v, position, *, impl=None, **kwargs):
-    """Same GQA head rule as flash_attention (position stays replicated)."""
-    K = k.shape[1]
-    n = _ntot(levels)
-    ax = _joint(levels)
+    """Same composed GQA head × batch rule as flash_attention: heads over
+    the non-``data`` levels, B (queries AND their cache/position rows) over
+    ``data`` when it divides. No sequence ring — decode is one query token
+    against a resident cache."""
+    B, K = q.shape[0], k.shape[1]
+    heads, data, batch_ok = _attn_levels_split(levels, B)
+    head_ok = _attn_head_ok(heads, K)
+    if head_ok is None:
+        return None  # decline: a shorter head stack may still divide
+    if not head_ok and not batch_ok:
+        return None
+    ax = _joint(heads) if head_ok else None
+    dt = "data" if batch_ok else None
 
     def local(q_l, k_l, v_l, pos_l):
         return registry.kernel_call(
             "decode_attention", q_l, k_l, v_l, pos_l, impl=impl, **kwargs
         )
 
-    return _head_sharded_attn(
-        "decode_attention", levels, K,
-        in_specs=(P(None, ax, None), P(None, ax, None, None),
-                  P(None, ax, None, None), P(None)),
-        out_specs=P(None, ax, None),
+    notes = []
+    if head_ok:
+        notes.append(f"head-sharded ({K}/{_ntot(heads)} kv heads over "
+                     f"{_levels_note(heads)})")
+    if batch_ok:
+        notes.append(f"batch-sharded (B={B}/{data[1]} over data)")
+    return PartitionPlan(
+        op="decode_attention", levels=_attn_used(levels, head_ok, batch_ok),
+        in_specs=(P(dt, ax, None), P(dt, ax, None, None),
+                  P(dt, ax, None, None), P(dt)),
+        out_specs=P(dt, ax, None),
         local_fn=local,
-        note=f"head-sharded ({K}/{n} kv heads per device over "
-             f"{_levels_note(levels)})",
+        note=" + ".join(notes),
     )
 
 
-@register_partition_rule("linear_attention")
+@register_partition_rule("linear_attention", levels=attention_levels)
 def _linear_attention_rule(levels, r, k, v, w_log, u=None, s0=None, *,
                            impl=None, **kwargs):
-    """Head-sharded chunked state scan: every stream (r/k/v/decay, the u
-    bonus, the carried state) splits on H — across pods first, then within —
-    so the recurrence is embarrassingly parallel across devices: no
+    """Head-sharded chunked state scan composed with B over ``data``: every
+    stream (r/k/v/decay, the carried state) splits on H across the
+    non-``data`` levels and on B across ``data``; the u bonus is per-head
+    only. The recurrence stays embarrassingly parallel across devices: no
     collective epilogue at all."""
-    H = r.shape[1]
-    n = _ntot(levels)
-    if H % n != 0:
+    B, H = r.shape[0], r.shape[1]
+    heads, data, batch_ok = _attn_levels_split(levels, B)
+    head_ok = _attn_head_ok(heads, H)
+    if head_ok is None:
+        return None  # decline: a shorter head stack may still divide
+    if not head_ok and not batch_ok:
         return None
-    ax = _joint(levels)
+    ax = _joint(heads) if head_ok else None
+    dt = "data" if batch_ok else None
 
     def local(r_l, k_l, v_l, w_l, u_l, s0_l):
         return registry.kernel_call(
@@ -486,14 +683,19 @@ def _linear_attention_rule(levels, r, k, v, w_log, u=None, s0=None, *,
             impl=impl, **kwargs,
         )
 
-    h4 = P(None, ax, None, None)
+    h4 = P(dt, ax, None, None)
+    notes = []
+    if head_ok:
+        notes.append(f"head-sharded ({H}/{_ntot(heads)} heads over "
+                     f"{_levels_note(heads)})")
+    if batch_ok:
+        notes.append(f"batch-sharded (B={B}/{data[1]} over data)")
     return PartitionPlan(
-        op="linear_attention", levels=tuple(levels),
+        op="linear_attention", levels=_attn_used(levels, head_ok, batch_ok),
         in_specs=(h4, h4, h4, h4, P(ax, None), h4),
         out_specs=(h4, h4),
         local_fn=local,
-        note=f"head-sharded ({H}/{n} heads per device over "
-             f"{_levels_note(levels)})",
+        note=" + ".join(notes),
     )
 
 

@@ -34,10 +34,18 @@ def mha_ref(
     v: jax.Array,  # (B, K, Sk, D)
     *,
     causal: bool = True,
-    window: int = 0,  # 0 = unbounded; else sliding window of this many tokens
+    window: int = 0,  # 0 = unbounded; else LOOKBACK window (implies k <= q)
     q_offset: int = 0,  # absolute position of q[0] (for prefill continuation)
     scale: float | None = None,
-) -> jax.Array:
+    return_lse: bool = False,
+):
+    """Attention oracle. ``window > 0`` is a *lookback* window: each query
+    attends to keys in ``(q_pos - window, q_pos]``, so the window itself
+    imposes the ``k_pos <= q_pos`` upper bound even with ``causal=False``
+    (the semantics every impl shares — see the cross-impl window test).
+    ``return_lse=True`` additionally returns the per-row log-sum-exp of the
+    masked scores, (B, H, Sq) fp32 — the ring-attention merge statistic.
+    """
     B, H, Sq, D = q.shape
     K, Sk = k.shape[1], k.shape[2]
     G = H // K
@@ -47,7 +55,7 @@ def mha_ref(
     q_pos = jnp.arange(Sq)[:, None] + q_offset
     k_pos = jnp.arange(Sk)[None, :]
     mask = jnp.ones((Sq, Sk), dtype=bool)
-    if causal:
+    if causal or window:
         mask &= k_pos <= q_pos
     if window:
         mask &= k_pos > q_pos - window
@@ -55,7 +63,12 @@ def mha_ref(
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
     o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
-    return o.reshape(B, H, Sq, D).astype(q.dtype)
+    o = o.reshape(B, H, Sq, D).astype(q.dtype)
+    if not return_lse:
+        return o
+    lse = jax.scipy.special.logsumexp(s, axis=-1)  # -inf on fully-masked rows
+    lse = jnp.maximum(lse, -1e30).reshape(B, H, Sq)  # keep merges finite
+    return o, lse
 
 
 def decode_attention_ref(

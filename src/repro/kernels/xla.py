@@ -9,8 +9,6 @@ sees true FLOP/byte/collective counts.
 """
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,13 +22,17 @@ from repro.kernels import registry
 
 
 def flash_attention_xla(q, k, v, *, causal=True, window=0, q_offset=0,
-                        scale=None, bk=None):
+                        scale=None, bq=None, bk=None, return_lse=False):
     """Online-softmax over KV blocks (FlashAttention-2 dataflow in jnp).
 
     Memory is O(Sq * bk) per head instead of O(Sq * Sk): this is the
     C4 double-buffered-tile structure the paper uses, expressed as a scan.
-    ``bk`` resolves through the registry (explicit > override > default), the
-    same KV-block geometry the Pallas kernel reads.
+    ``bq``/``bk`` resolve through the registry (explicit > override >
+    default), the same block geometry the Pallas kernel reads. A lookback
+    ``window`` bounds attention to ``(q_pos - window, q_pos]`` regardless
+    of ``causal`` (the shared window semantics — see ``ref.mha_ref``).
+    ``return_lse=True`` also returns the (B, H, Sq) fp32 log-sum-exp the
+    ring-attention merge consumes.
     """
     B, H, Sq, D = q.shape
     K, Sk = k.shape[1], k.shape[2]
@@ -42,7 +44,7 @@ def flash_attention_xla(q, k, v, *, causal=True, window=0, q_offset=0,
         # (causal halves attention FLOPs; sliding windows keep only a band)
         return _flash_attention_xla_unrolled(
             q, k, v, causal=causal, window=window, q_offset=q_offset,
-            scale=scale,
+            scale=scale, bq=bq, bk=bk, return_lse=return_lse,
         )
     block_k = min(registry.resolve_blocks("flash_attention", bk=bk)["bk"], Sk)
     pad = (-Sk) % block_k
@@ -64,7 +66,7 @@ def flash_attention_xla(q, k, v, *, causal=True, window=0, q_offset=0,
         s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kblk.astype(jnp.float32))
         k_pos = bidx * block_k + jnp.arange(block_k)
         mask = k_pos[None, :] < Sk
-        if causal:
+        if causal or window:
             mask &= k_pos[None, :] <= q_pos[:, None]
         if window:
             mask &= k_pos[None, :] > q_pos[:, None] - window
@@ -86,17 +88,23 @@ def flash_attention_xla(q, k, v, *, causal=True, window=0, q_offset=0,
         body, (m0, l0, acc0), (kb, vb, jnp.arange(nb))
     )
     o = acc / jnp.maximum(l, 1e-30)[..., None]
-    return o.reshape(B, H, Sq, D).astype(q.dtype)
+    o = o.reshape(B, H, Sq, D).astype(q.dtype)
+    if not return_lse:
+        return o
+    lse = (m + jnp.log(jnp.maximum(l, 1e-30))).reshape(B, H, Sq)
+    return o, lse
 
 
-def _flash_attention_xla_unrolled(q, k, v, *, causal, window, q_offset, scale):
+def _flash_attention_xla_unrolled(q, k, v, *, causal, window, q_offset, scale,
+                                  bq=None, bk=None, return_lse=False):
     B, H, Sq, D = q.shape
     K, Sk = k.shape[1], k.shape[2]
     G = H // K
     NEG = jnp.float32(-1e30)
-    grid = int(os.environ.get("REPRO_UNROLL_GRID", "8"))
-    bq = min(Sq, max(-(-Sq // grid), 128))
-    bk = min(Sk, max(-(-Sk // grid), 128))
+    # the same single block-geometry path every impl uses (explicit >
+    # set_block_override > default) — no private env-var escape hatch
+    blocks = registry.resolve_blocks("flash_attention", bq=bq, bk=bk)
+    bq, bk = min(blocks["bq"], Sq), min(blocks["bk"], Sk)
     pq, pk = (-Sq) % bq, (-Sk) % bk
     if pq:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
@@ -106,7 +114,7 @@ def _flash_attention_xla_unrolled(q, k, v, *, causal, window, q_offset, scale):
     nq, nk = (Sq + pq) // bq, (Sk + pk) // bk
     qf = (q.astype(jnp.float32) * scale).reshape(B, K, G, nq, bq, D)
 
-    outs = []
+    outs, lses = [], []
     for i in range(nq):
         qi = qf[:, :, :, i]  # (B,K,G,bq,D)
         q_lo, q_hi = q_offset + i * bq, q_offset + (i + 1) * bq - 1
@@ -115,8 +123,8 @@ def _flash_attention_xla_unrolled(q, k, v, *, causal, window, q_offset, scale):
         acc = jnp.zeros((B, K, G, bq, D))
         for j in range(nk):
             k_lo, k_hi = j * bk, (j + 1) * bk - 1
-            if causal and k_lo > q_hi:
-                continue  # static skip: above the diagonal
+            if (causal or window) and k_lo > q_hi:
+                continue  # static skip: above the diagonal (window implies it)
             if window and k_hi <= q_lo - window:
                 continue  # static skip: older than every row's window
             kj = k[:, :, j * bk : (j + 1) * bk].astype(jnp.float32)
@@ -125,7 +133,7 @@ def _flash_attention_xla_unrolled(q, k, v, *, causal, window, q_offset, scale):
             q_pos = q_lo + jnp.arange(bq)[:, None]
             k_pos = k_lo + jnp.arange(bk)[None, :]
             mask = k_pos < Sk
-            if causal:
+            if causal or window:
                 mask &= k_pos <= q_pos
             if window:
                 mask &= k_pos > q_pos - window
@@ -137,8 +145,13 @@ def _flash_attention_xla_unrolled(q, k, v, *, causal, window, q_offset, scale):
             acc = acc * corr[..., None] + jnp.einsum("bkgqs,bksd->bkgqd", p, vj)
             m = m_new
         outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+        lses.append(m + jnp.log(jnp.maximum(l, 1e-30)))
     o = jnp.concatenate(outs, axis=3).reshape(B, H, Sq + pq, D)[:, :, :Sq]
-    return o.astype(q.dtype)
+    o = o.astype(q.dtype)
+    if not return_lse:
+        return o
+    lse = jnp.concatenate(lses, axis=3).reshape(B, H, Sq + pq)[:, :, :Sq]
+    return o, lse
 
 
 def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None):

@@ -47,9 +47,17 @@ def _collectives_cell(plan) -> str:
         return "—"
     if not plan.collectives:
         return "none"
-    parts = []
+    # run-length encode: a ring plan fires dozens of identical per-hop
+    # permutes; "30× permute@data(...)" reads, thirty repeats don't
+    parts, runs = [], []
     for c in plan.collectives:
-        parts.append(f"{c.kind}@{c.axis}(n={c.n}, {c.nbytes} B)")
+        cell = f"{c.kind}@{c.axis}(n={c.n}, {c.nbytes} B)"
+        if runs and runs[-1][0] == cell:
+            runs[-1][1] += 1
+        else:
+            runs.append([cell, 1])
+    for cell, count in runs:
+        parts.append(cell if count == 1 else f"{count}× {cell}")
     return "; ".join(parts)
 
 

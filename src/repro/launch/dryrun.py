@@ -1,7 +1,10 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.xla_flags import ensure_host_device_count
 
-# isort: split  -- the two lines above MUST precede any jax-importing module
+# append (never clobber) before anything imports jax: caller flags survive,
+# including a caller-chosen device count
+ensure_host_device_count(512)
+
+# isort: split  -- the lines above MUST precede any jax-importing module
 import argparse
 import json
 import sys
@@ -384,7 +387,11 @@ def op_roofline_cells(multi_pod: bool = False) -> list[dict]:
     With ``multi_pod`` the plans resolve two-level (pod×model) and every
     cell carries ``collective_s_per_level`` — intra-pod (``model``, ICI
     bandwidth) vs cross-pod (``pod``, D2D bandwidth) seconds side by side —
-    so the cells show where the narrow D2D link, not HBM, is binding.
+    so the cells show where the narrow D2D link, not HBM, is binding. The
+    B=1 long-context flash_attention cell rides the sequence-parallel KV
+    ring: its (n-1) per-hop ppermutes price into the ``data`` level, and at
+    GPT-J geometry the cell reports d2d_s-dominant — the ring hop, not HBM,
+    binds long-context scale-out.
 
     Uses a device-free partition.MeshSpec: no devices are constructed, so
     this runs anywhere the dry-run runs.

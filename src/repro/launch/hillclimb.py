@@ -1,11 +1,8 @@
-import os
+from repro.launch.xla_flags import ensure_host_device_count
 
 # append, don't clobber: the caller's own XLA_FLAGS must survive, including
-# a caller-chosen device count (XLA parses last-wins, so match by flag name)
-_DEVICE_FLAG = "--xla_force_host_platform_device_count"
-_existing = os.environ.get("XLA_FLAGS", "")
-if not any(t.split("=", 1)[0] == _DEVICE_FLAG for t in _existing.split()):
-    os.environ["XLA_FLAGS"] = f"{_existing} {_DEVICE_FLAG}=512".strip()
+# a caller-chosen device count (the shared launcher bootstrap)
+ensure_host_device_count(512)
 
 # isort: split
 import argparse

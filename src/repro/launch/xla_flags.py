@@ -1,0 +1,32 @@
+"""XLA_FLAGS bootstrap shared by the launcher entry points.
+
+Both dry-run style launchers (``launch/dryrun.py``, ``launch/hillclimb.py``)
+need ``--xla_force_host_platform_device_count`` in the environment BEFORE
+anything imports jax. The one correct way to put it there is to APPEND to
+whatever the caller already exported: assigning ``os.environ["XLA_FLAGS"]``
+outright silently discards the user's own flags (dump directories, a
+caller-chosen device count, ...) — the regression both launchers now guard
+against via ``tests/test_registry.py``.
+
+This module deliberately imports nothing beyond the stdlib so launchers can
+call it on their very first line.
+"""
+from __future__ import annotations
+
+import os
+
+_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_host_device_count(n: int = 512) -> None:
+    """Append ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``.
+
+    Args: ``n`` — the forced host device count the launcher wants.
+
+    Preserves every caller-set flag, is idempotent, and never overrides a
+    caller-chosen device count (XLA parses flags last-wins, so matching is
+    by flag name, not full token). Must run before any jax import.
+    """
+    existing = os.environ.get("XLA_FLAGS", "")
+    if not any(t.split("=", 1)[0] == _DEVICE_FLAG for t in existing.split()):
+        os.environ["XLA_FLAGS"] = f"{existing} {_DEVICE_FLAG}={n}".strip()

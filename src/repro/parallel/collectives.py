@@ -1,11 +1,19 @@
-"""Explicit collective patterns: expert-parallel all-to-all MoE and the
-ring-carry sequence-parallel scan (paper C5's D2D traffic patterns as
-jax.lax collectives under shard_map).
+"""Explicit collective patterns: expert-parallel all-to-all MoE, the
+hierarchical psum, and the ppermute ring primitives behind sequence
+parallelism (paper C5's D2D traffic patterns as jax.lax collectives under
+shard_map).
 
 The default MoE keeps all experts TP-sharded on d_ff (weights resident
 everywhere); this module provides the EP alternative — experts partitioned
 across the `model` axis with token all-to-alls — used in the §Perf hillclimb
 where it trades weight all-gathers for activation exchange.
+
+The ring family (``ring_scan``, ``ring_scan_carry``,
+``online_softmax_merge``) is the latency-tolerant tile-rotation pattern the
+paper's C4/C5 interconnect overlaps with compute: a resident operand stays
+put while its partner shard hops rank→rank over ``ppermute``, (n−1) hops
+total — ring flash attention (``kernels/partition.py``) and the
+sequence-parallel linear-recurrence carry are both built on it.
 """
 from __future__ import annotations
 
@@ -14,6 +22,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel.compat import shard_map
+
+# matches the flash kernels' masked-score floor: fully-masked softmax rows
+# carry lse ~= NEG, which the online merge weights to exp(NEG - NEG) ~ 1
+# against a zero accumulator instead of producing -inf - -inf NaNs
+NEG_LSE = -1e30
 
 
 def hierarchical_psum(x, levels):
@@ -97,21 +110,98 @@ def ep_expert_ffn(disp, wi, wg, wo, act, mesh, dp, *, ep_axis="model"):
     )(disp, wi, wo)
 
 
-def ring_scan_carry(chunk_fn, xs, state, mesh, seq_axis="data"):
-    """Sequence-parallel linear-recurrence carry: each rank scans its local
-    chunk, then the final state rides a collective_permute ring to the next
-    rank (the D2D-pipelined version of the SSM chunk scan).
+def _ring_fwd(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
 
-    chunk_fn(state, xs_local) -> (state_out, ys_local)
+
+def ring_scan(step_fn, carry, block, axis: str, n: int, *,
+              hops: int | None = None):
+    """Rotate ``block`` through an n-rank ``ppermute`` ring, folding it into
+    ``carry`` at every hop — the primitive under ring flash attention.
+
+    Args: ``step_fn(carry, block, t) -> carry`` — called once per hop; at
+    hop ``t`` the resident ``block`` is the one originally owned by rank
+    ``(axis_index - t) % n``; ``carry`` — the running accumulator; ``block``
+    — the rotating operand (any pytree; every leaf hops together); ``axis``
+    — the mesh axis the ring lives on; ``n`` — the ring size (static);
+    ``hops`` — stop after this many steps (default ``n``: every shard
+    visits every rank; a lookback window lets ring attention prune the
+    tail). The permutation always spans the full ``n``-rank ring
+    regardless of ``hops``.
+
+    Fires exactly ``hops - 1`` ppermutes — the block is consumed in place
+    on the final hop, never sent home. Must run inside a ``shard_map``
+    naming ``axis``. Returns the folded carry.
     """
-    n = mesh.shape[seq_axis]
+    hops = n if hops is None else hops
+    perm = _ring_fwd(n)
+    for t in range(hops):
+        carry = step_fn(carry, block, t)
+        if t != hops - 1:
+            block = jax.tree_util.tree_map(
+                lambda x: jax.lax.ppermute(x, axis, perm), block
+            )
+    return carry
 
-    def local(xs_l, s0_l):
-        # stage i receives the carry from stage i-1; ranks pipeline naturally
-        s, ys = chunk_fn(s0_l, xs_l)
-        s_next = jax.lax.ppermute(
-            s, seq_axis, [(i, (i + 1) % n) for i in range(n)]
+
+def online_softmax_merge(o_acc, lse_acc, o, lse):
+    """Merge one attention partial into a running online-softmax accumulator.
+
+    Args: ``o_acc`` / ``lse_acc`` — the running (unnormalised-by-partner)
+    output and log-sum-exp (init ``o_acc = 0``, ``lse_acc = NEG_LSE``);
+    ``o`` / ``lse`` — a new partial: softmax-normalised output and its lse
+    over the same query rows, as the kernels' ``return_lse=True`` path
+    emits them (``lse`` has one fewer trailing dim than ``o``).
+
+    Returns the merged ``(o, lse)``: each side is reweighted by
+    ``exp(lse_side - lse_merged)``, the exact rescaling the flash kernels
+    apply per KV block — so folding ring partials in any order reproduces
+    the single-device softmax. Rows fully masked in BOTH sides stay 0 (the
+    NEG_LSE floor keeps every weight finite).
+    """
+    lse_new = jnp.logaddexp(lse_acc, lse)
+    w_acc = jnp.exp(lse_acc - lse_new)[..., None]
+    w = jnp.exp(lse - lse_new)[..., None]
+    return (
+        o_acc.astype(jnp.float32) * w_acc + o.astype(jnp.float32) * w,
+        lse_new,
+    )
+
+
+def ring_scan_carry(chunk_fn, xs_l, s0, axis: str, n: int):
+    """Sequence-parallel linear-recurrence carry over a ppermute ring: rank
+    ``r`` scans its local chunk with the TRUE carry produced by rank
+    ``r - 1`` (the D2D-pipelined version of the SSM chunk scan).
+
+    Args: ``chunk_fn(state, xs_local) -> (state_out, ys_local)`` — the
+    per-chunk scan; ``xs_l`` — this rank's chunk; ``s0`` — the global
+    initial state (only rank 0's is consumed); ``axis`` / ``n`` — the ring
+    axis and its (static) size.
+
+    Runs inside ``shard_map``. The carry threads hop by hop: after hop
+    ``t`` the state that left rank ``t`` arrives at rank ``t + 1``, which
+    re-scans its chunk with it — so every rank's kept result is computed
+    from the exact sequential prefix state, unlike the pre-fix version
+    whose single ppermute delivered each rank only its LEFT neighbour's
+    locally-seeded scan. SPMD cost is ``n`` chunk evaluations per rank
+    (the recurrence is inherently a depth-``n`` pipeline; the extra
+    evaluations are the dead pipeline slots).
+
+    Returns ``(ys, s_out)``: this rank's output chunk and end state (rank
+    ``n - 1``'s ``s_out`` is the global final state).
+    """
+    me = jax.lax.axis_index(axis)
+    perm = _ring_fwd(n)
+    s_new, ys = chunk_fn(s0, xs_l)
+    s_keep = s_new  # correct on rank 0 after hop 0; later ranks fixed below
+    for t in range(1, n):
+        s_in = jax.lax.ppermute(s_new, axis, perm)
+        s_new, ys_t = chunk_fn(s_in, xs_l)
+        keep = me == t
+        ys = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(keep, b, a), ys, ys_t
         )
-        return ys, s_next
-
-    return local  # composed by the caller inside its own shard_map
+        s_keep = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(keep, b, a), s_keep, s_new
+        )
+    return ys, s_keep

@@ -248,10 +248,21 @@ def test_local_case_shapes_replicated_plan_matches_flat_key():
     case = at.DEFAULT_SUITE["flash_attention"](rng)
     case.mesh = _mesh_2x4()  # 4 heads on a 4-way axis shards; force a miss
     case.args = tuple(
-        jnp.zeros((1, 5, 64, 16), jnp.float32) for _ in range(3)
-    )  # 5 kv heads: TP-hostile, replicates
+        jnp.zeros((1, 5, 63, 16), jnp.float32) for _ in range(3)
+    )  # 5 kv heads: TP-hostile; B=1 and odd seq defeat batch AND ring
     shapes = at.local_case_shapes(case, "xla")
     assert [s.shape for s in shapes] == [a.shape for a in case.args]
+
+
+def test_local_case_shapes_ring_plan_keys_by_seq_shard():
+    # the default flash case (B=1, Sq=Sk=256) rides the seq-parallel ring
+    # under a mesh: the record keys by the per-device Q/KV chunk geometry
+    rng = _rng()
+    case = at.DEFAULT_SUITE["flash_attention"](rng)
+    case.mesh = _mesh_2x4()
+    shapes = at.local_case_shapes(case, "xla")
+    # data=2 halves the sequence; model=4 shards the 4 heads
+    assert [s.shape for s in shapes] == [(1, 1, 128, 64)] * 3
 
 
 def test_record_matches_environment_is_mesh_aware(tmp_path):

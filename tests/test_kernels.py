@@ -50,7 +50,7 @@ def test_gemm_fp8_expanding(rng):
 @pytest.mark.parametrize("h,kv,sq,sk", [(4, 2, 50, 50), (8, 1, 33, 65), (4, 4, 128, 128)])
 @pytest.mark.parametrize("kw", [
     dict(causal=True), dict(causal=True, window=7), dict(causal=False),
-    dict(causal=True, q_offset=13),
+    dict(causal=False, window=7), dict(causal=True, q_offset=13),
 ])
 def test_flash_attention(rng, h, kv, sq, sk, kw):
     q = jnp.asarray(rng.standard_normal((2, h, sq, 16)), jnp.float32)
@@ -64,6 +64,44 @@ def test_flash_attention(rng, h, kv, sq, sk, kw):
     with ops.unrolled_inner():
         allclose(ops.flash_attention(q, k, v, impl="xla", **kw), want,
                  rtol=1e-4, atol=1e-4)
+
+
+def test_noncausal_window_never_attends_future(rng):
+    """Regression: ``causal=False, window>0`` used to leave the future
+    unmasked (no upper position bound) in the pallas kernel, both xla forms
+    and ref, while every docstring described a lookback window. The shared
+    semantics: a window bounds attention to ``(q_pos - window, q_pos]``, so
+    perturbing FUTURE k/v must never change the output — including through
+    the block early-out, exercised with blocks smaller than the window."""
+    q = jnp.asarray(rng.standard_normal((1, 4, 48, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 48, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 48, 8)), jnp.float32)
+    # poison everything after position 20: rows <= 20 must not move
+    k_p = k.at[:, :, 21:].add(100.0)
+    v_p = v.at[:, :, 21:].add(100.0)
+    kw = dict(causal=False, window=6)
+    for impl, extra in (("ref", {}), ("xla", {}), ("interpret", {}),
+                        ("xla", dict(bq=8, bk=8)),
+                        ("interpret", dict(bq=8, bk=8))):
+        a = ops.flash_attention(q, k, v, impl=impl, **kw, **extra)
+        b = ops.flash_attention(q, k_p, v_p, impl=impl, **kw, **extra)
+        np.testing.assert_allclose(
+            np.asarray(a[:, :, :21]), np.asarray(b[:, :, :21]),
+            rtol=1e-5, atol=1e-5, err_msg=f"{impl} {extra}",
+        )
+    with ops.unrolled_inner():
+        a = ops.flash_attention(q, k, v, impl="xla", bq=8, bk=8, **kw)
+        b = ops.flash_attention(q, k_p, v_p, impl="xla", bq=8, bk=8, **kw)
+        np.testing.assert_allclose(
+            np.asarray(a[:, :, :21]), np.asarray(b[:, :, :21]),
+            rtol=1e-5, atol=1e-5, err_msg="unrolled",
+        )
+    # and the semantics agree across every impl against ref
+    want = ops.flash_attention(q, k, v, impl="ref", **kw)
+    for impl in ("xla", "interpret"):
+        got = ops.flash_attention(q, k, v, impl=impl, bq=8, bk=8, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4, err_msg=impl)
 
 
 def test_flash_attention_bf16(rng):

@@ -91,18 +91,25 @@ def test_gemm_two_level_plan_and_per_level_costs():
 def test_fallback_ladder_drops_pod_level_before_replicating():
     f32 = jnp.float32
     # 4 kv heads divide model=4 but not pod*model=8: the ladder drops the
-    # pod level and head-shards intra-pod instead of replicating outright
+    # pod level and head-shards intra-pod (composed with B over data)
     q, kv = S((2, 8, 32, 16), f32), S((2, 4, 32, 16), f32)
     plan = partition.plan_for("flash_attention", MESH_2POD, q, kv, kv)
-    assert plan is not None and plan.levels == (("model", 4),)
-    # 8 kv heads divide pod*model=8: full two-level head placement
+    assert plan is not None
+    assert plan.levels == (("data", 2), ("model", 4))
+    # 8 kv heads divide pod*model=8: full head placement + batch over data
     kv8 = S((2, 8, 32, 16), f32)
     plan = partition.plan_for("flash_attention", MESH_2POD, q, kv8, kv8)
-    assert plan.levels == (("pod", 2), ("model", 4))
-    # nothing divides: replicate
+    assert plan.levels == (("pod", 2), ("data", 2), ("model", 4))
+    # TP-hostile heads: the head split drops but B over data survives
     kv5 = S((2, 5, 32, 16), f32)
     q20 = S((2, 20, 32, 16), f32)
-    assert partition.plan_for("flash_attention", MESH_2POD, q20, kv5, kv5) is None
+    plan = partition.plan_for("flash_attention", MESH_2POD, q20, kv5, kv5)
+    assert plan.levels == (("data", 2),)
+    assert "batch-sharded" in plan.note and "head" not in plan.note
+    # nothing divides at all (B=1, odd seq, hostile heads): replicate
+    q1 = S((1, 5, 33, 16), f32)
+    kv1 = S((1, 5, 33, 16), f32)
+    assert partition.plan_for("flash_attention", MESH_2POD, q1, kv1, kv1) is None
 
 
 def test_stencil_two_level_distinguishes_pod_boundary_hop():
@@ -176,16 +183,24 @@ def test_attention_rules_are_gqa_aware():
     q, kv = S((2, 8, 32, 16), f32), S((2, 4, 32, 16), f32)
     plan = partition.plan_for("flash_attention", MESH8, q, kv, kv)
     assert plan is not None and "head-sharded" in plan.note
-    # 20 q heads but 5 kv heads on a 4-way axis: replicate, never split a
-    # GQA group across devices (the paper's TP-hostile head counts)
+    # 20 q heads but 5 kv heads on a 4-way axis: never split a GQA group
+    # across devices (the paper's TP-hostile head counts) — the head split
+    # drops, but B over the data axis still composes
     q5, kv5 = S((2, 20, 32, 16), f32), S((2, 5, 32, 16), f32)
-    assert partition.plan_for("flash_attention", MESH8, q5, kv5, kv5) is None
+    plan = partition.plan_for("flash_attention", MESH8, q5, kv5, kv5)
+    assert plan.levels == (("data", 2),) and "head" not in plan.note
     pos = S((2,), jnp.int32)
     assert partition.plan_for(
         "decode_attention", MESH8, S((2, 8, 16), f32), kv, kv, pos
     ) is not None
-    assert partition.plan_for(
+    plan = partition.plan_for(
         "decode_attention", MESH8, S((2, 20, 16), f32), kv5, kv5, pos
+    )
+    assert plan.levels == (("data", 2),) and "head" not in plan.note
+    # a truly hostile decode (odd batch too) replicates
+    assert partition.plan_for(
+        "decode_attention", MESH8, S((3, 20, 16), f32),
+        S((3, 5, 32, 16), f32), S((3, 5, 32, 16), f32), S((3,), jnp.int32)
     ) is None
 
 
@@ -288,6 +303,12 @@ def test_dryrun_op_roofline_cells():
     assert by_op["gemm"]["d2d_bytes"] > 0
     assert by_op["bsr_spmm"]["d2d_bytes"] > 0
     assert by_op["stencil"]["d2d_bytes"] > 0  # halo planes
+    # the B=1 long-context flash cell rides the KV ring: its (n-1) per-hop
+    # ppermutes (x2: k and v) are priced into the data level
+    fa = by_op["flash_attention"]
+    assert "ring seq-parallel" in fa["partition"]
+    assert fa["d2d_bytes"] > 0
+    assert fa["collective_s_per_level"].get("data", 0) > 0
 
 
 def test_dryrun_op_roofline_multi_pod_emits_per_level_seconds():
@@ -306,9 +327,15 @@ def test_dryrun_op_roofline_multi_pod_emits_per_level_seconds():
         assert by_op[op]["partition_levels"] == ["pod=2", "model=16"]
         total = sum(per.values())
         assert by_op[op]["roofline"]["d2d_s"] == pytest.approx(total)
-    # 16 kv heads resist pod*model=32: the ladder drops to the model level,
-    # so these cells show a single-level plan with no pod term
-    for op in ("flash_attention", "decode_attention", "linear_attention"):
+    # 16 kv heads resist pod*model=32: the ladder drops the pod level. The
+    # B=1 long-context flash cell then rides the sequence-parallel KV ring
+    # over the data axis (heads intra-pod), pricing its per-hop ppermutes
+    assert by_op["flash_attention"]["partition_levels"] == [
+        "data=16", "model=16"]
+    assert "ring seq-parallel" in by_op["flash_attention"]["partition"]
+    assert by_op["flash_attention"]["collective_s_per_level"]["data"] > 0
+    # decode (B=8) and linear attention (B=1) have no ring: head-only plans
+    for op in ("decode_attention", "linear_attention"):
         assert by_op[op]["partition_levels"] == ["model=16"], op
         assert "pod" not in by_op[op]["collective_s_per_level"]
 
@@ -546,8 +573,10 @@ _EQUIV = textwrap.dedent(
     assert got16.dtype == jnp.bfloat16
     out["ok"].append("gemm[out_dtype]")
 
-    # replication fallback on indivisible shapes: same signature, same answer
-    q5 = jnp.asarray(rng.standard_normal((2, 5, 16, 8)), f32)
+    # replication fallback on indivisible shapes: same signature, same
+    # answer. B=1 + TP-hostile heads + odd seq defeats head, batch AND the
+    # seq-parallel ring
+    q5 = jnp.asarray(rng.standard_normal((1, 5, 15, 8)), f32)
     check("fallback_flash",
           ops.flash_attention(q5, q5, q5, mesh=mesh, impl="xla"),
           ops.flash_attention(q5, q5, q5, impl="ref"))
@@ -652,31 +681,34 @@ _EQUIV_3AX = textwrap.dedent(
     w = np.array([0.2, 0.3, 0.4, 0.1], np.float32)
 
     # every op resolves two-level here: pod*model = 4 divides K=64, kv=4
-    # heads, H=4, 64 rows, 4 tiles, 32 rows, X=16
+    # heads, H=4, 64 rows, 4 tiles, 32 rows, X=16. Attention rules also
+    # compose B=2 over the data axis (three levels); linattn has B=1
     two_level_cases = [
-        ("gemm", (a, b), {}),
-        ("flash", (q, kv, kv), {}),
-        ("decode", (qd, kv, kv, pos), {}),
-        ("linattn", (r, r, r, wl), {}),
-        ("spmm", (ell.values, ell.cols, dn), {}),
+        ("gemm", (a, b), {}, (("pod", 2), ("model", 2))),
+        ("flash", (q, kv, kv), {}, (("pod", 2), ("data", 2), ("model", 2))),
+        ("decode", (qd, kv, kv, pos), {},
+         (("pod", 2), ("data", 2), ("model", 2))),
+        ("linattn", (r, r, r, wl), {}, (("pod", 2), ("model", 2))),
+        ("spmm", (ell.values, ell.cols, dn), {}, (("pod", 2), ("model", 2))),
         ("bsr_spmm", (bsrA.tile_values, bsrA.tile_rows, bsrA.tile_cols,
-                      brhs), {"num_rows": 16}),
+                      brhs), {"num_rows": 16}, (("pod", 2), ("model", 2))),
         ("spmspm", (sA.values, sA.cols, sB.values, sB.cols),
-         {"contraction_dim": 64}),
-        ("stencil", (grid,), {"offsets": offs, "weights": w}),
+         {"contraction_dim": 64}, (("pod", 2), ("model", 2))),
+        ("stencil", (grid,), {"offsets": offs, "weights": w},
+         (("pod", 2), ("model", 2))),
     ]
     op_names = {"linattn": "linear_attention", "flash": "flash_attention",
                 "decode": "decode_attention"}
-    for tag, args, kw in two_level_cases:
+    for tag, args, kw, want_levels in two_level_cases:
         plan = partition.plan_for(op_names.get(tag, tag), mesh, *args, **kw)
-        assert plan.levels == (("pod", 2), ("model", 2)), (tag, plan.levels)
+        assert plan.levels == want_levels, (tag, plan.levels)
         out["two_level"].append(tag)
 
     # the ladder on a live mesh: kv=2 heads / 38 rows resist pod*model=4
-    # but divide model=2 -> single-level plans that still execute correctly
+    # but divide model=2 -> dropped-pod plans that still execute correctly
     kv2 = jnp.asarray(rng.standard_normal((2, 2, 32, 16)), f32)
     plan = partition.plan_for("flash_attention", mesh, q, kv2, kv2)
-    assert plan.levels == (("model", 2),), plan.levels
+    assert plan.levels == (("data", 2), ("model", 2)), plan.levels
     check("ladder_flash",
           ops.flash_attention(q, kv2, kv2, mesh=mesh, impl="xla"),
           ops.flash_attention(q, kv2, kv2, impl="ref"))
@@ -742,3 +774,264 @@ def test_sharded_equivalence_all_ops_three_axis():
                                      "spmm", "bsr_spmm", "spmspm", "stencil"}
     assert set(out["ladder"]) == {"flash", "spmm"}
     assert {"ladder_flash", "ladder_spmm"} <= set(out["ok"])
+
+
+# ---------------------------------------------------------------------------
+# Sequence-parallel ring flash attention: device-free plan units, the merge
+# and per-shard q_offset math on one device, and 8-device equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_attention_levels_vocabulary():
+    # the data axis slots between pod and model for the attention family;
+    # the default vocabulary (partition_levels) is untouched
+    assert partition.attention_levels(MESH8) == (("data", 2), ("model", 4))
+    assert partition.attention_levels(MESH_2POD) == (
+        ("pod", 2), ("data", 2), ("model", 4))
+    assert partition.partition_levels(MESH8) == (("model", 4),)
+    # size-1 or missing data axes drop out
+    assert partition.attention_levels(
+        partition.MeshSpec({"data": 1, "model": 4})) == (("model", 4),)
+    assert partition.attention_levels(
+        partition.MeshSpec({"model": 4})) == (("model", 4),)
+
+
+def test_flash_ring_rule_resolution():
+    f32 = jnp.float32
+    qL = S((1, 8, 256, 16), f32)
+    kL = S((1, 4, 256, 16), f32)
+    # B=1 blocks the batch split: the data axis carries the sequence
+    plan = partition.plan_for("flash_attention", MESH8, qL, kL, kL)
+    assert "ring seq-parallel" in plan.note and "head-sharded" in plan.note
+    assert plan.levels == (("data", 2), ("model", 4))
+    # (n-1) hops x (k and v): per-hop permutes priced on the data level at
+    # the local shard payload
+    assert len(plan.collectives) == 2 * (2 - 1)
+    kv_local = 1 * (4 // 4) * (256 // 2) * 16 * 4
+    assert all(
+        c == partition.CollectiveCost("permute", "data", kv_local, 2)
+        for c in plan.collectives
+    )
+    assert roofline.plan_collective_seconds_by_level(plan)["data"] > 0
+    # a lookback window prunes whole tail hops statically: of 8 ring steps
+    # only ceil((33+31)/32) = 2 kernel steps (1 rotation) survive
+    wide = partition.MeshSpec({"data": 8, "model": 1})
+    plan = partition.plan_for("flash_attention", wide, qL, kL, kL, window=33)
+    assert "1 kv hops" in plan.note
+    assert len(plan.collectives) == 2 * 1
+    # batch sharding is preferred over the ring when B divides
+    qB = S((2, 8, 256, 16), f32)
+    kB = S((2, 4, 256, 16), f32)
+    plan = partition.plan_for("flash_attention", MESH8, qB, kB, kB)
+    assert "batch-sharded" in plan.note and "ring" not in plan.note
+    # the ring declines bounded masks at nonzero q_offset (the wrap would
+    # alias past positions) and cross-attention (Sq != Sk)
+    plan = partition.plan_for(
+        "flash_attention", MESH8, qL, kL, kL, causal=True, q_offset=7)
+    assert plan is not None and "ring" not in plan.note  # head-only
+    qX = S((1, 8, 128, 16), f32)
+    plan = partition.plan_for(
+        "flash_attention", MESH8, qX, kL, kL, causal=False)
+    assert plan is None or "ring" not in plan.note
+    # ...but an unbounded (causal=False, window=0) ring tolerates q_offset
+    plan = partition.plan_for(
+        "flash_attention", MESH8, qL, kL, kL, causal=False, q_offset=7)
+    assert "ring seq-parallel" in plan.note
+
+
+def test_online_softmax_merge_reconstructs_full_softmax(rng):
+    from repro.parallel.collectives import NEG_LSE, online_softmax_merge
+
+    q = jnp.asarray(rng.standard_normal((1, 4, 32, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 32, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 32, 8)), jnp.float32)
+    for kw in (dict(causal=True), dict(causal=True, window=5),
+               dict(causal=False)):
+        want = ops.flash_attention(q, k, v, impl="ref", **kw)
+        # split KV in half; the second half's mask needs q shifted LEFT by
+        # the split point (the same q_offset hook the ring uses per hop)
+        half = 16
+        o = jnp.zeros(q.shape, jnp.float32)
+        lse = jnp.full(q.shape[:-1], NEG_LSE, jnp.float32)
+        for j, off in ((0, 0), (1, -half)):
+            o_t, lse_t = ops.flash_attention(
+                q, k[:, :, j * half:(j + 1) * half],
+                v[:, :, j * half:(j + 1) * half],
+                impl="ref", return_lse=True,
+                **{**kw, "q_offset": kw.get("q_offset", 0) + off},
+            )
+            o, lse = online_softmax_merge(o, lse, o_t, lse_t)
+        np.testing.assert_allclose(
+            np.asarray(o.astype(q.dtype)), np.asarray(want),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+@pytest.mark.parametrize("kw", [
+    dict(causal=True), dict(causal=True, window=9),
+    dict(causal=False), dict(causal=False, window=9),
+])
+def test_ring_per_shard_q_offset_single_device_simulation(rng, kw):
+    """The ring's per-(rank, hop) masking, simulated without devices: rank
+    ``me``'s hop ``t`` runs the kernel at static ``q_offset = t*c`` on the
+    KV chunk of rank ``(me - t) % d``; under causal/window masking the
+    wrapped hops (me < t) merge as no-ops. Folding every rank's hops must
+    reproduce the full single-device attention row-for-row."""
+    from repro.parallel.collectives import NEG_LSE, online_softmax_merge
+
+    d, c = 4, 16
+    S_ = d * c
+    q = jnp.asarray(rng.standard_normal((1, 4, S_, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, S_, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, S_, 8)), jnp.float32)
+    want = ops.flash_attention(q, k, v, impl="ref", **kw)
+    bounded = kw.get("causal") or kw.get("window", 0)
+    outs = []
+    for me in range(d):
+        q_l = q[:, :, me * c:(me + 1) * c]
+        o = jnp.zeros(q_l.shape, jnp.float32)
+        lse = jnp.full(q_l.shape[:-1], NEG_LSE, jnp.float32)
+        for t in range(d):
+            src = (me - t) % d
+            o_t, lse_t = ops.flash_attention(
+                q_l, k[:, :, src * c:(src + 1) * c],
+                v[:, :, src * c:(src + 1) * c],
+                impl="ref", return_lse=True, q_offset=t * c, **kw,
+            )
+            if bounded and t and me < t:  # wrapped: KV chunk is in the future
+                continue
+            o, lse = online_softmax_merge(o, lse, o_t, lse_t)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=2).astype(q.dtype)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# 8-device subprocess suite for the data-axis attention rules: ring flash
+# vs single device across causal x window x GQA (including a TP-hostile
+# head count that forces the head rule onto the ladder), batch-composed
+# plans, and the ring_scan_carry threading unit.
+_EQUIV_RING = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels import ops, partition
+    from repro.parallel.collectives import ring_scan_carry
+    from repro.parallel.compat import shard_map
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+    f32 = jnp.float32
+    out = {"ok": [], "ring": [], "batch": []}
+
+    def check(name, got, want, tol=1e-4):
+        err = float(jnp.max(jnp.abs(jnp.asarray(got) - jnp.asarray(want))))
+        assert err < tol, (name, err)
+        out["ok"].append(name)
+
+    # B=1 forces the ring; 8 q heads / 2 kv heads = GQA groups of 4
+    q = jnp.asarray(rng.standard_normal((1, 8, 64, 16)), f32)
+    kv = jnp.asarray(rng.standard_normal((1, 2, 64, 16)), f32)
+    # TP-hostile: 5 kv heads resist model=2, so the head rule drops off the
+    # ladder and the data level carries the ring alone
+    qh = jnp.asarray(rng.standard_normal((1, 10, 64, 16)), f32)
+    kvh = jnp.asarray(rng.standard_normal((1, 5, 64, 16)), f32)
+
+    cases = [("gqa", q, kv, kv), ("hostile", qh, kvh, kvh)]
+    kws = [dict(causal=True), dict(causal=True, window=9),
+           dict(causal=False), dict(causal=False, window=9)]
+    for tag, qq, kk, vv in cases:
+        for kw in kws:
+            plan = partition.plan_for("flash_attention", mesh, qq, kk, vv, **kw)
+            assert "ring seq-parallel" in plan.note, (tag, kw, plan.note)
+            if tag == "hostile":
+                assert plan.levels == (("data", 4),), plan.levels
+            else:
+                assert plan.levels == (("data", 4), ("model", 2))
+            for impl in ("interpret", "xla", "ref"):
+                name = f"ring_{tag}[{impl}]" + (
+                    f"w{kw.get('window', 0)}c{int(kw['causal'])}")
+                check(name,
+                      ops.flash_attention(qq, kk, vv, mesh=mesh, impl=impl, **kw),
+                      ops.flash_attention(qq, kk, vv, impl="ref", **kw))
+            out["ring"].append(f"{tag}_w{kw.get('window', 0)}c{int(kw['causal'])}")
+
+    # ring + return_lse through the sharded path
+    o, lse = ops.flash_attention(q, kv, kv, mesh=mesh, impl="xla",
+                                 return_lse=True)
+    ow, lw = ops.flash_attention(q, kv, kv, impl="ref", return_lse=True)
+    check("ring_lse_o", o, ow)
+    check("ring_lse", lse, lw, tol=1e-3)
+
+    # batch-composed plans: B over data x heads over model
+    qb = jnp.asarray(rng.standard_normal((4, 8, 32, 16)), f32)
+    kvb = jnp.asarray(rng.standard_normal((4, 2, 32, 16)), f32)
+    plan = partition.plan_for("flash_attention", mesh, qb, kvb, kvb)
+    assert "batch-sharded" in plan.note and "head-sharded" in plan.note
+    check("batch_flash", ops.flash_attention(qb, kvb, kvb, mesh=mesh, impl="xla"),
+          ops.flash_attention(qb, kvb, kvb, impl="ref"))
+    out["batch"].append("flash")
+    qd = jnp.asarray(rng.standard_normal((4, 8, 16)), f32)
+    pos = jnp.asarray([5, 30, 12, 31], jnp.int32)
+    plan = partition.plan_for("decode_attention", mesh, qd, kvb, kvb, pos)
+    assert "batch-sharded" in plan.note
+    check("batch_decode",
+          ops.decode_attention(qd, kvb, kvb, pos, mesh=mesh, impl="xla"),
+          ops.decode_attention(qd, kvb, kvb, pos, impl="ref"))
+    out["batch"].append("decode")
+    r = jnp.asarray(rng.standard_normal((4, 4, 64, 8)), f32)
+    wl = jnp.asarray(-rng.uniform(0.01, 1.0, (4, 4, 64, 8)), f32)
+    plan = partition.plan_for("linear_attention", mesh, r, r, r, wl)
+    assert "batch-sharded" in plan.note
+    got = ops.linear_attention(r, r, r, wl, mesh=mesh, impl="xla")
+    want = ops.linear_attention(r, r, r, wl, impl="ref")
+    check("batch_linattn_o", got[0], want[0])
+    check("batch_linattn_s", got[1], want[1])
+    out["batch"].append("linattn")
+
+    # ring_scan_carry threads the TRUE carry rank to rank (the fixed
+    # primitive: the old single-ppermute version delivered each rank only
+    # its neighbour's locally-seeded state)
+    xs = jnp.asarray(rng.standard_normal((8, 4)), f32)
+
+    def chunk(s, x):  # running prefix-sum recurrence over the local chunk
+        ys = s + jnp.cumsum(x[0])
+        return ys[-1], ys[None]
+
+    def local(x_l):
+        ys, s = ring_scan_carry(chunk, x_l, jnp.float32(0.0), "data", 4)
+        return ys, s[None]
+
+    ys, s_fin = shard_map(
+        local, mesh=mesh, in_specs=(P("data", None),),
+        out_specs=(P("data", None), P("data")), check_vma=False,
+    )(xs[:4])
+    want = jnp.cumsum(xs[:4].reshape(-1)).reshape(4, 4)
+    check("ring_scan_carry_ys", ys, want, tol=1e-5)
+    check("ring_scan_carry_final", s_fin[-1], want[-1, -1], tol=1e-5)
+    print("RESULT:" + json.dumps(out))
+    """
+)
+
+
+def test_ring_and_batch_attention_equivalence_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _EQUIV_RING],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    out = json.loads(line[len("RESULT:"):])
+    # every mask x GQA x impl ring combination ran and matched
+    for tag in ("gqa", "hostile"):
+        for impl in ("interpret", "xla", "ref"):
+            for c, w in ((1, 0), (1, 9), (0, 0), (0, 9)):
+                assert f"ring_{tag}[{impl}]w{w}c{c}" in out["ok"], (tag, impl)
+    assert set(out["batch"]) == {"flash", "decode", "linattn"}
+    assert {"ring_lse_o", "ring_lse", "ring_scan_carry_ys",
+            "ring_scan_carry_final"} <= set(out["ok"])

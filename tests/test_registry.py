@@ -246,7 +246,9 @@ def test_flash_attention_explicit_bk_same_result_across_impls(rng):
 def test_block_resolution_single_path():
     """Grep-style invariant: ops.py carries no block-size literals; every
     block-tabled op resolves through registry.resolve_blocks; no kernel impl
-    module keeps private block_defaults plumbing."""
+    module keeps private block_defaults plumbing OR an environment-variable
+    escape hatch (the REPRO_UNROLL_GRID regression: the unrolled flash path
+    derived bq/bk from a raw env var, bypassing the registry)."""
     import inspect
     import pathlib
     import re
@@ -260,6 +262,35 @@ def test_block_resolution_single_path():
                 "rwkv6", "xla"):
         text = (kdir / f"{mod}.py").read_text()
         assert "block_defaults" not in text, mod
+        # block geometry never comes from the environment: only the
+        # registry (whose own REPRO_KERNEL_IMPL is impl selection, not
+        # geometry) may read os.environ
+        assert "os.environ" not in text, mod
+        assert "REPRO_UNROLL_GRID" not in text, mod
+
+
+def test_unrolled_flash_blocks_route_through_registry(rng):
+    """The unrolled (roofline) flash path honours set_block_override and
+    explicit bq/bk exactly like the scan path — no private geometry."""
+    import repro.kernels.xla as xla_mod
+
+    q = jnp.asarray(rng.standard_normal((1, 2, 64, 8)), jnp.float32)
+    want = ops.flash_attention(q, q, q, impl="ref")
+    with registry.unroll_inner():
+        registry.set_block_override("flash_attention", bq=16, bk=32)
+        got = ops.flash_attention(q, q, q, impl="xla")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+        # explicit kwarg beats the override, same as every other impl
+        got = ops.flash_attention(q, q, q, impl="xla", bq=8, bk=8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+        # geometry actually reached the unrolled loop: a bq that doesn't
+        # divide Sq exercises its padding path
+        registry.set_block_override("flash_attention", bq=48, bk=48)
+        got = ops.flash_attention(q, q, q, impl="xla")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
 
 
 def test_default_impl_context_manager():
@@ -369,27 +400,55 @@ def test_csr_to_ell_rejects_narrow_max_nnz():
     )
 
 
-def test_hillclimb_appends_xla_flags(monkeypatch):
-    """Regression: hillclimb used to clobber any caller-set XLA_FLAGS."""
+def test_launchers_append_xla_flags(monkeypatch):
+    """Regression: hillclimb (PR 2) and dryrun (this PR) used to clobber any
+    caller-set XLA_FLAGS with a bare ``os.environ[...] = ...`` assignment.
+    Both now route through launch.xla_flags.ensure_host_device_count."""
     import importlib
 
+    import repro.launch.dryrun as dr
     import repro.launch.hillclimb as hc
 
-    monkeypatch.setenv("XLA_FLAGS", "--xla_dump_to=/tmp/x")
-    importlib.reload(hc)
-    flags = os.environ["XLA_FLAGS"].split()
-    assert "--xla_dump_to=/tmp/x" in flags
-    assert "--xla_force_host_platform_device_count=512" in flags
-    importlib.reload(hc)  # idempotent: appending twice adds nothing
-    assert os.environ["XLA_FLAGS"].split().count(
-        "--xla_force_host_platform_device_count=512"
-    ) == 1
-    # a caller-chosen device count survives untouched (no conflicting append)
-    monkeypatch.setenv(
-        "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
-    )
-    importlib.reload(hc)
-    assert os.environ["XLA_FLAGS"] == "--xla_force_host_platform_device_count=8"
+    for mod in (hc, dr):
+        monkeypatch.setenv("XLA_FLAGS", "--xla_dump_to=/tmp/x")
+        importlib.reload(mod)
+        flags = os.environ["XLA_FLAGS"].split()
+        assert "--xla_dump_to=/tmp/x" in flags, mod.__name__
+        assert "--xla_force_host_platform_device_count=512" in flags
+        importlib.reload(mod)  # idempotent: appending twice adds nothing
+        assert os.environ["XLA_FLAGS"].split().count(
+            "--xla_force_host_platform_device_count=512"
+        ) == 1
+        # a caller-chosen device count survives (no conflicting append)
+        monkeypatch.setenv(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+        )
+        importlib.reload(mod)
+        assert os.environ["XLA_FLAGS"] == \
+            "--xla_force_host_platform_device_count=8", mod.__name__
+
+
+def test_launchers_never_assign_xla_flags_directly():
+    """Grep-style invariant over both launcher sources: XLA_FLAGS is only
+    ever APPENDED via the shared bootstrap, never assigned a fresh literal
+    (the clobber pattern that silently discarded user flags)."""
+    import pathlib
+    import re
+
+    import repro.launch.dryrun as dr
+
+    ldir = pathlib.Path(dr.__file__).parent
+    clobber = re.compile(r"os\.environ\[.XLA_FLAGS.\]\s*=\s*[\"'f]")
+    bench_run = ldir.parent.parent.parent / "benchmarks" / "run.py"
+    for name, path in (("dryrun", ldir / "dryrun.py"),
+                       ("hillclimb", ldir / "hillclimb.py"),
+                       ("benchmarks.run", bench_run)):
+        text = path.read_text()
+        assert not clobber.search(text), name
+        assert "ensure_host_device_count" in text, name
+    # the one place that may write the variable is the append-only helper
+    helper = (ldir / "xla_flags.py").read_text()
+    assert "existing" in helper and "_DEVICE_FLAG" in helper
 
 
 def test_formats_are_pytrees(rng):

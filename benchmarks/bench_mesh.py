@@ -25,7 +25,7 @@ import numpy as np
 
 from benchmarks.common import row, timeit
 from repro.core import sparse as sp
-from repro.kernels import ops, partition
+from repro.kernels import ops, partition, registry
 from repro.launch import roofline
 
 
@@ -85,10 +85,33 @@ def _cases(rng):
     ]
 
 
+def _overlap_cases(rng):
+    """(label, op, call(mesh, overlap) -> out, plan_args, plan_kwargs) for
+    the ops with an overlappable ring/halo schedule: the long-context
+    flash ring and the halo-exchange stencil."""
+    f32 = jnp.float32
+    qL = jnp.asarray(rng.standard_normal((1, 8, 2048, 64)), f32)
+    kL = jnp.asarray(rng.standard_normal((1, 4, 2048, 64)), f32)
+    vL = jnp.asarray(rng.standard_normal((1, 4, 2048, 64)), f32)
+    grid = jnp.asarray(rng.standard_normal((64, 32, 32)), f32)
+    offs = np.array([(0, 0, 0), (1, 0, 0), (-1, 0, 0), (0, 1, 0),
+                     (0, 0, 1)], np.int32)
+    w = np.full((5,), 0.2, np.float32)
+    return [
+        ("flash_attention_long", "flash_attention",
+         lambda m, ov: ops.flash_attention(qL, kL, vL, mesh=m, overlap=ov),
+         (qL, kL, vL), {}),
+        ("stencil", "stencil",
+         lambda m, ov: ops.stencil(grid, offs, w, mesh=m, overlap=ov),
+         (grid,), {"offsets": offs, "weights": w}),
+    ]
+
+
 def run(mesh=None):
     if mesh is None:
         return  # no --mesh: the sharded rows need a multi-device host mesh
     rng = np.random.default_rng(0)
+    impl = registry.resolve_impl(None)
     levels = partition.partition_levels(mesh)
     levels_tag = "*".join(f"{a}{n}" for a, n in levels) or "none"
     for label, op, call, plan_args, plan_kwargs in _cases(rng):
@@ -112,4 +135,36 @@ def run(mesh=None):
             f"levels={levels_tag};{note};"
             f"d2d_model={d2d * 1e6:.2f}us;coll_per_level={per_level};"
             f"max_err={err:.1e}",
+            op=op, mesh=levels_tag, impl=impl, overlap=None,
+            single_us=t_single * 1e6, d2d_model_s=d2d, max_err=err, note=note,
+        )
+
+    # overlap-vs-sync rows: same op and mesh, only the ring/halo schedule
+    # flips. On shared host devices the wall-clock delta is noise — the row
+    # exists to pin numerical agreement and to carry the overlap model
+    # (serial_s vs overlapped_s from the plan's hop count) next to the
+    # measurements; dryrun --op-roofline owns the full roofline cells.
+    for label, op, call, plan_args, plan_kwargs in _overlap_cases(rng):
+        plan = partition.plan_for(op, mesh, *plan_args, **plan_kwargs)
+        if plan is None or not plan.overlappable:
+            continue
+        d2d = roofline.plan_collective_seconds(plan)
+        f_sync = jax.jit(lambda c=call: c(mesh, False))
+        f_ovl = jax.jit(lambda c=call: c(mesh, True))
+        t_sync = timeit(f_sync, reps=3)
+        t_ovl = timeit(f_ovl, reps=3)
+        err = float(
+            jnp.max(jnp.abs(jnp.asarray(f_ovl()) - jnp.asarray(f_sync())))
+        )
+        ovl_s = roofline.overlapped_seconds(
+            max(t_sync - d2d, 0.0), d2d, plan.hops
+        )
+        row(
+            f"mesh_overlap_{label}", t_ovl,
+            f"sync_us={t_sync * 1e6:.1f};hops={plan.hops};"
+            f"d2d_model={d2d * 1e6:.2f}us;"
+            f"model_overlapped_us={ovl_s * 1e6:.1f};max_err={err:.1e}",
+            op=op, mesh=levels_tag, impl=impl, overlap=True,
+            sync_us=t_sync * 1e6, hops=plan.hops, d2d_model_s=d2d,
+            model_overlapped_s=ovl_s, max_err=err,
         )

@@ -1,18 +1,27 @@
-"""Benchmark plumbing: timing + CSV emission.
+"""Benchmark plumbing: timing + CSV emission + machine-readable JSON rows.
 
 Each module reproduces one paper table/figure on the framework's kernels.
 The container is CPU-only, so wall-times are CPU numbers; every row also
 carries a `derived` column with the figure-of-merit the paper reports
 (GFLOP/s, GCOMP/s, tok/s, GB/s) computed from the measured time, plus
 TPU-peak projections where the metric is roofline-derived.
+
+Alongside the human CSV each ``row(...)`` call records a JSON row: the
+same (name, us_per_call, derived) triple plus any structured metadata the
+caller passes as keyword arguments (op, mesh tag, impl, overlap flag,
+model estimates...). ``emit_json`` dumps the accumulated rows — that is
+what ``benchmarks/run.py --json PATH`` writes and what the committed
+``BENCH_mesh.json`` baseline holds.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 
 ROWS: list[tuple[str, float, str]] = []
+JSON_ROWS: list[dict] = []
 
 
 def timeit(fn, *args, reps: int = 5, warmup: int = 1) -> float:
@@ -30,6 +39,25 @@ def timeit(fn, *args, reps: int = 5, warmup: int = 1) -> float:
     return times[len(times) // 2]
 
 
-def row(name: str, seconds: float, derived: str):
+def row(name: str, seconds: float, derived: str, **meta):
+    """Emit one benchmark row: CSV to stdout, structured copy to JSON_ROWS.
+
+    ``meta`` keys ride into the JSON row verbatim (op, mesh, impl,
+    overlap, model seconds, errors...) so downstream tooling never has to
+    re-parse the human ``derived`` string.
+    """
     ROWS.append((name, seconds * 1e6, derived))
+    JSON_ROWS.append(
+        {"name": name, "us_per_call": seconds * 1e6, "derived": derived,
+         **meta}
+    )
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def emit_json(path: str) -> None:
+    """Write every row recorded so far to ``path`` as deterministic
+    (sorted keys, indented) JSON: ``{"backend": ..., "rows": [...]}``."""
+    payload = {"backend": jax.default_backend(), "rows": JSON_ROWS}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -20,10 +20,20 @@ three-axis (pod, data, model) hierarchy, where kernel partition plans
 resolve two-level with per-level collective costing — with forced
 host-platform devices (the flag must be decided before jax imports, which
 is why argument parsing precedes the jax import here) and emits per-op
-sharded-vs-single rows (benchmarks/bench_mesh.py). ``--mesh-only`` stops
-after those rows (CI smoke for the multi-device job). When ``--autotune``
-and ``--mesh`` combine, the tuner searches through the sharded dispatch and
-keys its record by the local shard geometry (see repro/launch/autotune.py).
+sharded-vs-single rows (benchmarks/bench_mesh.py), including the
+``mesh_overlap_*`` rows comparing the overlapped ring/halo schedules
+against their synchronous oracles. ``--mesh-only`` stops after those rows
+(CI smoke for the multi-device job). When ``--autotune`` and ``--mesh``
+combine, the tuner searches through the sharded dispatch and keys its
+record by the local shard geometry (see repro/launch/autotune.py);
+``--autotune-budget N`` caps how many candidates each case measures,
+spent in roofline-prior order.
+
+``--json PATH`` additionally writes every emitted row as machine-readable
+JSON (structured op/mesh/impl/overlap metadata alongside the measured
+microseconds) — the committed ``BENCH_mesh.json`` host-backend baseline
+is produced by ``python -m benchmarks.run --mesh 4x2 --mesh-only --json
+BENCH_mesh.json``.
 """
 import argparse
 import math
@@ -54,8 +64,15 @@ def main(argv=None) -> None:
                     help="tune block sizes first (or load the existing record)")
     ap.add_argument("--autotune-record", default="autotune_record.json")
     ap.add_argument("--autotune-reps", type=int, default=3)
+    ap.add_argument("--autotune-budget", type=int, default=None, metavar="N",
+                    help="time at most N candidates per autotune case, "
+                    "spent in roofline-prior order (the default geometry "
+                    "is always measured)")
     ap.add_argument("--autotune-only", action="store_true",
                     help="emit the autotune rows and stop (CI smoke)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write every row as machine-readable JSON "
+                    "(benchmarks/common.py emit_json) to PATH on exit")
     ap.add_argument("--mesh", default=None, metavar="DxM|PxDxM",
                     help="(data, model) or (pod, data, model) mesh for the "
                          "sharded-vs-single rows; forces that many host "
@@ -98,6 +115,14 @@ def main(argv=None) -> None:
             )
         mesh = make_mesh(mesh_shape, _MESH_AXES[len(mesh_shape)])
 
+    def finish():
+        # --json: dump every row recorded through benchmarks/common.row
+        # (shared by all exit paths, including the --*-only CI smokes)
+        if args.json:
+            from benchmarks.common import emit_json
+
+            emit_json(args.json)
+
     with registry.default_impl(impl):
         print("name,us_per_call,derived")
         if tune:
@@ -115,7 +140,8 @@ def main(argv=None) -> None:
                 # tuning under the mesh keys each entry by the LOCAL shard
                 # geometry, so the record stays valid for the kernels the
                 # sharded dispatch actually runs
-                record = at.autotune(reps=args.autotune_reps, mesh=mesh)
+                record = at.autotune(reps=args.autotune_reps, mesh=mesh,
+                                     trial_budget=args.autotune_budget)
                 at.save_record(record, args.autotune_record)
                 source = "searched"
             at.apply_record(record, mesh=mesh)
@@ -134,14 +160,14 @@ def main(argv=None) -> None:
                     flush=True,
                 )
             if args.autotune_only:
-                return
+                return finish()
 
         if mesh is not None:
             from benchmarks import bench_mesh
 
             bench_mesh.run(mesh)
             if args.mesh_only:
-                return
+                return finish()
 
         from benchmarks import (bench_d2d, bench_gcn, bench_gemm, bench_gptj,
                                 bench_spmm, bench_spmspm, bench_stencil)
@@ -149,6 +175,7 @@ def main(argv=None) -> None:
         for mod in (bench_gemm, bench_stencil, bench_spmm, bench_spmspm,
                     bench_gcn, bench_gptj, bench_d2d):
             mod.run()
+        finish()
 
 
 if __name__ == "__main__":

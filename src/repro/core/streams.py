@@ -208,6 +208,50 @@ def stream_compute(program: StreamProgram, *operands, interpret: bool = False):
     )(*operands)
 
 
+def remote_ring_hop(x: jax.Array, axis: str, n: int) -> jax.Array:
+    """One forward ring hop as a pallas async remote copy (RDMA).
+
+    The D2D analogue of the SU double-buffer: instead of routing the hop
+    through XLA's ``collective-permute``, the kernel programs the
+    inter-chip DMA engine directly — ``make_async_remote_copy`` pushes the
+    local buffer to rank ``(me + 1) % n`` and blocks on the receive
+    semaphore until the left neighbour's push lands. Semantically identical
+    to ``ppermute(x, axis, ring_fwd)``; the win is scheduling: the copy is
+    a plain DMA the pipeliner can overlap like any other stream.
+
+    TPU-only (the DMA engine and semaphores are TPU hardware); callers gate
+    on ``jax.default_backend() == "tpu"`` and fall back to ``ppermute``
+    (``parallel.collectives._hop_send``). Assumes the ring spans the whole
+    ``axis`` with logical device ids matching axis order — the layout
+    ``shard_map`` meshes give a single ring axis. Must run inside a
+    ``shard_map`` naming ``axis``.
+    """
+
+    def body(x_ref, y_ref, send_sem, recv_sem):
+        me = jax.lax.axis_index(axis)
+        copy = pltpu.make_async_remote_copy(
+            src_ref=x_ref,
+            dst_ref=y_ref,
+            send_sem=send_sem,
+            recv_sem=recv_sem,
+            device_id=((me + 1) % n,),
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
+        )
+        copy.start()
+        copy.wait()
+
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
+        compiler_params=_CompilerParams(
+            has_side_effects=True, collective_id=0
+        ),
+    )(x)
+
+
 def gemm_streams(
     M: int, N: int, K: int, bm: int, bn: int, bk: int, dtype=None
 ):

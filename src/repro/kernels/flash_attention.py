@@ -23,6 +23,37 @@ from repro.kernels.registry import resolve_blocks
 NEG = -1e30
 
 
+def zigzag_indices(S: int, d: int) -> np.ndarray:
+    """The zigzag (head+tail) sequence permutation of a ``d``-rank causal
+    KV ring: split ``S`` rows into ``2d`` half-chunks and give rank ``r``
+    half-chunks ``r`` and ``2d-1-r`` — one from the causal head, one from
+    the tail — so every rank does the same 2·(S/2d)² score work per hop
+    instead of rank 0 idling on every wrapped hop.
+
+    Returns the length-``S`` gather index array ``idx``: natural-order row
+    ``idx[i]`` lands at zigzag position ``i``; sharding positions over the
+    ``data`` axis then hands rank ``r`` exactly its two half-chunks, head
+    half first. Within each half the natural order is preserved and every
+    head position precedes every tail position, so the concatenated local
+    block is order-isomorphic to its global rows — a plain causal mask on
+    the local block IS the global causal mask restricted to them (the
+    property the ring's hop-0 kernel call relies on). Requires
+    ``S % (2 * d) == 0``.
+    """
+    c2 = S // (2 * d)
+    parts = []
+    for r in range(d):
+        parts.append(np.arange(r * c2, (r + 1) * c2))
+        parts.append(np.arange((2 * d - 1 - r) * c2, (2 * d - r) * c2))
+    return np.concatenate(parts)
+
+
+def zigzag_inverse(S: int, d: int) -> np.ndarray:
+    """Inverse of ``zigzag_indices``: gathering with it restores natural
+    sequence order (``zz[zigzag_inverse(S, d)] == natural``)."""
+    return np.argsort(zigzag_indices(S, d), kind="stable")
+
+
 def _fa_kernel(
     q_ref, k_ref, v_ref, o_ref, *refs,
     scale, causal, window, q_offset, sk, bq, bk, nk, return_lse,

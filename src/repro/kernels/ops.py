@@ -48,7 +48,12 @@ from repro.kernels.registry import (  # re-exported: the public dispatch API
 
 def _dispatch(op, *args, mesh=None, impl=None, **kwargs):
     """The one mesh-aware dispatch seam: explicit ``mesh=`` kwarg, else the
-    ``sharding.use_mesh`` context, else plain single-device kernel_call."""
+    ``sharding.use_mesh`` context, else plain single-device kernel_call.
+
+    Plan-only schedule kwargs (``partition.PLAN_KWARGS``: overlap/zigzag/
+    remote_copy) ride through to the partition layer and are stripped
+    before any direct kernel_call — a single device has no ring to
+    schedule."""
     from repro.kernels import partition
 
     if mesh is None:
@@ -57,7 +62,8 @@ def _dispatch(op, *args, mesh=None, impl=None, **kwargs):
         mesh = _sh.kernel_mesh()
     if mesh is not None:
         return partition.sharded_call(op, mesh, *args, impl=impl, **kwargs)
-    return kernel_call(op, *args, impl=impl, **kwargs)
+    return kernel_call(op, *args, impl=impl,
+                       **partition.strip_plan_kwargs(kwargs))
 
 # roofline dry-run context (see registry.unroll_inner): kept under its
 # historical name for callers that patched the old ops-level flag
@@ -104,6 +110,7 @@ def _gemm_ref(a, b, *, out_dtype=None, accum_dtype=jnp.float32,
 def flash_attention(
     q, k, v, *, causal=True, window=0, q_offset=0, scale=None, impl=None,
     mesh=None, bq=None, bk=None, block_k=None, return_lse=False,
+    overlap=True, zigzag=True, remote_copy=False,
 ):
     """q: (B,H,Sq,D); k,v: (B,K,Sk,D). Returns (B,H,Sq,D).
 
@@ -113,6 +120,14 @@ def flash_attention(
     ``return_lse=True`` additionally returns the per-row log-sum-exp,
     (B,H,Sq) fp32 — the statistic the sequence-parallel ring merge
     (``parallel.collectives.online_softmax_merge``) consumes.
+
+    ``overlap``/``zigzag``/``remote_copy`` are mesh-schedule knobs for the
+    sequence-parallel KV ring (no-ops on a single device): ``overlap``
+    double-buffers the hop transfers behind the hop kernels,
+    ``zigzag`` load-balances causal Q ownership across head/tail chunks,
+    ``remote_copy`` opts the hop into the pallas async-remote-copy path on
+    TPU backends. ``overlap=False`` + ``zigzag=False`` is the synchronous
+    contiguous-chunk oracle. Numerics are unchanged either way.
 
     ``block_k`` is the historical spelling of ``bk``; both resolve through
     the registry, so an explicit argument and ``set_block_override`` reach
@@ -128,7 +143,8 @@ def flash_attention(
     return _dispatch(
         "flash_attention", q, k, v, causal=causal, window=window,
         q_offset=q_offset, scale=scale, return_lse=return_lse, mesh=mesh,
-        impl=impl, **blocks,
+        impl=impl, overlap=overlap, zigzag=zigzag, remote_copy=remote_copy,
+        **blocks,
     )
 
 
@@ -402,10 +418,13 @@ def _spmspm_ref(a_values, a_cols, b_values, b_rows, contraction_dim,
 
 
 def stencil(grid, offsets: np.ndarray, weights, *, impl=None, mesh=None,
-            bx=None):
+            bx=None, overlap=True):
+    """``overlap`` double-buffers the sharded halo exchange (interior rows
+    compute while the boundary planes fly); ``overlap=False`` is the
+    synchronous pad-then-kernel oracle. No-op on a single device."""
     blocks = resolve_blocks("stencil", bx=bx)
     return _dispatch("stencil", grid, offsets=offsets, weights=weights,
-                     mesh=mesh, impl=impl, **blocks)
+                     mesh=mesh, impl=impl, overlap=overlap, **blocks)
 
 
 @registry.register_stream_kernel("stencil")

@@ -73,6 +73,8 @@ executing a plan (``sharded_call``) requires a real ``jax.sharding.Mesh``.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import inspect
 import math
 from typing import Any, Callable
 
@@ -125,6 +127,16 @@ class PartitionPlan:
     ``CollectiveCost`` metadata in firing order (innermost level first);
     ``note`` — a human-readable one-liner for benchmark/roofline rows.
 
+    Latency-tolerance metadata (the overlap cost model reads these):
+    ``overlappable`` — the local_fn issues its collectives double-buffered,
+    so per-hop D2D time hides behind per-hop compute instead of adding to
+    it; ``hops`` — the pipeline depth the overlap model amortises over
+    (ring length for the KV ring, 2 for the halo exchange's two
+    directions); ``pre`` / ``post`` — optional GLOBAL-array rewrites
+    applied by ``sharded_call`` outside shard_map: ``pre(*args) -> args``
+    before sharding (the zigzag sequence gather), ``post(out) -> out``
+    after (its inverse).
+
     Invariants: ``n`` (total shard count) is the product of the level
     sizes; ``axis`` is the spec-entry form of the levels — the bare axis
     name for a single level, the axis tuple for a joint split.
@@ -137,6 +149,10 @@ class PartitionPlan:
     local_fn: Callable
     collectives: tuple[CollectiveCost, ...] = ()
     note: str = ""
+    overlappable: bool = False
+    hops: int = 0
+    pre: Callable | None = None
+    post: Callable | None = None
 
     @property
     def axis(self):
@@ -273,6 +289,30 @@ def partitioned_ops() -> list[str]:
     return sorted(_RULES)
 
 
+# Plan-only keywords: schedule knobs the partition layer consumes, never the
+# kernels. ``plan_for`` forwards each one only to rules whose signature
+# declares it (rules like gemm's pass **blocks straight to kernel_call, so a
+# stray ``overlap=`` would land in an impl); the dispatch seams strip them
+# before any direct kernel_call.
+PLAN_KWARGS = ("overlap", "zigzag", "remote_copy")
+
+
+@functools.lru_cache(maxsize=None)
+def _rule_plan_params(rule: Callable) -> frozenset:
+    """The subset of PLAN_KWARGS a rule's signature declares."""
+    try:
+        params = inspect.signature(rule).parameters
+    except (TypeError, ValueError):  # builtins/C callables: assume none
+        return frozenset()
+    return frozenset(k for k in PLAN_KWARGS if k in params)
+
+
+def strip_plan_kwargs(kwargs: dict) -> dict:
+    """``kwargs`` without the plan-only schedule keywords — what a plain
+    (replicated) ``kernel_call`` may receive."""
+    return {k: v for k, v in kwargs.items() if k not in PLAN_KWARGS}
+
+
 def plan_for(op: str, mesh, *args, impl: str | None = None, **kwargs):
     """Resolve the op's PartitionRule against ``mesh`` (a Mesh or MeshSpec).
 
@@ -291,6 +331,11 @@ def plan_for(op: str, mesh, *args, impl: str | None = None, **kwargs):
     rule = _RULES.get(op)
     if rule is None:
         return None
+    accepted = _rule_plan_params(rule)
+    kwargs = {
+        k: v for k, v in kwargs.items()
+        if k not in PLAN_KWARGS or k in accepted
+    }
     levels = _LEVEL_FNS.get(op, partition_levels)(mesh)
     while levels:
         plan = rule(levels, *args, impl=impl, **kwargs)
@@ -358,12 +403,16 @@ def sharded_call(op: str, mesh, *args, impl: str | None = None, **kwargs):
     impl = registry.resolve_impl(impl)
     plan = plan_for(op, mesh, *args, impl=impl, **kwargs)
     if plan is None:
-        return registry.kernel_call(op, *args, impl=impl, **kwargs)
+        return registry.kernel_call(
+            op, *args, impl=impl, **strip_plan_kwargs(kwargs)
+        )
     if not isinstance(mesh, Mesh):
         raise TypeError(
             f"executing a partition plan for {op!r} needs a device mesh; "
             f"got {type(mesh).__name__} (MeshSpec is for plan_for/costing only)"
         )
+    if plan.pre is not None:  # global rewrite (zigzag gather) before sharding
+        args = plan.pre(*args)
     live = [i for i, a in enumerate(args) if a is not None]
     in_specs = tuple(plan.in_specs[i] for i in live)
 
@@ -377,7 +426,8 @@ def sharded_call(op: str, mesh, *args, impl: str | None = None, **kwargs):
         wrapped, mesh=mesh, in_specs=in_specs, out_specs=plan.out_specs,
         check_vma=False,
     )
-    return fn(*(args[i] for i in live))
+    out = fn(*(args[i] for i in live))
+    return plan.post(out) if plan.post is not None else out
 
 
 def _nbytes(shape, dtype) -> int:
@@ -490,7 +540,8 @@ def _attn_head_ok(heads, count: int):
 
 @register_partition_rule("flash_attention", levels=attention_levels)
 def _flash_rule(levels, q, k, v, *, impl=None, causal=True, window=0,
-                q_offset=0, scale=None, return_lse=False, **blocks):
+                q_offset=0, scale=None, return_lse=False, overlap=True,
+                zigzag=True, remote_copy=False, **blocks):
     """The attention family's composed rule: GQA head sharding × a ``data``
     level carrying either the batch or the sequence.
 
@@ -504,19 +555,33 @@ def _flash_rule(levels, q, k, v, *, impl=None, causal=True, window=0,
     - **sequence-parallel KV ring**: the long-context form (B too small to
       split, ``Sq == Sk`` divisible by ``data``). Each device keeps its Q
       chunk resident and the K/V chunks rotate through an (n−1)-hop
-      ``ppermute`` ring (``collectives.ring_scan``); every hop re-enters
-      the registered kernel with the hop's static ``q_offset`` so the
-      causal/window mask lands on the right absolute positions, and the
-      per-hop partials fold through the (m, l, acc)-equivalent
-      ``online_softmax_merge``. Under causal/window masking the hops where
-      the KV chunk sits in a rank's future merge as no-ops (the ring wrap
-      is exactly the masked-out triangle); a lookback window prunes whole
-      tail hops statically. The ring declines bounded masks at nonzero
-      ``q_offset`` (the wrap would alias past positions).
+      ``ppermute`` ring (``collectives.ring_scan``, double-buffered when
+      ``overlap`` so each hop's D2D flight hides behind the hop kernel);
+      every hop re-enters the registered kernel and the per-hop partials
+      fold through the (m, l, acc)-equivalent ``online_softmax_merge``.
+
+      The unbounded-causal ring additionally stripes Q ownership
+      **zigzag** (``zigzag``, default on; see
+      ``flash_attention.zigzag_indices``): rank ``r`` owns half-chunks
+      ``r`` and ``2d-1-r``, gathered/ungathered globally by the plan's
+      ``pre``/``post``. Hop 0 is ONE plain causal kernel call on the
+      concatenated local block (order-isomorphic to its global rows); hop
+      ``t>0`` is exactly two fully-unmasked ``causal=False`` sub-calls —
+      every omitted (q-half × kv-half) pair is provably fully masked — so
+      every rank does identical 2·(Sq/2d)² score work per hop and the
+      wrapped-hop no-ops of the naive causal ring disappear.
+
+      The legacy (contiguous-chunk) ring remains for windowed/non-causal/
+      zigzag-indivisible cases: each hop runs at its static ``q_offset``
+      so the mask lands on absolute positions, wrapped hops merge as
+      no-ops, and a lookback window prunes whole tail hops statically.
+      The ring declines bounded masks at nonzero ``q_offset`` (the wrap
+      would alias past positions).
 
     If neither composition applies at this rung the ladder drops the
     outermost level and retries; ``None`` only once every level is gone.
     """
+    from repro.kernels.flash_attention import zigzag_indices, zigzag_inverse
     from repro.parallel.collectives import (
         NEG_LSE, online_softmax_merge, ring_scan,
     )
@@ -573,32 +638,119 @@ def _flash_rule(levels, q, k, v, *, impl=None, causal=True, window=0,
         # hop t's nearest k sits c*t - (c-1) behind the earliest q; hops
         # entirely beyond every row's lookback are pruned statically
         hops = min(d, max(1, -(-(window + c - 1) // c)))
+    zig = bool(
+        zigzag and causal and not window and q_offset == 0
+        and Sq % (2 * d) == 0
+    )
 
-    def local(q_l, k_l, v_l):
-        me = jax.lax.axis_index("data")
-        o0 = jnp.zeros(q_l.shape, jnp.float32)
-        lse0 = jnp.full(q_l.shape[:-1], NEG_LSE, jnp.float32)
+    if zig:
+        c2 = Sq // (2 * d)  # half-chunk length: rank r owns chunks r, 2d-1-r
 
-        def step(carry, kv, t):
-            o, lse = carry
-            k_b, v_b = kv
-            o_t, lse_t = registry.kernel_call(
-                "flash_attention", q_l, k_b, v_b, causal=causal,
-                window=window, q_offset=q_offset + t * c, scale=scale,
-                return_lse=True, impl=impl, **blocks,
+        def local(q_l, k_l, v_l):
+            me = jax.lax.axis_index("data")
+            o0 = jnp.zeros(q_l.shape, jnp.float32)
+            lse0 = jnp.full(q_l.shape[:-1], NEG_LSE, jnp.float32)
+
+            def step(carry, kv, t):
+                o, lse = carry
+                k_b, v_b = kv
+                if t == 0:
+                    # resident hop: the local block is order-isomorphic to
+                    # its global rows, so a plain causal call IS the global
+                    # causal mask restricted to them
+                    o_t, lse_t = registry.kernel_call(
+                        "flash_attention", q_l, k_b, v_b, causal=True,
+                        window=0, q_offset=0, scale=scale,
+                        return_lse=True, impl=impl, **blocks,
+                    )
+                    return online_softmax_merge(o, lse, o_t, lse_t)
+                # hop t>0: the resident KV left rank s = me - t (mod d).
+                # Of the four (q-half × kv-half) pairs, q_tail × k_head is
+                # always fully valid; up-ranks (me >= t, s < me) also get
+                # q_head × k_head, down-ranks (wrapped, s > me) also get
+                # q_tail × k_tail — every pair fully valid, every omitted
+                # pair fully masked, so both sub-calls run unmasked
+                # (causal=False) and each rank does the same 2·c2² work.
+                up = me >= t
+                q_head, q_tail = q_l[:, :, :c2], q_l[:, :, c2:]
+                k_head, v_head = k_b[:, :, :c2], v_b[:, :, :c2]
+                k_tail, v_tail = k_b[:, :, c2:], v_b[:, :, c2:]
+                o_full, lse_full = registry.kernel_call(
+                    "flash_attention", q_tail, k_head, v_head,
+                    causal=False, window=0, q_offset=0, scale=scale,
+                    return_lse=True, impl=impl, **blocks,
+                )
+                o_sel, lse_sel = registry.kernel_call(
+                    "flash_attention",
+                    jnp.where(up, q_head, q_tail),
+                    jnp.where(up, k_head, k_tail),
+                    jnp.where(up, v_head, v_tail),
+                    causal=False, window=0, q_offset=0, scale=scale,
+                    return_lse=True, impl=impl, **blocks,
+                )
+                # head rows: up-ranks take the sel partial, down-ranks none
+                o_h = jnp.where(up, o_sel.astype(jnp.float32), 0.0)
+                lse_h = jnp.where(up, lse_sel, NEG_LSE)
+                # tail rows: the always-valid full partial, plus (down
+                # ranks only) the sel partial over k_tail
+                o_m, lse_m = online_softmax_merge(
+                    o_full.astype(jnp.float32), lse_full,
+                    jnp.where(up, 0.0, o_sel.astype(jnp.float32)),
+                    jnp.where(up, NEG_LSE, lse_sel),
+                )
+                o_t = jnp.concatenate([o_h, o_m], axis=2)
+                lse_t = jnp.concatenate([lse_h, lse_m], axis=2)
+                return online_softmax_merge(o, lse, o_t, lse_t)
+
+            o, lse = ring_scan(
+                step, (o0, lse0), (k_l, v_l), "data", d,
+                hops=d, overlap=overlap, remote_copy=remote_copy,
             )
-            if bounded and t:
-                # ranks me < t hold a wrapped (future) KV chunk this hop:
-                # causal/window semantics mask it entirely, so the partial
-                # merges as a no-op
-                valid = me >= t
-                lse_t = jnp.where(valid, lse_t, NEG_LSE)
-                o_t = jnp.where(valid, o_t.astype(jnp.float32), 0.0)
-            return online_softmax_merge(o, lse, o_t, lse_t)
+            o = o.astype(q_l.dtype)
+            return (o, lse) if return_lse else o
 
-        o, lse = ring_scan(step, (o0, lse0), (k_l, v_l), "data", d, hops=hops)
-        o = o.astype(q_l.dtype)
-        return (o, lse) if return_lse else o
+        idx, inv = zigzag_indices(Sq, d), zigzag_inverse(Sq, d)
+
+        def pre(q_g, k_g, v_g):
+            return tuple(jnp.take(x, idx, axis=2) for x in (q_g, k_g, v_g))
+
+        def post(out):
+            if return_lse:
+                o_g, lse_g = out
+                return jnp.take(o_g, inv, axis=2), jnp.take(lse_g, inv, axis=2)
+            return jnp.take(out, inv, axis=2)
+
+    else:
+        pre = post = None
+
+        def local(q_l, k_l, v_l):
+            me = jax.lax.axis_index("data")
+            o0 = jnp.zeros(q_l.shape, jnp.float32)
+            lse0 = jnp.full(q_l.shape[:-1], NEG_LSE, jnp.float32)
+
+            def step(carry, kv, t):
+                o, lse = carry
+                k_b, v_b = kv
+                o_t, lse_t = registry.kernel_call(
+                    "flash_attention", q_l, k_b, v_b, causal=causal,
+                    window=window, q_offset=q_offset + t * c, scale=scale,
+                    return_lse=True, impl=impl, **blocks,
+                )
+                if bounded and t:
+                    # ranks me < t hold a wrapped (future) KV chunk this
+                    # hop: causal/window semantics mask it entirely, so
+                    # the partial merges as a no-op
+                    valid = me >= t
+                    lse_t = jnp.where(valid, lse_t, NEG_LSE)
+                    o_t = jnp.where(valid, o_t.astype(jnp.float32), 0.0)
+                return online_softmax_merge(o, lse, o_t, lse_t)
+
+            o, lse = ring_scan(
+                step, (o0, lse0), (k_l, v_l), "data", d,
+                hops=hops, overlap=overlap, remote_copy=remote_copy,
+            )
+            o = o.astype(q_l.dtype)
+            return (o, lse) if return_lse else o
 
     h4 = P(None, ax, "data", None)
     kv_local_bytes = _nbytes(
@@ -606,8 +758,8 @@ def _flash_rule(levels, q, k, v, *, impl=None, causal=True, window=0,
         k.dtype,
     )
     notes.append(
-        f"ring seq-parallel (Sq={Sq}/{d} per device over data={d}, "
-        f"{hops - 1} kv hops)"
+        f"ring seq-parallel{' zigzag' if zig else ''} "
+        f"(Sq={Sq}/{d} per device over data={d}, {hops - 1} kv hops)"
     )
     return PartitionPlan(
         op="flash_attention", levels=used,
@@ -619,6 +771,10 @@ def _flash_rule(levels, q, k, v, *, impl=None, causal=True, window=0,
             for _ in range(2 * (hops - 1))  # k and v, per hop
         ),
         note=" + ".join(notes),
+        overlappable=bool(overlap and hops > 1),
+        hops=hops,
+        pre=pre,
+        post=post,
     )
 
 
@@ -799,13 +955,22 @@ def _halo_block(width: int, cap: int, halo: int) -> int:
 
 @register_partition_rule("stencil")
 def _stencil_rule(levels, grid, *, offsets, weights, impl=None, bx=None,
-                  **kwargs):
+                  overlap=True, **kwargs):
     """X-sharded grid with ppermute halo exchange (the SARIS boundary planes).
 
     Each device pads its slab with ``h`` neighbour planes per side — the
     ring wrap IS the periodic boundary — then runs the registered impl on
     the padded slab; offsets never reach past the halo, so the impl's own
     periodic wrap never engages inside the slab.
+
+    With ``overlap`` (default, when the slab is deep enough: ``lx >= 2h``)
+    the exchange is double-buffered: both halo ppermutes are issued first,
+    the interior rows — which never reach the halo — are computed directly
+    on the unpadded slab while the planes fly, and only the two ``h``-row
+    boundary strips wait on the transfers. Row-for-row the same values in
+    the same accumulation order as the synchronous path (bit-identical);
+    only the issue order differs. ``overlap=False`` keeps the synchronous
+    pad-then-kernel schedule as the correctness oracle.
 
     On a two-level mesh the slab order is pod-major: most neighbours sit on
     the same pod, so the exchange is an intra-pod ``ppermute`` ring over the
@@ -837,27 +1002,59 @@ def _stencil_rule(levels, grid, *, offsets, weights, impl=None, bx=None,
         (pod_axis, pods), = outer
         pod_fwd = [(i, (i + 1) % pods) for i in range(pods)]
         pod_bwd = [(i, (i - 1) % pods) for i in range(pods)]
+    overlapped = bool(overlap and h and lx >= 2 * h)
 
-    def local(g_l):
-        if h:
-            lo = jax.lax.ppermute(g_l[-h:], inner_axis, fwd)  # left tail
-            hi = jax.lax.ppermute(g_l[:h], inner_axis, bwd)  # right head
-            if outer:
-                # pod-edge devices got the intra-pod wrap; what they need is
-                # the neighbouring pod's boundary slab, one D2D hop away
-                m = jax.lax.axis_index(inner_axis)
-                lo = jnp.where(m == 0,
-                               jax.lax.ppermute(lo, pod_axis, pod_fwd), lo)
-                hi = jnp.where(m == tp - 1,
-                               jax.lax.ppermute(hi, pod_axis, pod_bwd), hi)
-            padded = jnp.concatenate([lo, g_l, hi], axis=0)
-        else:
-            padded = g_l
-        out = registry.kernel_call(
-            "stencil", padded, offsets, weights, impl=impl, bx=bx_local,
-            **kwargs,
-        )
-        return out[h:h + lx] if h else out
+    def exchange(g_l):
+        lo = jax.lax.ppermute(g_l[-h:], inner_axis, fwd)  # left tail
+        hi = jax.lax.ppermute(g_l[:h], inner_axis, bwd)  # right head
+        if outer:
+            # pod-edge devices got the intra-pod wrap; what they need is
+            # the neighbouring pod's boundary slab, one D2D hop away
+            m = jax.lax.axis_index(inner_axis)
+            lo = jnp.where(m == 0,
+                           jax.lax.ppermute(lo, pod_axis, pod_fwd), lo)
+            hi = jnp.where(m == tp - 1,
+                           jax.lax.ppermute(hi, pod_axis, pod_bwd), hi)
+        return lo, hi
+
+    if overlapped:
+        bx_int = _halo_block(lx, bx_cap, max(h, 1))
+        bx_strip = _halo_block(3 * h, bx_cap, max(h, 1))
+
+        def local(g_l):
+            # issue both halo transfers, then compute the interior while
+            # they fly: rows [h, lx-h) reach at most the slab edges, so
+            # the unpadded kernel's periodic wrap never touches them (the
+            # wrap-polluted edge rows are discarded and recomputed below)
+            lo, hi = exchange(g_l)
+            interior = registry.kernel_call(
+                "stencil", g_l, offsets, weights, impl=impl, bx=bx_int,
+                **kwargs,
+            )[h:lx - h]
+            # boundary strips: h output rows each, padded to 3h input rows
+            # so every stencil reach stays inside the strip
+            top = registry.kernel_call(
+                "stencil", jnp.concatenate([lo, g_l[:2 * h]], axis=0),
+                offsets, weights, impl=impl, bx=bx_strip, **kwargs,
+            )[h:2 * h]
+            bottom = registry.kernel_call(
+                "stencil", jnp.concatenate([g_l[-2 * h:], hi], axis=0),
+                offsets, weights, impl=impl, bx=bx_strip, **kwargs,
+            )[h:2 * h]
+            return jnp.concatenate([top, interior, bottom], axis=0)
+
+    else:
+        def local(g_l):
+            if h:
+                lo, hi = exchange(g_l)
+                padded = jnp.concatenate([lo, g_l, hi], axis=0)
+            else:
+                padded = g_l
+            out = registry.kernel_call(
+                "stencil", padded, offsets, weights, impl=impl, bx=bx_local,
+                **kwargs,
+            )
+            return out[h:h + lx] if h else out
 
     halo_bytes = _nbytes((h, Y, Z), grid.dtype)
     colls = []
@@ -873,5 +1070,8 @@ def _stencil_rule(levels, grid, *, offsets, weights, impl=None, bx=None,
         collectives=tuple(colls),
         note=f"x-sharded ({lx} planes per device over {_levels_note(levels)})"
              f", halo h={h} via ppermute"
-             + (" + pod boundary hop" if h and outer else ""),
+             + (" + pod boundary hop" if h and outer else "")
+             + (" (overlapped)" if overlapped else ""),
+        overlappable=overlapped,
+        hops=2 if overlapped else 0,
     )

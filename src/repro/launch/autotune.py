@@ -149,11 +149,28 @@ def _time_call(fn, args, *, reps: int, warmup: int = 1) -> float:
     return times[len(times) // 2]
 
 
+def candidate_prior_seconds(case: TuneCase, blocks: dict) -> float:
+    """Analytic warm-start prior for one candidate geometry: ``case``'s
+    StreamProgram built at ``blocks``, priced as modeled HBM stream time
+    ``traffic_bytes() / HBM_BW``.
+
+    Small blocks re-fetch shared operands more often (more grid steps over
+    the same data), so per-candidate traffic differs even at fixed problem
+    size — exactly the effect measured tuning keeps rediscovering. Pricing
+    it analytically lets the search measure candidates cheapest-first and
+    lets a trial budget cut the modeled-slow tail instead of a random one.
+    """
+    from repro.launch import roofline
+
+    return case.program(blocks).traffic_bytes() / roofline.HBM_BW
+
+
 def autotune_case(
     case: TuneCase,
     *,
     budget_bytes: int = VMEM_BUDGET_BYTES,
     reps: int = 3,
+    trial_budget: int | None = None,
     time_candidate: Callable | None = None,
 ) -> dict:
     """Search one case. Returns the record entry (winner + full audit trail).
@@ -161,10 +178,18 @@ def autotune_case(
     Args: ``case`` — the TuneCase to search (its ``mesh`` field, when set,
     routes every timed call through the sharded dispatch); ``budget_bytes``
     — the VMEM ceiling the analytic prune checks candidates against;
-    ``reps`` — measured repetitions per candidate; ``time_candidate(case,
-    blocks)`` — may be injected for tests; the default jits a fresh wrapper
-    per candidate (a shared jit cache would silently reuse the first
-    candidate's compiled geometry).
+    ``reps`` — measured repetitions per candidate; ``trial_budget`` — when
+    set, at most this many candidates are actually timed, taken in
+    warm-start order (the default geometry is always timed regardless, so
+    the strictly-faster selection keeps its baseline); ``time_candidate
+    (case, blocks)`` — may be injected for tests; the default jits a fresh
+    wrapper per candidate (a shared jit cache would silently reuse the
+    first candidate's compiled geometry).
+
+    Warm start: feasible candidates are timed in ascending order of the
+    roofline prior (``candidate_prior_seconds``), so the modeled-best
+    geometry is measured first and a trial budget spends its measurements
+    on the candidates the analytic model already favours.
 
     Invariant: a non-default candidate is recorded only if it measured
     strictly faster than the default geometry.
@@ -188,6 +213,25 @@ def autotune_case(
         else:
             feasible.append(full)
 
+    # warm start: measure in analytic-prior order (stable sort — ties keep
+    # the candidate-list order, so the defaults-first convention survives)
+    priors = {id(f): candidate_prior_seconds(case, f) for f in feasible}
+    feasible.sort(key=lambda f: priors[id(f)])
+
+    skipped = []
+    if trial_budget is not None:
+        keep = feasible[: max(int(trial_budget), 1)]
+        if defaults in feasible and defaults not in keep:
+            # the baseline must stay measured even when the prior ranks it
+            # below the cut — without it no candidate could be recorded
+            keep.append(next(f for f in feasible if f == defaults))
+        skipped = [
+            {"blocks": f, "prior_s": priors[id(f)]}
+            for f in feasible
+            if not any(f is k for k in keep)
+        ]
+        feasible = keep
+
     if time_candidate is None:
 
         def time_candidate(case, blocks):
@@ -198,9 +242,11 @@ def autotune_case(
     timed = []
     for full in feasible:
         with registry.block_override(case.op, **full):
-            timed.append(
-                {"blocks": full, "us_per_call": time_candidate(case, full) * 1e6}
-            )
+            timed.append({
+                "blocks": full,
+                "us_per_call": time_candidate(case, full) * 1e6,
+                "prior_s": priors[id(full)],
+            })
 
     default_entry = next(
         (t for t in timed if t["blocks"] == defaults), None
@@ -219,6 +265,8 @@ def autotune_case(
         "default_us": default_entry["us_per_call"] if default_entry else None,
         "timed": timed,
         "pruned": pruned,
+        "skipped_by_budget": skipped,
+        "trial_budget": trial_budget,
         "vmem_budget_bytes": budget_bytes,
     }
 
@@ -458,6 +506,7 @@ def autotune(
     seed: int = 0,
     suite: dict[str, Callable] | None = None,
     mesh: Any = None,
+    trial_budget: int | None = None,
     time_candidate: Callable | None = None,
 ) -> dict:
     """Search every suite case and return the tuning record.
@@ -468,7 +517,9 @@ def autotune(
     seed (records are deterministic given a seed); ``suite`` — factory
     table, defaulting to DEFAULT_SUITE; ``mesh`` — tune through the sharded
     dispatch over this mesh, keying every entry by the LOCAL shard geometry
-    (see ``local_case_shapes``); ``time_candidate`` — test injection
+    (see ``local_case_shapes``); ``trial_budget`` — per-case cap on how
+    many candidates are timed, spent in roofline-prior order (the default
+    geometry always stays measured); ``time_candidate`` — test injection
     forwarded to ``autotune_case``.
 
     Returns the record dict (version, backend, impl, mesh tag, entries).
@@ -492,7 +543,7 @@ def autotune(
         case.mesh = mesh
         entry = autotune_case(
             case, budget_bytes=budget_bytes, reps=reps,
-            time_candidate=time_candidate,
+            trial_budget=trial_budget, time_candidate=time_candidate,
         )
         key = case_key(case.op, local_case_shapes(case, impl), backend, impl)
         entries[key] = entry
@@ -607,6 +658,10 @@ def main(argv=None) -> None:
                     help=f"comma-separated subset of {sorted(DEFAULT_SUITE)}")
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--budget-bytes", type=int, default=VMEM_BUDGET_BYTES)
+    ap.add_argument("--budget", type=int, default=None, metavar="N",
+                    help="time at most N candidates per case, spent in "
+                    "roofline-prior order (the default geometry is always "
+                    "measured); unset = time every feasible candidate")
     ap.add_argument("--impl", default=None,
                     help="pin a registry impl for the search (default: the "
                     "normal dispatch resolution)")
@@ -615,7 +670,8 @@ def main(argv=None) -> None:
     subset = args.ops.split(",") if args.ops else None
     with registry.default_impl(args.impl):
         record = autotune(
-            subset, budget_bytes=args.budget_bytes, reps=args.reps
+            subset, budget_bytes=args.budget_bytes, reps=args.reps,
+            trial_budget=args.budget,
         )
     save_record(record, args.out)
     print(f"wrote {args.out}")

@@ -67,6 +67,15 @@ def _partition_cell(plan) -> str:
     return plan.note
 
 
+def _overlap_cell(plan) -> str:
+    # the overlap-capability column: which plans run the double-buffered
+    # ring/halo schedule (kernels/partition.py `overlappable`), and over
+    # how many pipeline stages the transfers hide
+    if plan is None or not plan.overlappable:
+        return "—"
+    return f"yes ({plan.hops} hops)"
+
+
 def generate() -> str:
     """Render the op-reference markdown (deterministic; returns the text)."""
     from repro.kernels import ops as _ops  # noqa: F401  (registers the ops)
@@ -97,11 +106,11 @@ def generate() -> str:
     ):
         lines.append(f"## {title}\n")
         lines.append(f"Plans resolve over {tag}.\n")
-        lines.append("| op | partition plan | levels | collectives |")
-        lines.append("|---|---|---|---|")
+        lines.append("| op | partition plan | levels | overlap | collectives |")
+        lines.append("|---|---|---|---|---|")
         for op in registry.registered_ops():
             if op not in cases:
-                lines.append(f"| `{op}` | (no representative case) | | |")
+                lines.append(f"| `{op}` | (no representative case) | | | |")
                 continue
             _, args, kwargs, _, _ = cases[op]
             plan = partition.plan_for(op, mesh, *args, **kwargs)
@@ -111,10 +120,18 @@ def generate() -> str:
             )
             lines.append(
                 f"| `{op}` | {_partition_cell(plan)} | {levels} | "
-                f"{_collectives_cell(plan)} |"
+                f"{_overlap_cell(plan)} | {_collectives_cell(plan)} |"
             )
         lines.append("")
 
+    lines.append(
+        "The overlap column marks plans that run the double-buffered "
+        "latency-tolerant schedule (`overlap=True`, the default): the next "
+        "hop's transfer is issued before the current hop's kernel, so up "
+        "to `hops - 1` transfers hide behind compute "
+        "(`roofline.overlapped_seconds`). Pass `overlap=False` on the op "
+        "call for the synchronous oracle schedule.\n"
+    )
     lines.append(
         "Collective cells read `kind@axis(n=ring size, payload bytes)`; "
         "`pod`-axis entries are priced at the D2D link bandwidth, all "

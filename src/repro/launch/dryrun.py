@@ -336,7 +336,10 @@ def _op_roofline_cases():
 
     bf2, f4 = 2, 4
     S = jax.ShapeDtypeStruct
-    B, H, K, Sq, D = 1, 16, 16, 2048, 128  # GPT-J attention geometry
+    # GPT-J attention geometry at long context: Sq large enough that the
+    # per-hop ring kernel outweighs the per-hop KV transfer, so the
+    # overlapped schedule can hide the D2D term the serial model exposes
+    B, H, K, Sq, D = 1, 16, 16, 32768, 128
     M = N = Kd = 4096  # dense GEMM
     R = C = 4096
     L = 32  # ELL nnz/row
@@ -408,7 +411,7 @@ def op_roofline_cells(multi_pod: bool = False) -> list[dict]:
         by_level = roofline.plan_collective_seconds_by_level(plan)
         d2d = sum(by_level.values())
         terms = roofline.roofline_terms(flops / n, nbytes / n, 0.0, d2d_s=d2d)
-        out.append({
+        cell = {
             "op": op,
             "mesh": "x".join(str(s) for s in shape.values()),
             "partition": plan.note if plan else "replicated",
@@ -420,8 +423,23 @@ def op_roofline_cells(multi_pod: bool = False) -> list[dict]:
             "d2d_bytes": partition.plan_collective_bytes(plan),
             "collective_s_per_level": by_level,
             "oi_flops_per_byte": flops / nbytes if nbytes else 0.0,
-            "roofline": terms,
-        })
+            "roofline": terms,  # serial model: every transfer waits
+            "overlappable": bool(plan and plan.overlappable),
+        }
+        if plan is not None and plan.overlappable and plan.hops > 1:
+            # the overlapped cell beside the serial one: per-hop D2D hides
+            # behind per-hop compute, only the exposed remainder binds
+            ov = roofline.overlapped_terms(
+                flops / n, nbytes / n, 0.0, d2d, plan.hops
+            )
+            cell["roofline_overlapped"] = ov
+            cell["overlap"] = {
+                "hops": plan.hops,
+                "serial_s": ov["serial_s"],
+                "overlapped_s": ov["overlapped_s"],
+                "d2d_exposed_s": ov["d2d_exposed_s"],
+            }
+        out.append(cell)
     return out
 
 

@@ -108,6 +108,57 @@ def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
     return terms
 
 
+def overlapped_seconds(compute_s: float, d2d_s: float, hops: int) -> float:
+    """Pipeline time of an overlappable plan: ``hops`` compute stages with
+    the ``hops - 1`` transfers double-buffered behind them.
+
+    The serial model sums the terms (every transfer waits); the overlapped
+    schedule issues hop ``t+1``'s transfer before hop ``t``'s compute, so
+    per stage only ``max(stage_compute, stage_d2d)`` elapses — plus the
+    one un-hideable leading stage:
+
+        u = compute_s / hops            (per-stage compute)
+        v = d2d_s / (hops - 1)          (per-stage transfer)
+        total = u + (hops - 1) * max(u, v)
+
+    Always <= ``compute_s + d2d_s`` and STRICTLY cheaper whenever both
+    terms are positive and ``hops > 1``; compute-bound plans pay no D2D at
+    all (``max(u, v) == u``). Degenerates to the serial sum for
+    ``hops <= 1`` or no transfer.
+    """
+    if hops <= 1 or d2d_s <= 0:
+        return compute_s + max(d2d_s, 0.0)
+    u = compute_s / hops
+    v = d2d_s / (hops - 1)
+    return u + (hops - 1) * max(u, v)
+
+
+def overlapped_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                     d2d_s: float, hops: int) -> dict:
+    """``roofline_terms`` under the overlapped schedule: the per-hop D2D
+    time hides behind per-hop compute, so only the EXPOSED remainder joins
+    the dominance comparison.
+
+    The base (non-collective) stage time is ``max(compute_s, memory_s)``
+    — the device-local roofline — pipelined over ``hops`` stages against
+    ``d2d_s`` of transfer. Returns the usual terms dict with ``d2d_s``
+    replaced by the exposed time (dropped entirely when compute fully
+    covers the transfers, so a hidden ring stops reporting d2d-bound),
+    plus ``serial_s`` / ``overlapped_s`` / ``d2d_exposed_s`` for the
+    serial-vs-overlapped comparison the dry-run cells print.
+    """
+    t_comp = flops / PEAK_FLOPS
+    t_mem = hbm_bytes / HBM_BW
+    base = max(t_comp, t_mem)
+    total = overlapped_seconds(base, d2d_s, hops)
+    exposed = max(total - base, 0.0)
+    terms = roofline_terms(flops, hbm_bytes, coll_bytes, d2d_s=exposed)
+    terms["serial_s"] = base + d2d_s
+    terms["overlapped_s"] = total
+    terms["d2d_exposed_s"] = exposed
+    return terms
+
+
 def plan_collective_seconds_by_level(plan) -> dict:
     """Price one partition plan's collectives per mesh level.
 

@@ -114,8 +114,25 @@ def _ring_fwd(n: int):
     return [(i, (i + 1) % n) for i in range(n)]
 
 
+def _hop_send(axis: str, n: int, remote_copy: bool):
+    """One ring hop as a leaf function: ``ppermute`` by default; the pallas
+    async-remote-copy fast path (``core.streams.remote_ring_hop``, the RDMA
+    engine the SU double-buffer hands its D2D hops to) when ``remote_copy``
+    is set AND the backend is a real TPU. Anywhere else the request falls
+    back to ``ppermute`` silently — the inter-chip DMA engine simply does
+    not exist on host/GPU backends, and the two paths move identical bytes.
+    """
+    if remote_copy and jax.default_backend() == "tpu":
+        from repro.core.streams import remote_ring_hop
+
+        return lambda x: remote_ring_hop(x, axis, n)
+    perm = _ring_fwd(n)
+    return lambda x: jax.lax.ppermute(x, axis, perm)
+
+
 def ring_scan(step_fn, carry, block, axis: str, n: int, *,
-              hops: int | None = None):
+              hops: int | None = None, overlap: bool = True,
+              remote_copy: bool = False):
     """Rotate ``block`` through an n-rank ``ppermute`` ring, folding it into
     ``carry`` at every hop — the primitive under ring flash attention.
 
@@ -129,18 +146,38 @@ def ring_scan(step_fn, carry, block, axis: str, n: int, *,
     tail). The permutation always spans the full ``n``-rank ring
     regardless of ``hops``.
 
+    ``overlap`` (default) double-buffers the ring: hop ``t+1``'s transfer
+    is issued BEFORE hop ``t``'s fold, so the scheduler can fly the D2D
+    hop behind ``step_fn``'s compute — the software form of the SU
+    double-buffer the paper's C4/C5 interconnect overlaps with FPU work.
+    ``overlap=False`` keeps the synchronous schedule (permute only after
+    the fold) as the correctness oracle; both orders fold bit-identical
+    values, only issue order differs. ``remote_copy`` opts the hop into
+    the pallas async-remote-copy path on TPU backends (see ``_hop_send``).
+
     Fires exactly ``hops - 1`` ppermutes — the block is consumed in place
     on the final hop, never sent home. Must run inside a ``shard_map``
     naming ``axis``. Returns the folded carry.
     """
     hops = n if hops is None else hops
-    perm = _ring_fwd(n)
+    send = _hop_send(axis, n, remote_copy)
+    if not overlap:
+        # synchronous oracle: hop t+1's permute issues only after hop t's
+        # fold has consumed the resident block
+        for t in range(hops):
+            carry = step_fn(carry, block, t)
+            if t != hops - 1:
+                block = jax.tree_util.tree_map(send, block)
+        return carry
     for t in range(hops):
+        if t != hops - 1:
+            # double-buffer: the send depends only on the resident block,
+            # not on step_fn's result — issuing it first lets the hop fly
+            # while the kernel/merge runs
+            block_next = jax.tree_util.tree_map(send, block)
         carry = step_fn(carry, block, t)
         if t != hops - 1:
-            block = jax.tree_util.tree_map(
-                lambda x: jax.lax.ppermute(x, axis, perm), block
-            )
+            block = block_next
     return carry
 
 
@@ -168,7 +205,8 @@ def online_softmax_merge(o_acc, lse_acc, o, lse):
     )
 
 
-def ring_scan_carry(chunk_fn, xs_l, s0, axis: str, n: int):
+def ring_scan_carry(chunk_fn, xs_l, s0, axis: str, n: int, *,
+                    overlap: bool = True):
     """Sequence-parallel linear-recurrence carry over a ppermute ring: rank
     ``r`` scans its local chunk with the TRUE carry produced by rank
     ``r - 1`` (the D2D-pipelined version of the SSM chunk scan).
@@ -176,7 +214,12 @@ def ring_scan_carry(chunk_fn, xs_l, s0, axis: str, n: int):
     Args: ``chunk_fn(state, xs_local) -> (state_out, ys_local)`` — the
     per-chunk scan; ``xs_l`` — this rank's chunk; ``s0`` — the global
     initial state (only rank 0's is consumed); ``axis`` / ``n`` — the ring
-    axis and its (static) size.
+    axis and its (static) size; ``overlap`` — issue hop ``t+1``'s permute
+    the moment ``chunk_fn`` produces its state, BEFORE the keep-merges, so
+    the hop flies while the where-folds run (the carry chain itself is
+    inherently serial — permute -> chunk_fn -> permute — so unlike
+    ``ring_scan`` only the merge arithmetic can hide the hop here);
+    ``overlap=False`` keeps the synchronous oracle order.
 
     Runs inside ``shard_map``. The carry threads hop by hop: after hop
     ``t`` the state that left rank ``t`` arrives at rank ``t + 1``, which
@@ -194,9 +237,11 @@ def ring_scan_carry(chunk_fn, xs_l, s0, axis: str, n: int):
     perm = _ring_fwd(n)
     s_new, ys = chunk_fn(s0, xs_l)
     s_keep = s_new  # correct on rank 0 after hop 0; later ranks fixed below
+    s_in = jax.lax.ppermute(s_new, axis, perm) if n > 1 else None
     for t in range(1, n):
-        s_in = jax.lax.ppermute(s_new, axis, perm)
         s_new, ys_t = chunk_fn(s_in, xs_l)
+        if overlap and t != n - 1:
+            s_in = jax.lax.ppermute(s_new, axis, perm)
         keep = me == t
         ys = jax.tree_util.tree_map(
             lambda a, b: jnp.where(keep, b, a), ys, ys_t
@@ -204,4 +249,6 @@ def ring_scan_carry(chunk_fn, xs_l, s0, axis: str, n: int):
         s_keep = jax.tree_util.tree_map(
             lambda a, b: jnp.where(keep, b, a), s_keep, s_new
         )
+        if not overlap and t != n - 1:
+            s_in = jax.lax.ppermute(s_new, axis, perm)
     return ys, s_keep

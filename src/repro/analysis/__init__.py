@@ -1,0 +1,30 @@
+"""Static checker for substrate invariants and overlap-schedule hazards.
+
+Two tiers behind one rule registry (``base.register_rule``, mirroring the
+kernel registry's idiom):
+
+  - **AST rules** (``ast_rules``): parse the source tree and enforce the
+    syntactic invariants the substrate depends on — single pallas_call
+    site, registry-only block geometry, append-only XLA_FLAGS, collective
+    axis names from the partition vocabulary, the documented-surface
+    contract, explicit warning categories.
+  - **Plan rules** (``plan_rules``): check *resolved artifacts* with no
+    devices — ring schedules for double-buffer aliasing and DMA-wait
+    ordering, StreamPrograms against the VMEM budget, partition plans for
+    ladder dead-ends and vocabulary drift on the production meshes.
+
+Drive it as ``python -m repro.analysis`` (see ``cli``); CI gates on a
+clean run, and tests/test_analysis.py proves every rule fires on the
+seeded violations in tests/analysis_fixtures. Import cost is deliberate:
+this ``__init__`` pulls only the stdlib-based registry; the plan tier
+imports jax lazily inside each rule.
+"""
+from repro.analysis.base import (  # noqa: F401
+    Context,
+    Finding,
+    Rule,
+    default_root,
+    register_rule,
+    registered_rules,
+    run_rules,
+)

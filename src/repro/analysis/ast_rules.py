@@ -1,0 +1,441 @@
+"""Tier-A rules: AST lint over the source tree (no repro/jax imports).
+
+Each rule here promotes an invariant the repo previously enforced with a
+grep-style assertion buried in a test — or never enforced at all — into a
+named, fixture-testable check:
+
+  single-pallas-site            core/streams.py is the only pallas_call site
+  block-geometry-registry-only  block sizes come from the registry, nowhere else
+  no-environ-in-kernels         kernel modules never read the environment
+  xla-flags-append-only         XLA_FLAGS is only written by the append helper
+  axis-name-vocabulary          collective axis literals ∈ partition.AXIS_VOCAB
+  docstring-contract            the documented public surfaces stay documented
+  warn-category                 every warnings.warn passes an explicit category
+
+Rules match files by path heuristics relative to the scanned root (``rel``
+suffix / directory-segment checks), so the same rule runs identically over
+the real tree and over the seeded-violation fixture trees in
+``tests/analysis_fixtures``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.base import Context, Finding, SourceFile, register_rule
+
+# fallback vocabulary when the scanned tree carries no kernels/partition.py
+# (fixture trees); the real tree's AXIS_VOCAB assignment wins when present
+DEFAULT_AXIS_VOCAB = ("pod", "data", "model")
+
+BLOCK_PARAMS = frozenset(
+    {"block_k", "bq", "bk", "bm", "bn", "bf", "bx", "bs", "chunk"}
+)
+
+# collective name -> positional index of its axis-name argument
+_COLLECTIVES = {
+    "psum": 1, "pmean": 1, "ppermute": 1, "all_gather": 1,
+    "psum_scatter": 1, "all_to_all": 1, "axis_index": 0,
+}
+
+MIN_DOC_LEN = 30
+# rel-path suffixes carrying the documentation contract (the modules
+# docs/partitioning.md documents as the user-facing surface)
+DOC_CONTRACT_SUFFIXES = ("kernels/partition.py", "launch/autotune.py")
+
+
+def _chain(node: ast.AST) -> str:
+    """Dotted-name form of an attribute chain (``jax.lax.psum``), or ""."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _in_dir(src: SourceFile, name: str) -> bool:
+    return name in src.rel.split("/")[:-1]
+
+
+def _basename(src: SourceFile) -> str:
+    return src.rel.rsplit("/", 1)[-1]
+
+
+@register_rule("single-pallas-site", tier="ast")
+def single_pallas_site(ctx: Context) -> list[Finding]:
+    """core/streams.py is the only module that may touch pl.pallas_call.
+
+    The substrate invariant behind the whole kernel layer: backend
+    concerns (compiler params, scalar prefetch, interpret mode) live in
+    exactly one launch site, so every kernel is a StreamProgram and none
+    grows a private pallas path.
+    """
+    out = []
+    for src in ctx.files:
+        if _basename(src) == "streams.py":
+            continue
+        seen = set()
+        for node in ast.walk(src.tree):
+            line = None
+            if isinstance(node, ast.Attribute) and node.attr == "pallas_call":
+                line = node.lineno
+            elif isinstance(node, ast.Name) and node.id == "pallas_call":
+                line = node.lineno
+            elif isinstance(node, (ast.Import, ast.ImportFrom)) and any(
+                a.name == "pallas_call" or (a.asname == "pallas_call")
+                for a in node.names
+            ):
+                line = node.lineno
+            if line is not None and line not in seen:
+                seen.add(line)
+                out.append(Finding(
+                    "single-pallas-site", src.rel, line,
+                    "pallas_call outside core/streams.py — the substrate's "
+                    "single launch site",
+                ))
+    return out
+
+
+def _block_defaults_ops(ctx: Context) -> list[str]:
+    """Keys of the ``_BLOCK_DEFAULTS`` table in the tree's registry.py."""
+    reg = ctx.find("kernels/registry.py")
+    if reg is None:
+        return []
+    for node in reg.tree.body:
+        if (
+            isinstance(node, (ast.Assign, ast.AnnAssign))
+            and isinstance(node.value, ast.Dict)
+        ):
+            targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+            if any(
+                isinstance(t, ast.Name) and t.id == "_BLOCK_DEFAULTS"
+                for t in targets
+            ):
+                return [
+                    k.value for k in node.value.keys
+                    if isinstance(k, ast.Constant) and isinstance(k.value, str)
+                ]
+    return []
+
+
+@register_rule("block-geometry-registry-only", tier="ast")
+def block_geometry_registry_only(ctx: Context) -> list[Finding]:
+    """Block geometry has one source of truth: registry.resolve_blocks.
+
+    In kernel-layer modules (``kernels/``, minus the registry itself and
+    the partition rules): no block-size keyword gets an integer literal, no
+    module keeps private ``block_defaults`` plumbing, and nothing reads the
+    ``REPRO_UNROLL_GRID`` escape hatch (the historical regression where the
+    unrolled flash path derived bq/bk from a raw env var). Additionally,
+    every op in the registry's ``_BLOCK_DEFAULTS`` table must resolve
+    through ``resolve_blocks("<op>"`` in ops.py — the single-path check.
+    """
+    out = []
+    for src in ctx.files:
+        if not _in_dir(src, "kernels"):
+            continue
+        base = _basename(src)
+        if base in ("registry.py", "partition.py"):
+            continue
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if (
+                        kw.arg in BLOCK_PARAMS
+                        and isinstance(kw.value, ast.Constant)
+                        and isinstance(kw.value.value, int)
+                    ):
+                        out.append(Finding(
+                            "block-geometry-registry-only", src.rel,
+                            kw.value.lineno,
+                            f"block-size literal {kw.arg}={kw.value.value} "
+                            f"bypasses registry.resolve_blocks",
+                        ))
+            elif (
+                isinstance(node, (ast.Attribute, ast.Name))
+                and getattr(node, "attr", getattr(node, "id", None))
+                == "block_defaults"
+            ):
+                out.append(Finding(
+                    "block-geometry-registry-only", src.rel, node.lineno,
+                    "private block_defaults plumbing in a kernel impl "
+                    "module; geometry flows through resolve_blocks only",
+                ))
+            elif (
+                isinstance(node, ast.Constant)
+                and node.value == "REPRO_UNROLL_GRID"
+            ):
+                out.append(Finding(
+                    "block-geometry-registry-only", src.rel, node.lineno,
+                    "REPRO_UNROLL_GRID escape hatch: geometry must never "
+                    "come from the environment",
+                ))
+    ops_src = ctx.find("kernels/ops.py")
+    if ops_src is not None:
+        for op in _block_defaults_ops(ctx):
+            if f'resolve_blocks("{op}"' not in ops_src.text:
+                out.append(Finding(
+                    "block-geometry-registry-only", ops_src.rel, 0,
+                    f"op {op!r} has a block table but ops.py never calls "
+                    f'resolve_blocks("{op}", ...) — split-brain geometry',
+                ))
+    return out
+
+
+@register_rule("no-environ-in-kernels", tier="ast")
+def no_environ_in_kernels(ctx: Context) -> list[Finding]:
+    """Kernel modules never read the process environment.
+
+    The registry owns the only sanctioned env knob (``REPRO_KERNEL_IMPL``,
+    impl selection — not geometry); any other ``os.environ`` / ``os.getenv``
+    in ``kernels/`` is configuration smuggled past the dispatch layer.
+    """
+    out = []
+    for src in ctx.files:
+        if not _in_dir(src, "kernels") or _basename(src) == "registry.py":
+            continue
+        for node in ast.walk(src.tree):
+            hit = None
+            if isinstance(node, ast.Attribute) and _chain(node) == "os.environ":
+                hit = "os.environ"
+            elif (
+                isinstance(node, ast.Call)
+                and _chain(node.func) == "os.getenv"
+            ):
+                hit = "os.getenv"
+            if hit:
+                out.append(Finding(
+                    "no-environ-in-kernels", src.rel, node.lineno,
+                    f"{hit} in a kernel module; only the registry reads "
+                    f"the environment (impl selection)",
+                ))
+    return out
+
+
+@register_rule("xla-flags-append-only", tier="ast")
+def xla_flags_append_only(ctx: Context) -> list[Finding]:
+    """XLA_FLAGS is only ever appended via launch.xla_flags, never assigned.
+
+    A bare ``os.environ["XLA_FLAGS"] = ...`` outside the helper clobbers
+    caller-set flags (the regression both launchers shipped once). The
+    launchers themselves (dryrun, hillclimb, benchmarks/run.py) must route
+    through ``ensure_host_device_count``.
+    """
+    out = []
+    for src in ctx.files:
+        base = _basename(src)
+        if base == "xla_flags.py":
+            continue
+        for node in ast.walk(src.tree):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AugAssign):
+                targets = [node.target]
+            for t in targets:
+                if (
+                    isinstance(t, ast.Subscript)
+                    and _chain(t.value) == "os.environ"
+                    and isinstance(t.slice, ast.Constant)
+                    and t.slice.value == "XLA_FLAGS"
+                ):
+                    out.append(Finding(
+                        "xla-flags-append-only", src.rel, node.lineno,
+                        "direct write to os.environ['XLA_FLAGS'] clobbers "
+                        "caller flags; use launch.xla_flags",
+                    ))
+        is_launcher = (
+            base in ("dryrun.py", "hillclimb.py") and _in_dir(src, "launch")
+        ) or src.rel.endswith("benchmarks/run.py")
+        if is_launcher and "ensure_host_device_count" not in src.text:
+            out.append(Finding(
+                "xla-flags-append-only", src.rel, 0,
+                "launcher does not bootstrap via ensure_host_device_count",
+            ))
+    return out
+
+
+def _axis_vocab(ctx: Context) -> tuple:
+    """The tree's ``AXIS_VOCAB`` assignment (kernels/partition.py), else
+    the fallback ``DEFAULT_AXIS_VOCAB``."""
+    part = ctx.find("kernels/partition.py")
+    if part is not None:
+        for node in part.tree.body:
+            if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "AXIS_VOCAB"
+                for t in node.targets
+            ) and isinstance(node.value, ast.Tuple):
+                return tuple(
+                    e.value for e in node.value.elts
+                    if isinstance(e, ast.Constant)
+                )
+    return DEFAULT_AXIS_VOCAB
+
+
+@register_rule("axis-name-vocabulary", tier="ast")
+def axis_name_vocabulary(ctx: Context) -> list[Finding]:
+    """Collective axis-name literals come from partition's vocabulary.
+
+    Every string literal passed as the axis of ``psum`` / ``ppermute`` /
+    ``all_gather`` / ``axis_index`` / ... must be an axis name the
+    partition layer produces (``AXIS_VOCAB``: the C5 pod/data/model
+    hierarchy). A typo'd or ad-hoc axis name fails only at shard_map trace
+    time on a matching mesh — this catches it statically.
+    """
+    vocab = _axis_vocab(ctx)
+    out = []
+    for src in ctx.files:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _chain(node.func).rsplit(".", 1)[-1] or getattr(
+                node.func, "id", ""
+            )
+            if name not in _COLLECTIVES:
+                continue
+            idx = _COLLECTIVES[name]
+            axis_arg = None
+            if len(node.args) > idx:
+                axis_arg = node.args[idx]
+            else:
+                for kw in node.keywords:
+                    if kw.arg in ("axis_name", "axis"):
+                        axis_arg = kw.value
+            literals = []
+            if isinstance(axis_arg, ast.Constant) and isinstance(
+                axis_arg.value, str
+            ):
+                literals = [axis_arg]
+            elif isinstance(axis_arg, ast.Tuple):
+                literals = [
+                    e for e in axis_arg.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)
+                ]
+            for lit in literals:
+                if lit.value not in vocab:
+                    out.append(Finding(
+                        "axis-name-vocabulary", src.rel, lit.lineno,
+                        f"{name} over axis {lit.value!r}: not in the "
+                        f"partition vocabulary {vocab}",
+                    ))
+    return out
+
+
+def _mentions(doc: str, name: str) -> bool:
+    return re.search(rf"\b{re.escape(name)}\b", doc) is not None
+
+
+def _fn_params(node: ast.FunctionDef) -> list[str]:
+    a = node.args
+    names = [p.arg for p in (*a.posonlyargs, *a.args)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    names += [p.arg for p in a.kwonlyargs]
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return [n for n in names if n not in ("self", "cls")]
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = _chain(target) or getattr(target, "id", "")
+        if name.rsplit(".", 1)[-1] == "dataclass":
+            return True
+    return False
+
+
+@register_rule("docstring-contract", tier="ast")
+def docstring_contract(ctx: Context) -> list[Finding]:
+    """The documented public surfaces keep their documentation contract.
+
+    For the modules docs/partitioning.md presents as the user-facing API
+    (kernels/partition.py, launch/autotune.py): a real module docstring,
+    a ≥30-char docstring on every public top-level function and class,
+    every parameter mentioned by name, and every dataclass field described
+    — the same contract tests/test_docstrings.py enforces at runtime,
+    reimplemented over the AST so it also runs on fixture trees.
+    """
+    out = []
+
+    def bad(src, line, msg):
+        out.append(Finding("docstring-contract", src.rel, line, msg))
+
+    for src in ctx.files:
+        if not src.rel.endswith(DOC_CONTRACT_SUFFIXES):
+            continue
+        mod_doc = ast.get_docstring(src.tree) or ""
+        if len(mod_doc.strip()) < MIN_DOC_LEN:
+            bad(src, 1, "missing or trivial module docstring")
+        for node in src.tree.body:
+            if not isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ) or node.name.startswith("_"):
+                continue
+            doc = ast.get_docstring(node) or ""
+            if len(doc) < MIN_DOC_LEN:
+                bad(src, node.lineno,
+                    f"{node.name}: missing or trivial docstring")
+                continue
+            if isinstance(node, ast.ClassDef):
+                if _is_dataclass(node):
+                    for stmt in node.body:
+                        if isinstance(stmt, ast.AnnAssign) and isinstance(
+                            stmt.target, ast.Name
+                        ) and not _mentions(doc, stmt.target.id):
+                            bad(src, stmt.lineno,
+                                f"{node.name}: dataclass field "
+                                f"{stmt.target.id!r} undocumented")
+            else:
+                for param in _fn_params(node):
+                    if not _mentions(doc, param):
+                        bad(src, node.lineno,
+                            f"{node.name}: parameter {param!r} not "
+                            f"mentioned in docstring")
+    return out
+
+
+@register_rule("warn-category", tier="ast")
+def warn_category(ctx: Context) -> list[Finding]:
+    """Every warnings.warn call passes an explicit warning category.
+
+    Degrade paths speak through ``diagnostics.warn_degrade`` (the
+    ``ReproDegradeWarning`` channel); any other ``warnings.warn`` must at
+    least name its category so callers can filter on it. A bare
+    single-argument warn is an anonymous UserWarning nobody can target.
+    """
+    out = []
+    for src in ctx.files:
+        bare_warn_imported = any(
+            isinstance(node, ast.ImportFrom)
+            and node.module == "warnings"
+            and any(a.name == "warn" for a in node.names)
+            for n in [src.tree]
+            for node in ast.walk(n)
+        )
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _chain(node.func)
+            is_warn = chain == "warnings.warn" or (
+                bare_warn_imported
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "warn"
+            )
+            if not is_warn:
+                continue
+            has_category = len(node.args) >= 2 or any(
+                kw.arg == "category" for kw in node.keywords
+            )
+            if not has_category:
+                out.append(Finding(
+                    "warn-category", src.rel, node.lineno,
+                    "warnings.warn without an explicit category; use "
+                    "diagnostics.warn_degrade (degrade paths) or pass a "
+                    "category callers can filter on",
+                ))
+    return out

@@ -1,0 +1,185 @@
+"""Rule registry and source-tree model for the static checker.
+
+Mirrors the ``kernels/registry.py`` idiom: rules register themselves into a
+module-level table via a decorator, callers select by name, and unknown
+names fail loudly with the known-name list. Two tiers share the table:
+
+  - ``ast`` rules parse the source tree (no repro imports, no jax) and
+    check syntactic invariants — the grep-style assertions that used to
+    live inline in tests, promoted to reusable, fixture-testable checks.
+  - ``plan`` rules import the live substrate and check *resolved
+    artifacts* — ring schedules, StreamPrograms, partition plans — on
+    device-free MeshSpecs, so they run anywhere the tests run.
+
+Every rule takes a ``Context`` and returns ``Finding`` records; an empty
+run is the green state CI gates on.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Callable
+
+# directories never scanned by AST rules: generated/vcs trees, and tests —
+# tests/analysis_fixtures holds deliberately-seeded violations
+EXCLUDED_DIRS = frozenset(
+    {".git", ".github", "__pycache__", "tests", ".pytest_cache", "docs"}
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation. Fields: ``rule`` — the reporting rule's registered
+    name; ``path`` — offending file, relative to the scanned root (plan
+    rules, which check resolved objects rather than files, use a module
+    path like ``repro.kernels.partition``); ``line`` — 1-based source line
+    (0 when no source location applies); ``message`` — what is wrong and
+    why it matters."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        """Render as the one-line ``rule: path:line: message`` CLI form."""
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{self.rule}: {loc}: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceFile:
+    """One parsed file of the scanned tree. Fields: ``path`` — absolute
+    path; ``rel`` — posix-style path relative to the scanned root (what
+    rule heuristics match on); ``text`` — the source; ``tree`` — the
+    parsed ``ast.Module``."""
+
+    path: pathlib.Path
+    rel: str
+    text: str
+    tree: ast.Module
+
+
+class Context:
+    """What a rule run sees: the scanned ``root`` and its parsed files.
+
+    Files are loaded lazily on first access and cached; files that fail to
+    parse become ``parse_errors`` findings (reported once per run) instead
+    of aborting the sweep. Plan-tier rules ignore the tree entirely —
+    they exist in the same Context so one CLI invocation runs both tiers.
+    """
+
+    def __init__(self, root: pathlib.Path):
+        self.root = pathlib.Path(root)
+        self._files: list[SourceFile] | None = None
+        self.parse_errors: list[Finding] = []
+
+    @property
+    def files(self) -> list[SourceFile]:
+        """The tree's parsed ``SourceFile`` records, sorted by ``rel``."""
+        if self._files is None:
+            self._files = []
+            for path in sorted(self.root.rglob("*.py")):
+                parts = path.relative_to(self.root).parts
+                if any(p in EXCLUDED_DIRS for p in parts[:-1]):
+                    continue
+                rel = "/".join(parts)
+                text = path.read_text()
+                try:
+                    tree = ast.parse(text, filename=str(path))
+                except SyntaxError as e:
+                    self.parse_errors.append(Finding(
+                        "parse-error", rel, e.lineno or 0,
+                        f"not parseable: {e.msg}",
+                    ))
+                    continue
+                self._files.append(SourceFile(path, rel, text, tree))
+        return self._files
+
+    def find(self, suffix: str) -> SourceFile | None:
+        """The unique file whose ``rel`` ends with ``suffix``, or None."""
+        hits = [f for f in self.files if f.rel.endswith(suffix)]
+        return hits[0] if len(hits) == 1 else None
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """A registered check. Fields: ``name`` — kebab-case id used on the
+    CLI; ``tier`` — ``"ast"`` (source-tree lint) or ``"plan"`` (resolved
+    schedule/plan check); ``fn`` — ``fn(ctx) -> list[Finding]``; ``doc``
+    — the one-line summary shown by ``--list``."""
+
+    name: str
+    tier: str
+    fn: Callable
+    doc: str
+
+
+_RULES: dict[str, Rule] = {}
+
+
+def register_rule(name: str, *, tier: str) -> Callable:
+    """Decorator: ``@register_rule("single-pallas-site", tier="ast")``.
+
+    Args: ``name`` — the rule's CLI id (must be unique); ``tier`` — one of
+    ``"ast"`` / ``"plan"``. The decorated function's first docstring line
+    becomes the rule's ``--list`` summary.
+    """
+    if tier not in ("ast", "plan"):
+        raise ValueError(f"unknown tier {tier!r}; one of ('ast', 'plan')")
+
+    def deco(fn: Callable) -> Callable:
+        if name in _RULES:
+            raise ValueError(f"duplicate rule name {name!r}")
+        doc = (fn.__doc__ or "").strip().splitlines()[0] if fn.__doc__ else ""
+        _RULES[name] = Rule(name, tier, fn, doc)
+        return fn
+
+    return deco
+
+
+def _ensure_rule_modules() -> None:
+    # rules live in sibling modules and register on import; importing them
+    # here (not in __init__) keeps `from repro.analysis import Finding`
+    # cheap while making registered_rules()/run_rules() self-sufficient
+    from repro.analysis import ast_rules, plan_rules  # noqa: F401
+
+
+def registered_rules() -> list[Rule]:
+    """Every registered rule, sorted ast-tier first then by name."""
+    _ensure_rule_modules()
+    return sorted(_RULES.values(), key=lambda r: (r.tier, r.name))
+
+
+def default_root() -> pathlib.Path:
+    """The repo root this package is installed from (three levels above
+    ``src/repro/analysis``) — the tree a bare ``python -m repro.analysis``
+    scans, covering ``src/`` and ``benchmarks/`` in one sweep."""
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def run_rules(rules=None, root=None) -> list[Finding]:
+    """Run the selected rules and return every finding.
+
+    Args: ``rules`` — iterable of rule names (None = all registered;
+    unknown names raise KeyError listing the known ones); ``root`` — the
+    source tree AST rules scan (None = ``default_root()``; plan rules
+    check the installed substrate regardless). Parse failures in the tree
+    are returned as ``parse-error`` findings alongside rule findings.
+    """
+    table = {r.name: r for r in registered_rules()}
+    if rules is None:
+        selected = list(table.values())
+    else:
+        unknown = [n for n in rules if n not in table]
+        if unknown:
+            raise KeyError(
+                f"unknown rules {unknown}; known: {sorted(table)}"
+            )
+        selected = [table[n] for n in rules]
+    ctx = Context(pathlib.Path(root) if root else default_root())
+    findings: list[Finding] = []
+    for rule in selected:
+        findings.extend(rule.fn(ctx))
+    return list(ctx.parse_errors) + findings

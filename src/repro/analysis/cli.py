@@ -1,0 +1,65 @@
+"""CLI for the static checker: ``python -m repro.analysis``.
+
+Runs the selected rules over the tree and prints findings one per line
+(or as a JSON report with ``--format json`` — the form the CI lint job
+parses). Exit status: 0 clean, 1 findings, 2 usage error (unknown rule).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import ast_rules, plan_rules  # noqa: F401  (register)
+from repro.analysis.base import registered_rules, run_rules
+
+
+def main(argv=None) -> int:
+    """Entry point; ``argv`` defaults to sys.argv. Returns the exit code."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="two-tier static checker: AST lint over the source "
+        "tree plus plan/schedule checks on the resolved substrate",
+    )
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule names (default: all)")
+    ap.add_argument("--root", default=None,
+                    help="source tree for AST rules (default: the repo "
+                    "root; plan rules always check the installed package)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered rules and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for rule in registered_rules():
+            print(f"{rule.name:32s} [{rule.tier}]  {rule.doc}")
+        return 0
+
+    names = args.rules.split(",") if args.rules else None
+    try:
+        findings = run_rules(names, root=args.root)
+    except KeyError as e:
+        print(e.args[0], file=sys.stderr)
+        return 2
+
+    if args.format == "json":
+        print(json.dumps({
+            "rules": names or [r.name for r in registered_rules()],
+            "count": len(findings),
+            "findings": [
+                {"rule": f.rule, "path": f.path, "line": f.line,
+                 "message": f.message}
+                for f in findings
+            ],
+        }, indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        if findings:
+            print(f"{len(findings)} finding(s)", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,341 @@
+"""Tier-B rules: checks on resolved plans, programs, and schedules.
+
+No devices, no compilation: everything here runs on the same device-free
+artifacts the dry-run uses — ``collectives.ring_schedule`` event lists,
+``StreamProgram`` objects built by the autotune suite's case factories,
+and partition plans resolved against ``partition.MeshSpec``. The point is
+to check the *exact executed artifact*: ``ring_scan`` replays the very
+schedule the overlap-schedule rule verifies, and the VMEM rule prices the
+very programs ``stream_compute`` launches.
+
+  overlap-schedule     ring schedules are hazard-free (buffer aliasing,
+                       DMA-wait ordering, fold coverage/order)
+  vmem-budget          every suite program fits the VMEM budget at the
+                       registry's default block geometry, and validates
+  mesh-divisibility    every partitioned op resolves a plan on both
+                       production meshes (no silent-replication dead end)
+  plan-collective-axes plan levels and collective costs stay inside the
+                       mesh/vocabulary/kind vocabularies
+
+The ``check_*`` helpers are the public seam: rules call them over the
+live substrate, tests call them over seeded-bad inputs.
+"""
+from __future__ import annotations
+
+import warnings
+
+from repro.analysis.base import Context, Finding, register_rule
+
+# the production meshes every partitioned op must resolve on (DESIGN.md C5:
+# single-pod 16x16 and the two-pod D2D hierarchy)
+PRODUCTION_MESH_SHAPES = (
+    {"data": 16, "model": 16},
+    {"pod": 2, "data": 16, "model": 16},
+)
+
+# CollectiveCost.kind vocabulary (topology.collective_seconds pricing table)
+COLLECTIVE_KINDS = frozenset(
+    {"all_reduce", "all_gather", "reduce_scatter", "permute"}
+)
+
+
+def check_hop_schedule(events, hops: int, *, remote_copy: bool = False):
+    """Verify one ring schedule against the double-buffer discipline.
+
+    Args: ``events`` — ``collectives.HopEvent`` sequence (the schedule
+    ``ring_scan`` replays); ``hops`` — the ring length the schedule must
+    cover; ``remote_copy`` — whether the transport is the RDMA pair
+    (``dma_start``/``dma_wait``) rather than a synchronous ``send``.
+
+    Returns problem strings (empty = hazard-free). Checked invariants:
+    every transfer of hop t reads the buffer holding hop t-1 and must not
+    land in a buffer whose hop has not been folded yet (the overlap alias
+    hazard — the merge of hop t racing the landing of hop t+1); every
+    fold of hop t reads the buffer holding exactly hop t, AFTER its DMA
+    semaphore wait when the transport is RDMA; folds cover 0..hops-1 in
+    order; no dma_start is left without its dma_wait.
+    """
+    problems: list[str] = []
+    versions = {0: 0}   # buffer -> the hop whose block it holds
+    arrived = {0}       # hops whose data is visible (DMA complete / sync)
+    pending: dict = {}  # buffer -> hop of an un-waited dma_start
+    folded: list[int] = []
+    for ev in events:
+        if ev.kind in ("send", "dma_start"):
+            t = ev.hop
+            if versions.get(ev.src) != t - 1:
+                problems.append(
+                    f"hop {t} {ev.kind} reads buffer {ev.src} holding hop "
+                    f"{versions.get(ev.src)}, expected hop {t - 1}"
+                )
+            dst_hop = versions.get(ev.dst)
+            if dst_hop is not None and dst_hop < hops and dst_hop not in folded:
+                problems.append(
+                    f"hop {t} {ev.kind} lands in buffer {ev.dst} still "
+                    f"holding unfolded hop {dst_hop} (overlap alias hazard)"
+                )
+            versions[ev.dst] = t
+            if ev.kind == "dma_start":
+                pending[ev.dst] = t
+            else:
+                arrived.add(t)
+        elif ev.kind == "dma_wait":
+            started = pending.pop(ev.dst, None)
+            if started != ev.hop:
+                problems.append(
+                    f"dma_wait for hop {ev.hop} on buffer {ev.dst} without "
+                    f"a matching dma_start"
+                )
+            else:
+                arrived.add(ev.hop)
+        elif ev.kind == "fold":
+            t = ev.hop
+            held = versions.get(ev.src)
+            if held != t:
+                problems.append(
+                    f"fold of hop {t} reads buffer {ev.src} holding hop "
+                    f"{held}"
+                )
+            elif t not in arrived:
+                problems.append(
+                    f"fold of hop {t} consumes buffer {ev.src} before its "
+                    f"DMA semaphore wait — unordered RDMA read"
+                )
+            expected = folded[-1] + 1 if folded else 0
+            if t != expected:
+                problems.append(
+                    f"fold order broken: hop {t} folded after {folded}"
+                )
+            folded.append(t)
+        else:
+            problems.append(f"unknown event kind {ev.kind!r}")
+    if sorted(set(folded)) != list(range(hops)):
+        problems.append(
+            f"folds {sorted(set(folded))} do not cover hops 0..{hops - 1}"
+        )
+    if pending:
+        problems.append(
+            f"dma_start without dma_wait on buffers {sorted(pending)}"
+        )
+    return problems
+
+
+@register_rule("overlap-schedule", tier="plan")
+def overlap_schedule(ctx: Context) -> list[Finding]:
+    """Every schedule ring_scan can replay is hazard-free.
+
+    Sweeps ``ring_schedule`` over hop counts 1..8 x {overlap, sync} x
+    {ppermute, remote_copy} and runs ``check_hop_schedule`` on each — the
+    schedule checked is the schedule executed, by construction.
+    """
+    from repro.parallel.collectives import ring_schedule
+
+    out = []
+    for hops in range(1, 9):
+        for overlap in (False, True):
+            for remote in (False, True):
+                events = ring_schedule(
+                    hops, overlap=overlap, remote_copy=remote
+                )
+                for p in check_hop_schedule(events, hops, remote_copy=remote):
+                    out.append(Finding(
+                        "overlap-schedule", "repro.parallel.collectives", 0,
+                        f"ring_schedule(hops={hops}, overlap={overlap}, "
+                        f"remote_copy={remote}): {p}",
+                    ))
+    return out
+
+
+def check_program(program, *, budget_bytes: int | None = None):
+    """Structural + VMEM feasibility problems of one StreamProgram.
+
+    Args: ``program`` — the StreamProgram to check; ``budget_bytes`` — the
+    VMEM ceiling (None = ``autotune.VMEM_BUDGET_BYTES``). Returns problem
+    strings: everything ``StreamProgram.validate(strict=True)`` reports,
+    plus an overflow entry when the double-buffered residency exceeds the
+    budget.
+    """
+    from repro.launch.autotune import VMEM_BUDGET_BYTES
+
+    budget = VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
+    problems = list(program.validate(strict=True))
+    vmem = program.vmem_bytes()
+    if vmem > budget:
+        problems.append(
+            f"{program.name}: vmem_bytes()={vmem} exceeds the "
+            f"{budget}-byte VMEM budget at default geometry"
+        )
+    return problems
+
+
+@register_rule("vmem-budget", tier="plan")
+def vmem_budget(ctx: Context) -> list[Finding]:
+    """Default block geometry fits VMEM for every suite program.
+
+    Builds each autotune suite case's StreamProgram at the registry's
+    pristine defaults (``block_defaults(op, overrides=False)``) and runs
+    ``check_program``: an op whose default geometry overflows VMEM would
+    make the autotuner's baseline un-measurable and the production default
+    un-launchable on hardware.
+    """
+    import numpy as np
+
+    from repro.kernels import registry
+    from repro.launch import autotune
+
+    out = []
+    rng = np.random.default_rng(0)
+    for op, factory in sorted(autotune.DEFAULT_SUITE.items()):
+        case = factory(rng)
+        blocks = registry.block_defaults(op, overrides=False)
+        program = case.program(blocks)
+        for p in check_program(program):
+            out.append(Finding(
+                "vmem-budget", f"repro.launch.autotune:{op}", 0, p,
+            ))
+    return out
+
+
+def check_mesh_cases(cases, mesh_shape: dict):
+    """Resolve every case's plan on one mesh; return problem strings.
+
+    Args: ``cases`` — ``(op, args, kwargs, ...)`` tuples in the
+    ``op_cases.op_roofline_cases`` format; ``mesh_shape`` — the
+    ``{axis: size}`` MeshSpec shape to resolve against. A case whose
+    ladder exhausts (plan None — silent replication) is a problem, as is a
+    resolved plan whose level sizes disagree with the mesh.
+    """
+    from repro.kernels import partition
+
+    mesh = partition.MeshSpec(dict(mesh_shape))
+    tag = "x".join(f"{a}={s}" for a, s in mesh_shape.items())
+    problems = []
+    for op, args, kwargs, *_ in cases:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            plan = partition.plan_for(op, mesh, *args, **kwargs)
+        if plan is None:
+            problems.append(
+                f"{op}: partition ladder dead-ends on mesh ({tag}) — every "
+                f"rung declined, the call silently replicates"
+            )
+            continue
+        for axis, size in plan.levels:
+            if axis not in mesh.shape:
+                problems.append(
+                    f"{op}: plan level axis {axis!r} not in mesh ({tag})"
+                )
+            elif int(mesh.shape[axis]) % size != 0:
+                problems.append(
+                    f"{op}: plan level {axis}={size} does not divide the "
+                    f"mesh axis ({tag})"
+                )
+    return problems
+
+
+@register_rule("mesh-divisibility", tier="plan")
+def mesh_divisibility(ctx: Context) -> list[Finding]:
+    """Every partitioned op plans cleanly on both production meshes.
+
+    Resolves the shared ``op_cases`` table against the single-pod 16x16
+    and two-pod 2x16x16 MeshSpecs and flags ladder dead-ends (silent
+    replication) and level/mesh size mismatches. Also a coverage gate:
+    every op with a registered PartitionRule must appear in the case
+    table, so a new partitioned op cannot dodge the check.
+    """
+    from repro.kernels import ops as _ops  # noqa: F401  (registers rules)
+    from repro.kernels import partition
+    from repro.launch.op_cases import op_roofline_cases
+
+    out = []
+    cases = op_roofline_cases()
+    covered = {c[0] for c in cases}
+    for op in partition.partitioned_ops():
+        if op not in covered:
+            out.append(Finding(
+                "mesh-divisibility", "repro.launch.op_cases", 0,
+                f"partitioned op {op!r} has no op_roofline_cases entry — "
+                f"its production-mesh plans are unchecked",
+            ))
+    for shape in PRODUCTION_MESH_SHAPES:
+        for p in check_mesh_cases(cases, shape):
+            out.append(Finding(
+                "mesh-divisibility", "repro.kernels.partition", 0, p,
+            ))
+    return out
+
+
+def check_plan(plan, mesh_shape: dict):
+    """Vocabulary problems of one resolved PartitionPlan.
+
+    Args: ``plan`` — the PartitionPlan; ``mesh_shape`` — the ``{axis:
+    size}`` shape it resolved against. Checks every level axis and every
+    ``CollectiveCost`` against the partition vocabulary: axes must be
+    mesh axes in ``AXIS_VOCAB``, kinds must be priceable by
+    ``topology.collective_seconds``, payloads non-negative, and an
+    overlappable plan must declare the hop count its pipeline amortises.
+    """
+    from repro.kernels.partition import AXIS_VOCAB
+
+    problems = []
+    name = plan.op
+    for axis, _size in plan.levels:
+        if axis not in AXIS_VOCAB:
+            problems.append(
+                f"{name}: level axis {axis!r} outside AXIS_VOCAB {AXIS_VOCAB}"
+            )
+        if axis not in mesh_shape:
+            problems.append(
+                f"{name}: level axis {axis!r} not an axis of the mesh"
+            )
+    for c in plan.collectives:
+        if c.kind not in COLLECTIVE_KINDS:
+            problems.append(
+                f"{name}: collective kind {c.kind!r} not priceable "
+                f"(known: {sorted(COLLECTIVE_KINDS)})"
+            )
+        if c.axis not in AXIS_VOCAB or c.axis not in mesh_shape:
+            problems.append(
+                f"{name}: collective over axis {c.axis!r} outside the "
+                f"mesh/vocabulary"
+            )
+        if c.nbytes < 0 or c.n < 0:
+            problems.append(
+                f"{name}: collective {c.kind} has negative nbytes/n"
+            )
+    if plan.overlappable and plan.hops < 2:
+        problems.append(
+            f"{name}: overlappable plan declares hops={plan.hops}; the "
+            f"overlap model needs >= 2 pipeline stages to hide anything"
+        )
+    return problems
+
+
+@register_rule("plan-collective-axes", tier="plan")
+def plan_collective_axes(ctx: Context) -> list[Finding]:
+    """Resolved plans only speak the partition vocabulary.
+
+    Runs ``check_plan`` on every op_cases plan over both production
+    meshes: level axes and collective-cost axes must be mesh axes from
+    ``AXIS_VOCAB``, collective kinds must be priceable, and overlap
+    metadata must be self-consistent — the contract the roofline and
+    topology layers assume without checking.
+    """
+    from repro.kernels import ops as _ops  # noqa: F401  (registers rules)
+    from repro.kernels import partition
+    from repro.launch.op_cases import op_roofline_cases
+
+    out = []
+    for shape in PRODUCTION_MESH_SHAPES:
+        mesh = partition.MeshSpec(dict(shape))
+        for op, args, kwargs, *_ in op_roofline_cases():
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                plan = partition.plan_for(op, mesh, *args, **kwargs)
+            if plan is None:
+                continue  # mesh-divisibility owns the dead-end finding
+            for p in check_plan(plan, shape):
+                out.append(Finding(
+                    "plan-collective-axes", "repro.kernels.partition", 0, p,
+                ))
+    return out

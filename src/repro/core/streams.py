@@ -141,6 +141,51 @@ class StreamProgram:
         )
         return per_step * self.steps
 
+    def validate(self, *, strict: bool = False) -> list[str]:
+        """Structural invariants of the program, as a list of problem strings
+        (empty when well-formed) — the resolve-time check ``repro.analysis``
+        runs over every registered kernel's program builder.
+
+        Always checked: the grid is a non-empty tuple of positive ints,
+        every stream's block_shape is all-positive, and ``out_shapes``
+        pairs one shape per out stream. With ``strict`` the index_map
+        arity is also checked: an AffineStream's map must accept exactly
+        one argument per grid axis (an IndirectStream's at least that many
+        — it may also read the scalar-prefetch refs). Returns problems
+        instead of raising so the analyzer can report every violation of a
+        seeded-bad program at once.
+        """
+        problems = []
+        if not self.grid or not all(
+            isinstance(g, int) and g > 0 for g in self.grid
+        ):
+            problems.append(f"grid must be positive ints, got {self.grid!r}")
+        if len(self.out_shapes) != len(self.out_streams):
+            problems.append(
+                f"{len(self.out_streams)} out_streams but "
+                f"{len(self.out_shapes)} out_shapes"
+            )
+        for role, streams in (("in", self.in_streams),
+                              ("out", self.out_streams)):
+            for i, s in enumerate(streams):
+                if not all(isinstance(b, int) and b > 0 for b in s.block_shape):
+                    problems.append(
+                        f"{role}_streams[{i}] block_shape {s.block_shape!r} "
+                        f"has a non-positive extent"
+                    )
+                if strict:
+                    code = getattr(s.index_map, "__code__", None)
+                    if code is not None and not (code.co_flags & 0x04):
+                        nargs = code.co_argcount
+                        want = len(self.grid)
+                        affine = isinstance(s, AffineStream)
+                        if (affine and nargs != want) or nargs < want:
+                            problems.append(
+                                f"{role}_streams[{i}] index_map takes "
+                                f"{nargs} args for a {want}-axis grid"
+                            )
+        return [f"{self.name}: {p}" for p in problems]
+
     def vmem_bytes(self) -> int:
         """Estimated VMEM residency of the pipelined program.
 

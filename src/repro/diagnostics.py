@@ -1,0 +1,53 @@
+"""Degrade-path diagnostics: one warning category, one emission channel.
+
+Several layers of the stack degrade gracefully instead of failing — the
+partition ladder replicates when every rung declines, ``host_device_mesh``
+shrinks an indivisible factorisation, ``remote_copy=True`` falls back to
+``ppermute`` off-TPU. Historically these spoke through inconsistent
+channels (``print`` vs bare ``warnings.warn``), which made degraded modes
+invisible to callers filtering warnings and unenforceable by tooling.
+
+This module is the single vocabulary: every degrade path warns through
+``warn_degrade`` with the ``ReproDegradeWarning`` category, so callers can
+``warnings.filterwarnings`` on exactly the degraded-mode signal and the
+``repro.analysis`` lint rule (``warn-category``) can statically verify no
+bare ``warnings.warn`` sneaks back in. Stdlib-only on purpose: launchers
+import it before jax.
+"""
+from __future__ import annotations
+
+import warnings
+
+_SEEN: set = set()
+
+
+class ReproDegradeWarning(UserWarning):
+    """A requested configuration degraded to a weaker-but-correct mode.
+
+    Examples: the partition ladder exhausted every rung and replicated, a
+    mesh factorisation shrank to the largest dividing shape, or a TPU-only
+    fast path (``remote_copy``) fell back to its portable twin. Subclasses
+    ``UserWarning`` so existing ``pytest.warns(UserWarning)`` expectations
+    keep matching.
+    """
+
+
+def warn_degrade(message: str, *, key=None, stacklevel: int = 2) -> None:
+    """Emit ``message`` as a ``ReproDegradeWarning``.
+
+    Args: ``message`` — what degraded and to what; ``key`` — when set, the
+    warning is ONE-SHOT per process for this key (hot paths like
+    ``plan_for`` call this per op call; the first degrade is signal, the
+    10^6th is noise); ``stacklevel`` — forwarded to ``warnings.warn`` so
+    the report points at the degrading caller.
+    """
+    if key is not None:
+        if key in _SEEN:
+            return
+        _SEEN.add(key)
+    warnings.warn(message, ReproDegradeWarning, stacklevel=stacklevel + 1)
+
+
+def reset_degrade_warnings() -> None:
+    """Clear the one-shot ``key`` memory (tests re-arm suppressed warnings)."""
+    _SEEN.clear()

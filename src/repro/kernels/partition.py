@@ -82,9 +82,18 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.diagnostics import warn_degrade
 from repro.kernels import registry
 from repro.parallel.collectives import hierarchical_psum
 from repro.parallel.compat import shard_map
+
+# The complete mesh-axis vocabulary the partition layer ever shards over or
+# names in a collective: the D2D pod link, the group interconnect (data),
+# and the chiplet crossbar (model). partition_levels / attention_levels
+# only ever emit these names, and the repro.analysis axis-name lint rule
+# holds every string-literal collective axis in the tree to this list — a
+# stray "modle" in a psum is a silent replication bug otherwise.
+AXIS_VOCAB = ("pod", "data", "model")
 
 
 # ---------------------------------------------------------------------------
@@ -326,7 +335,11 @@ def plan_for(op: str, mesh, *args, impl: str | None = None, **kwargs):
     on a multi-pod mesh) is offered first; each time the rule declines, the
     outermost level is dropped. Returns None — replication — when the op
     has no rule, no non-trivial level exists, or every rung fails (the
-    graceful-degradation contract shared with parallel/sharding.py).
+    graceful-degradation contract shared with parallel/sharding.py). A
+    fully exhausted ladder — a rule that declined every rung of a
+    non-trivial stack — emits a one-shot ``ReproDegradeWarning`` naming the
+    op and mesh, so silent replication is visible to callers and to the
+    ``repro.analysis`` ladder-dead-end check.
     """
     rule = _RULES.get(op)
     if rule is None:
@@ -337,11 +350,19 @@ def plan_for(op: str, mesh, *args, impl: str | None = None, **kwargs):
         if k not in PLAN_KWARGS or k in accepted
     }
     levels = _LEVEL_FNS.get(op, partition_levels)(mesh)
+    offered = levels
     while levels:
         plan = rule(levels, *args, impl=impl, **kwargs)
         if plan is not None:
             return plan
         levels = levels[1:]
+    if offered:
+        shape = "x".join(f"{a}={s}" for a, s in offered)
+        warn_degrade(
+            f"partition ladder exhausted for {op!r}: every rung of "
+            f"({shape}) declined; replicating the call on all devices",
+            key=("ladder_exhausted", op, shape),
+        )
     return None
 
 

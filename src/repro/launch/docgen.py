@@ -5,9 +5,9 @@ the live registry — per op: the registered impls, the default block
 geometry from ``registry.resolve_blocks``, and the partition rule resolved
 against both production meshes (single-pod 16×16 and two-pod 2×16×16
 device-free MeshSpecs), including its per-level collectives and halo
-metadata. The representative operand shapes are the dry-run's
-``_op_roofline_cases`` (GPT-J / Fig. 9 scale), so the doc shows the same
-plans the roofline cells cost.
+metadata. The representative operand shapes are the shared
+``launch.op_cases.op_roofline_cases`` table (GPT-J / Fig. 9 scale), so the
+doc shows the same plans the roofline cells cost.
 
 The output is deterministic (sorted ops, no timestamps); CI regenerates it
 with ``--check`` and fails on drift, so the committed doc can never lag the
@@ -80,9 +80,9 @@ def generate() -> str:
     """Render the op-reference markdown (deterministic; returns the text)."""
     from repro.kernels import ops as _ops  # noqa: F401  (registers the ops)
     from repro.kernels import partition, registry
-    from repro.launch.dryrun import _op_roofline_cases
+    from repro.launch.op_cases import op_roofline_cases
 
-    cases = {c[0]: c for c in _op_roofline_cases()}
+    cases = {c[0]: c for c in op_roofline_cases()}
     single = partition.MeshSpec({"data": 16, "model": 16})
     multi = partition.MeshSpec({"pod": 2, "data": 16, "model": 16})
 

@@ -17,6 +17,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import SHAPES, all_arch_ids, get_config, shape_applicable
 from repro.launch import roofline
 from repro.launch.mesh import make_production_mesh
+from repro.launch.op_cases import op_roofline_cases
 from repro.models import registry
 from repro.parallel import sharding as sh
 from repro.runtime import train_loop
@@ -328,60 +329,6 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     return result
 
 
-def _op_roofline_cases():
-    """Representative operand shapes per partitioned op (GPT-J / Fig. 9
-    scale), as ShapeDtypeStructs — partition plans resolve from shapes alone.
-    Returns (op, args, kwargs, flops, bytes) tuples."""
-    import numpy as np
-
-    bf2, f4 = 2, 4
-    S = jax.ShapeDtypeStruct
-    # GPT-J attention geometry at long context: Sq large enough that the
-    # per-hop ring kernel outweighs the per-hop KV transfer, so the
-    # overlapped schedule can hide the D2D term the serial model exposes
-    B, H, K, Sq, D = 1, 16, 16, 32768, 128
-    M = N = Kd = 4096  # dense GEMM
-    R = C = 4096
-    L = 32  # ELL nnz/row
-    F = 128
-    T, tbm, tbk = 512, 8, 128  # BSR tiles
-    X = Y = Z = 128
-    offs = np.array(
-        [(0, 0, 0), (1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0),
-         (0, 0, 1), (0, 0, -1)], np.int32,
-    )
-    w = np.full((len(offs),), 1.0 / len(offs), np.float32)
-    att = (S((B, H, Sq, D), jnp.bfloat16), S((B, K, Sq, D), jnp.bfloat16),
-           S((B, K, Sq, D), jnp.bfloat16))
-    la = tuple(S((B, H, Sq, 64), jnp.float32) for _ in range(4))
-    return [
-        ("gemm", (S((M, Kd), jnp.bfloat16), S((Kd, N), jnp.bfloat16)), {},
-         2 * M * Kd * N, (M * Kd + Kd * N + M * N) * bf2),
-        ("flash_attention", att, {},
-         4 * B * H * Sq * Sq * D, (B * (H + 2 * K) * Sq * D * 2) * bf2),
-        ("decode_attention",
-         (S((8, H, D), jnp.bfloat16), S((8, K, Sq, D), jnp.bfloat16),
-          S((8, K, Sq, D), jnp.bfloat16), S((8,), jnp.int32)), {},
-         4 * 8 * H * Sq * D, 8 * 2 * K * Sq * D * bf2),
-        ("linear_attention", la, {},
-         4 * B * H * Sq * 64 * 64, 4 * B * H * Sq * 64 * f4),
-        ("spmm", (S((R, L), jnp.float32), S((R, L), jnp.int32),
-                  S((C, F), jnp.float32)), {},
-         2 * R * L * F, (2 * R * L + C * F + R * F) * f4),
-        ("bsr_spmm", (S((T, tbm, tbk), jnp.float32), S((T,), jnp.int32),
-                      S((T,), jnp.int32), S((Kd, 512), jnp.float32)),
-         {"num_rows": R},
-         2 * T * tbm * tbk * 512, (T * tbm * tbk + Kd * 512 + R * 512) * f4),
-        ("spmspm", (S((R, L), jnp.float32), S((R, L), jnp.int32),
-                    S((C, L), jnp.float32), S((C, L), jnp.int32)),
-         {"contraction_dim": Kd},
-         2 * R * C * L, (4 * R * L + R * C) * f4),
-        ("stencil", (S((X, Y, Z), jnp.float32),),
-         {"offsets": offs, "weights": w},
-         2 * len(offs) * X * Y * Z, 2 * X * Y * Z * f4),
-    ]
-
-
 def op_roofline_cells(multi_pod: bool = False) -> list[dict]:
     """Per-op D2D-costed rooflines on the production mesh — the Fig. 13
     scaling story as numbers: each partitioned op's operational-intensity
@@ -405,7 +352,7 @@ def op_roofline_cells(multi_pod: bool = False) -> list[dict]:
         {"data": 16, "model": 16}
     mesh = partition.MeshSpec(shape)
     out = []
-    for op, args, kwargs, flops, nbytes in _op_roofline_cases():
+    for op, args, kwargs, flops, nbytes in op_roofline_cases():
         plan = partition.plan_for(op, mesh, *args, **kwargs)
         n = plan.n if plan else 1
         by_level = roofline.plan_collective_seconds_by_level(plan)

@@ -7,9 +7,9 @@ device state.
 """
 from __future__ import annotations
 
-import warnings
-
 import jax
+
+from repro.diagnostics import warn_degrade
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -52,10 +52,9 @@ def host_device_mesh(tp: int = 1, pods: int = 1):
     if per_pod % tp != 0:
         tp = max(t for t in range(1, min(tp, per_pod) + 1) if per_pod % t == 0)
     if (tp, pods) != (want_tp, want_pods):
-        warnings.warn(
+        warn_degrade(
             f"host_device_mesh: pods={want_pods} x tp={want_tp} does not "
             f"divide {n} devices; degrading to tp={tp}, pods={pods}",
-            stacklevel=2,
         )
     if want_pods == 1:
         return jax.make_mesh((n // tp, tp), ("data", "model"))

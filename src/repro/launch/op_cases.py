@@ -1,0 +1,74 @@
+"""Representative operand shapes per partitioned op (GPT-J / Fig. 9 scale).
+
+One table, two consumers: ``launch.dryrun --op-roofline`` prices each case's
+partition plan into D2D-costed roofline cells, and ``repro.analysis`` plan
+rules resolve the same cases against production MeshSpecs to prove mesh
+divisibility and ladder liveness. The table lives here — NOT in dryrun —
+because dryrun pins the host device count at import time
+(``ensure_host_device_count(512)``); the analyzer must stay free of that
+side effect, and partition plans resolve from ShapeDtypeStructs alone.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def op_roofline_cases() -> list[tuple]:
+    """The per-op case table, as (op, args, kwargs, flops, bytes) tuples.
+
+    Args are ``jax.ShapeDtypeStruct`` abstract values — nothing here touches
+    devices. ``flops``/``bytes`` are the analytic per-call totals the
+    roofline cells divide by the plan's device count. Every op registered in
+    ``kernels.partition``'s ladder has exactly one case; the analyzer's
+    mesh-divisibility rule iterates this list, so adding a partitioned op
+    without a case here is itself a finding.
+    """
+    import numpy as np
+
+    bf2, f4 = 2, 4
+    S = jax.ShapeDtypeStruct
+    # GPT-J attention geometry at long context: Sq large enough that the
+    # per-hop ring kernel outweighs the per-hop KV transfer, so the
+    # overlapped schedule can hide the D2D term the serial model exposes
+    B, H, K, Sq, D = 1, 16, 16, 32768, 128
+    M = N = Kd = 4096  # dense GEMM
+    R = C = 4096
+    L = 32  # ELL nnz/row
+    F = 128
+    T, tbm, tbk = 512, 8, 128  # BSR tiles
+    X = Y = Z = 128
+    offs = np.array(
+        [(0, 0, 0), (1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0),
+         (0, 0, 1), (0, 0, -1)], np.int32,
+    )
+    w = np.full((len(offs),), 1.0 / len(offs), np.float32)
+    att = (S((B, H, Sq, D), jnp.bfloat16), S((B, K, Sq, D), jnp.bfloat16),
+           S((B, K, Sq, D), jnp.bfloat16))
+    la = tuple(S((B, H, Sq, 64), jnp.float32) for _ in range(4))
+    return [
+        ("gemm", (S((M, Kd), jnp.bfloat16), S((Kd, N), jnp.bfloat16)), {},
+         2 * M * Kd * N, (M * Kd + Kd * N + M * N) * bf2),
+        ("flash_attention", att, {},
+         4 * B * H * Sq * Sq * D, (B * (H + 2 * K) * Sq * D * 2) * bf2),
+        ("decode_attention",
+         (S((8, H, D), jnp.bfloat16), S((8, K, Sq, D), jnp.bfloat16),
+          S((8, K, Sq, D), jnp.bfloat16), S((8,), jnp.int32)), {},
+         4 * 8 * H * Sq * D, 8 * 2 * K * Sq * D * bf2),
+        ("linear_attention", la, {},
+         4 * B * H * Sq * 64 * 64, 4 * B * H * Sq * 64 * f4),
+        ("spmm", (S((R, L), jnp.float32), S((R, L), jnp.int32),
+                  S((C, F), jnp.float32)), {},
+         2 * R * L * F, (2 * R * L + C * F + R * F) * f4),
+        ("bsr_spmm", (S((T, tbm, tbk), jnp.float32), S((T,), jnp.int32),
+                      S((T,), jnp.int32), S((Kd, 512), jnp.float32)),
+         {"num_rows": R},
+         2 * T * tbm * tbk * 512, (T * tbm * tbk + Kd * 512 + R * 512) * f4),
+        ("spmspm", (S((R, L), jnp.float32), S((R, L), jnp.int32),
+                    S((C, L), jnp.float32), S((C, L), jnp.int32)),
+         {"contraction_dim": Kd},
+         2 * R * C * L, (4 * R * L + R * C) * f4),
+        ("stencil", (S((X, Y, Z), jnp.float32),),
+         {"offsets": offs, "weights": w},
+         2 * len(offs) * X * Y * Z, 2 * X * Y * Z * f4),
+    ]

@@ -17,10 +17,13 @@ sequence-parallel linear-recurrence carry are both built on it.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.diagnostics import warn_degrade
 from repro.parallel.compat import shard_map
 
 # matches the flash kernels' masked-score floor: fully-masked softmax rows
@@ -119,15 +122,83 @@ def _hop_send(axis: str, n: int, remote_copy: bool):
     async-remote-copy fast path (``core.streams.remote_ring_hop``, the RDMA
     engine the SU double-buffer hands its D2D hops to) when ``remote_copy``
     is set AND the backend is a real TPU. Anywhere else the request falls
-    back to ``ppermute`` silently — the inter-chip DMA engine simply does
-    not exist on host/GPU backends, and the two paths move identical bytes.
+    back to ``ppermute`` — the inter-chip DMA engine simply does not exist
+    on host/GPU backends, and the two paths move identical bytes — with a
+    one-shot ``ReproDegradeWarning`` so the degraded overlap is visible.
     """
-    if remote_copy and jax.default_backend() == "tpu":
-        from repro.core.streams import remote_ring_hop
+    if remote_copy:
+        if jax.default_backend() == "tpu":
+            from repro.core.streams import remote_ring_hop
 
-        return lambda x: remote_ring_hop(x, axis, n)
+            return lambda x: remote_ring_hop(x, axis, n)
+        warn_degrade(
+            f"remote_copy=True requested on backend "
+            f"{jax.default_backend()!r}: no inter-chip DMA engine here, "
+            f"falling back to ppermute (identical bytes; the hop overlaps "
+            f"via XLA collective-permute scheduling instead of the SU "
+            f"double-buffer DMA)",
+            key=("remote_copy_fallback", jax.default_backend()),
+        )
     perm = _ring_fwd(n)
     return lambda x: jax.lax.ppermute(x, axis, perm)
+
+
+@dataclasses.dataclass(frozen=True)
+class HopEvent:
+    """One event of a ring hop schedule, in issue order.
+
+    Fields: ``kind`` — ``"send"`` (issue hop ``hop``'s transfer),
+    ``"dma_start"`` / ``"dma_wait"`` (the remote-copy form of a send: the
+    async DMA issue and its receive-semaphore wait), or ``"fold"`` (consume
+    hop ``hop``'s resident block into the carry); ``hop`` — the hop index
+    the event serves (``fold`` at hop t reads the block that has travelled
+    t ranks); ``src`` — the buffer id the event reads (the resident block
+    for sends and folds); ``dst`` — the buffer id a transfer lands in
+    (None for folds; ``dma_wait`` records the landing buffer it fences).
+    """
+
+    kind: str
+    hop: int
+    src: int | None = None
+    dst: int | None = None
+
+
+def ring_schedule(hops: int, *, overlap: bool = True,
+                  remote_copy: bool = False) -> tuple:
+    """The ring hop schedule as data: the exact event order ``ring_scan``
+    executes, checkable without devices.
+
+    Args: ``hops`` — fold count (``ring_scan``'s ``hops``); ``overlap`` —
+    double-buffered order (hop t+1's transfer issued BEFORE hop t's fold)
+    vs the synchronous oracle (transfer only after the fold); ``remote_copy``
+    — expand each send into its DMA pair (``dma_start`` + ``dma_wait``, the
+    ``remote_ring_hop`` semantics) so the analyzer can verify the semaphore
+    wait is ordered before the consuming fold.
+
+    Returns a tuple of ``HopEvent``. Blocks live in two alternating buffers
+    (hop t resides in buffer ``t % 2``) — the double-buffer discipline that
+    keeps hop t+1's landing buffer disjoint from the one hop t's fold still
+    reads. ``repro.analysis``'s ``overlap-schedule`` rule replays this very
+    schedule through its hazard checker; ``ring_scan`` drives its jax calls
+    off it, so the checked artifact is the executed artifact.
+    """
+    events = []
+
+    def send(t):
+        src, dst = (t - 1) % 2, t % 2
+        if remote_copy:
+            events.append(HopEvent("dma_start", t, src, dst))
+            events.append(HopEvent("dma_wait", t, None, dst))
+        else:
+            events.append(HopEvent("send", t, src, dst))
+
+    for t in range(hops):
+        if overlap and t + 1 < hops:
+            send(t + 1)
+        events.append(HopEvent("fold", t, t % 2))
+        if not overlap and t + 1 < hops:
+            send(t + 1)
+    return tuple(events)
 
 
 def ring_scan(step_fn, carry, block, axis: str, n: int, *,
@@ -158,26 +229,23 @@ def ring_scan(step_fn, carry, block, axis: str, n: int, *,
     Fires exactly ``hops - 1`` ppermutes — the block is consumed in place
     on the final hop, never sent home. Must run inside a ``shard_map``
     naming ``axis``. Returns the folded carry.
+
+    The issue order is not re-derived here: the jax calls replay
+    ``ring_schedule(hops, overlap=...)`` event by event (sends depend only
+    on the resident block, never on ``step_fn``'s result, so an
+    overlap-ordered send lets the hop fly while the kernel/merge runs).
+    ``remote_copy`` swaps the transport of each send (``_hop_send``), not
+    the event order — ``remote_ring_hop`` fuses its DMA start/wait pair
+    inside one kernel.
     """
     hops = n if hops is None else hops
     send = _hop_send(axis, n, remote_copy)
-    if not overlap:
-        # synchronous oracle: hop t+1's permute issues only after hop t's
-        # fold has consumed the resident block
-        for t in range(hops):
-            carry = step_fn(carry, block, t)
-            if t != hops - 1:
-                block = jax.tree_util.tree_map(send, block)
-        return carry
-    for t in range(hops):
-        if t != hops - 1:
-            # double-buffer: the send depends only on the resident block,
-            # not on step_fn's result — issuing it first lets the hop fly
-            # while the kernel/merge runs
-            block_next = jax.tree_util.tree_map(send, block)
-        carry = step_fn(carry, block, t)
-        if t != hops - 1:
-            block = block_next
+    buffers = {0: block}
+    for ev in ring_schedule(hops, overlap=overlap):
+        if ev.kind == "send":
+            buffers[ev.dst] = jax.tree_util.tree_map(send, buffers[ev.src])
+        else:  # fold
+            carry = step_fn(carry, buffers[ev.src], ev.hop)
     return carry
 
 

@@ -1,0 +1,9 @@
+# SEEDED VIOLATIONS (axis-name-vocabulary): collectives over axis names
+# the partition layer never produces.
+import jax
+
+
+def rowwise_sum(x):
+    total = jax.lax.psum(x, "rows")
+    me = jax.lax.axis_index("shard")
+    return total, me

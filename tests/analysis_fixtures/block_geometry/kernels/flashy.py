@@ -1,0 +1,18 @@
+# SEEDED VIOLATIONS (block-geometry-registry-only), one per line flagged:
+# a block-size integer literal in a call, private block_defaults plumbing,
+# and the REPRO_UNROLL_GRID environment escape hatch.
+
+
+def _inner(x, bk=None):
+    return x
+
+
+def flashy(x):
+    y = _inner(x, bk=512)
+    table = {"flashy": {"bk": 512}}
+
+    def block_defaults(op):
+        return table[op]
+
+    flag = "REPRO_UNROLL_GRID"
+    return y, block_defaults("flashy"), flag

@@ -1,0 +1,7 @@
+# SEEDED VIOLATION (block-geometry-registry-only): "gemm" is in the
+# fixture registry's block table but this ops.py never routes its blocks
+# through the registry's resolution helper — split-brain geometry.
+
+
+def gemm(a, b):
+    return a @ b

@@ -1,0 +1,9 @@
+# Fixture registry: one op in the block table, so the single-path coverage
+# half of block-geometry-registry-only has something to demand of ops.py.
+_BLOCK_DEFAULTS = {
+    "gemm": {"bm": 256, "bk": 256, "bn": 256},
+}
+
+
+def resolve_blocks(op, **explicit):
+    return dict(_BLOCK_DEFAULTS[op], **explicit)

@@ -1,0 +1,7 @@
+# SEEDED VIOLATION (single-pallas-site): a second pallas_call launch site
+# outside core/streams.py.
+from jax.experimental import pallas as pl
+
+
+def rogue_launch(body, x):
+    return pl.pallas_call(body, out_shape=x)(x)

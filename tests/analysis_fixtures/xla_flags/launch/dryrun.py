@@ -1,0 +1,10 @@
+# SEEDED VIOLATIONS (xla-flags-append-only): a launcher that clobbers
+# caller-set XLA_FLAGS with a bare assignment and never routes through the
+# shared append-only bootstrap helper.
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+
+def main():
+    return os.environ["XLA_FLAGS"]

@@ -177,6 +177,53 @@ def test_overlap_equivalence_8dev():
     assert {"ring_nozig_sync", "carry_ys", "carry_final"} <= set(out["exact"])
 
 
+def test_ring_scan_replays_the_published_schedule():
+    """ring_scan executes exactly the HopEvent sequence ring_schedule
+    returns — the artifact the repro.analysis overlap-schedule rule
+    checks IS the executed schedule, by construction."""
+    from repro.parallel import collectives
+
+    calls = []
+
+    def fake_send(x):
+        calls.append(("send", x))
+        return x + 100
+
+    orig = collectives._hop_send
+    collectives._hop_send = lambda axis, n, remote: fake_send
+    try:
+        folds = []
+        collectives.ring_scan(
+            lambda carry, block, t: folds.append((t, int(block))) or carry,
+            carry=0, block=0, axis="data", n=4, overlap=True,
+        )
+    finally:
+        collectives._hop_send = orig
+    # folds consumed hops 0..3 in order, each reading the t-hops-rotated
+    # block (one +100 per hop), exactly as the schedule prescribes
+    assert folds == [(0, 0), (1, 100), (2, 200), (3, 300)]
+    assert len(calls) == 3  # n-1 transfers, issued one hop ahead
+
+
+def test_remote_copy_fallback_warns_once():
+    """remote_copy=True off-TPU degrades to ppermute with one (and only
+    one) ReproDegradeWarning — never a silent transport swap."""
+    import warnings
+
+    from repro.diagnostics import ReproDegradeWarning, reset_degrade_warnings
+    from repro.parallel import collectives
+
+    reset_degrade_warnings()
+    try:
+        with pytest.warns(ReproDegradeWarning, match="falling back to ppermute"):
+            collectives._hop_send("data", 4, True)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # one-shot: second call is silent
+            collectives._hop_send("data", 4, True)
+    finally:
+        reset_degrade_warnings()
+
+
 # ---------------------------------------------------------------------------
 # Autotune warm start: roofline-prior ordering + trial budget
 # ---------------------------------------------------------------------------

@@ -244,29 +244,18 @@ def test_flash_attention_explicit_bk_same_result_across_impls(rng):
 
 
 def test_block_resolution_single_path():
-    """Grep-style invariant: ops.py carries no block-size literals; every
-    block-tabled op resolves through registry.resolve_blocks; no kernel impl
-    module keeps private block_defaults plumbing OR an environment-variable
-    escape hatch (the REPRO_UNROLL_GRID regression: the unrolled flash path
-    derived bq/bk from a raw env var, bypassing the registry)."""
-    import inspect
-    import pathlib
-    import re
+    """Single-path invariant, now owned by the static checker: ops.py
+    carries no block-size literals, every block-tabled op resolves through
+    registry.resolve_blocks, and no kernel impl module keeps private
+    block_defaults plumbing or an environment escape hatch (the
+    REPRO_UNROLL_GRID regression). Positive coverage — proof the rules
+    actually fire — lives in tests/test_analysis.py."""
+    from repro.analysis import run_rules
 
-    src = inspect.getsource(ops)
-    assert not re.search(r"\b(block_k|bq|bk|bm|bn|bf|bx|bs|chunk)\s*=\s*\d", src)
-    for op in registry._BLOCK_DEFAULTS:
-        assert f'resolve_blocks("{op}"' in src, op
-    kdir = pathlib.Path(ops.__file__).parent
-    for mod in ("gemm", "flash_attention", "spmm", "spmspm", "stencil",
-                "rwkv6", "xla"):
-        text = (kdir / f"{mod}.py").read_text()
-        assert "block_defaults" not in text, mod
-        # block geometry never comes from the environment: only the
-        # registry (whose own REPRO_KERNEL_IMPL is impl selection, not
-        # geometry) may read os.environ
-        assert "os.environ" not in text, mod
-        assert "REPRO_UNROLL_GRID" not in text, mod
+    findings = run_rules(
+        ["block-geometry-registry-only", "no-environ-in-kernels"]
+    )
+    assert findings == [], "\n".join(f.format() for f in findings)
 
 
 def test_unrolled_flash_blocks_route_through_registry(rng):
@@ -429,25 +418,21 @@ def test_launchers_append_xla_flags(monkeypatch):
 
 
 def test_launchers_never_assign_xla_flags_directly():
-    """Grep-style invariant over both launcher sources: XLA_FLAGS is only
-    ever APPENDED via the shared bootstrap, never assigned a fresh literal
-    (the clobber pattern that silently discarded user flags)."""
+    """XLA_FLAGS is only ever APPENDED via the shared bootstrap, never
+    assigned a fresh literal (the clobber pattern that silently discarded
+    user flags) — enforced tree-wide by the static checker's
+    xla-flags-append-only rule; this wrapper keeps the invariant in the
+    tier-1 suite."""
     import pathlib
-    import re
 
-    import repro.launch.dryrun as dr
+    from repro.analysis import run_rules
 
-    ldir = pathlib.Path(dr.__file__).parent
-    clobber = re.compile(r"os\.environ\[.XLA_FLAGS.\]\s*=\s*[\"'f]")
-    bench_run = ldir.parent.parent.parent / "benchmarks" / "run.py"
-    for name, path in (("dryrun", ldir / "dryrun.py"),
-                       ("hillclimb", ldir / "hillclimb.py"),
-                       ("benchmarks.run", bench_run)):
-        text = path.read_text()
-        assert not clobber.search(text), name
-        assert "ensure_host_device_count" in text, name
+    findings = run_rules(["xla-flags-append-only"])
+    assert findings == [], "\n".join(f.format() for f in findings)
     # the one place that may write the variable is the append-only helper
-    helper = (ldir / "xla_flags.py").read_text()
+    import repro.launch.xla_flags as xf
+
+    helper = pathlib.Path(xf.__file__).read_text()
     assert "existing" in helper and "_DEVICE_FLAG" in helper
 
 
@@ -571,13 +556,9 @@ def test_stream_compute_multi_output(rng):
 
 
 def test_no_pallas_call_outside_streams():
-    """The substrate invariant: core/streams.py is the only pallas_call site."""
-    import pathlib
+    """The substrate invariant: core/streams.py is the only pallas_call
+    site — enforced by the static checker's single-pallas-site rule."""
+    from repro.analysis import run_rules
 
-    root = pathlib.Path(__file__).resolve().parents[1] / "src"
-    offenders = [
-        p
-        for p in root.rglob("*.py")
-        if "pallas_call" in p.read_text() and p.name != "streams.py"
-    ]
-    assert not offenders, offenders
+    findings = run_rules(["single-pallas-site"])
+    assert findings == [], "\n".join(f.format() for f in findings)

@@ -1,0 +1,111 @@
+"""Fig. 10 precision ladder: GFLOP/s + numerics per policy x op x impl.
+
+Sweeps the ``core.precision`` policies through the scaled kernel paths of
+every op that grew one (gemm, flash_attention, decode_attention) on both
+CPU-runnable impls (xla blocked forms, interpret-mode Pallas). Each row
+reports the measured CPU GFLOP/s, the modeled per-policy TPU peak
+(``precision.peak_flops`` — the flop ceiling the dry-run roofline sweep
+prices cells against), and the numerics: ``max_err`` / ``rel_err`` against
+the fp32 oracle on the SAME operands, so the accuracy cost of each rung of
+the width ladder sits next to its throughput claim.
+
+The committed ``BENCH_precision.json`` baseline is produced by::
+
+    PYTHONPATH=src python -m benchmarks.bench_precision --json BENCH_precision.json
+
+CI re-asserts the ladder's modeled ordering from that file without
+devices: the fp8 gemm row's ``flops_s`` must be >= 2x the bf16 row's.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit_json, row, timeit
+from repro.core import precision
+from repro.kernels import ops, ref
+
+POLICY_NAMES = ("fp32", "bf16", "fp8", "fp8_e5m2")
+IMPLS = ("xla", "interpret")
+
+
+def _err(got, want) -> tuple[float, float]:
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    max_err = float(np.max(np.abs(got - want)))
+    rel = float(
+        np.linalg.norm(got - want) / max(np.linalg.norm(want), 1e-30)
+    )
+    return max_err, rel
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    m = k = n = 256
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+    B, H, K, S, D = 1, 4, 4, 128, 64
+    q = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+    kf = jnp.asarray(rng.standard_normal((B, K, S, D)), jnp.float32)
+    vf = jnp.asarray(rng.standard_normal((B, K, S, D)), jnp.float32)
+
+    Bd, Sd = 2, 256
+    qd = jnp.asarray(rng.standard_normal((Bd, H, D)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((Bd, K, Sd, D)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((Bd, K, Sd, D)), jnp.float32)
+    pos = jnp.full((Bd,), Sd - 1, jnp.int32)
+
+    cases = [
+        ("gemm", 2 * m * k * n,
+         ref.gemm_ref(a, b, jnp.float32),
+         lambda pol, impl: lambda *xs: ops.gemm(
+             *xs, precision=pol, impl=impl),
+         (a, b)),
+        ("flash_attention", 4 * B * H * S * S * D,
+         ref.mha_ref(q, kf, vf, causal=True),
+         lambda pol, impl: lambda *xs: ops.flash_attention(
+             *xs, causal=True, precision=pol, impl=impl),
+         (q, kf, vf)),
+        ("decode_attention", 4 * Bd * H * Sd * D,
+         ref.decode_attention_ref(qd, kc, vc, pos),
+         lambda pol, impl: lambda *xs: ops.decode_attention(
+             *xs, precision=pol, impl=impl),
+         (qd, kc, vc, pos)),
+    ]
+
+    for op, flops, oracle, make, operands in cases:
+        for pol in POLICY_NAMES:
+            peak = precision.peak_flops(pol)
+            for impl in IMPLS:
+                fn = make(pol, impl)
+                if impl == "xla":
+                    fn = jax.jit(fn)
+                t = timeit(fn, *operands, reps=3)
+                max_err, rel = _err(fn(*operands), oracle)
+                row(
+                    f"precision_{op}_{pol}_{impl}", t,
+                    f"{flops / t / 1e9:.2f} GFLOP/s;"
+                    f"peak={peak / 1e12:.0f}TFLOP/s;max_err={max_err:.2e}",
+                    op=op, impl=impl, precision=pol, flops=flops,
+                    flops_s=peak, measured_flops_s=flops / t,
+                    max_err=max_err, rel_err=rel,
+                )
+
+
+def main(argv=None) -> None:
+    """CLI: run the sweep; ``--json PATH`` also writes the structured rows
+    (the committed ``BENCH_precision.json`` baseline)."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run()
+    if args.json:
+        emit_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -170,10 +170,11 @@ def main(argv=None) -> None:
                 return finish()
 
         from benchmarks import (bench_d2d, bench_gcn, bench_gemm, bench_gptj,
-                                bench_spmm, bench_spmspm, bench_stencil)
+                                bench_precision, bench_spmm, bench_spmspm,
+                                bench_stencil)
 
-        for mod in (bench_gemm, bench_stencil, bench_spmm, bench_spmspm,
-                    bench_gcn, bench_gptj, bench_d2d):
+        for mod in (bench_gemm, bench_precision, bench_stencil, bench_spmm,
+                    bench_spmspm, bench_gcn, bench_gptj, bench_d2d):
             mod.run()
         finish()
 

@@ -16,6 +16,9 @@ very programs ``stream_compute`` launches.
                        production meshes (no silent-replication dead end)
   plan-collective-axes plan levels and collective costs stay inside the
                        mesh/vocabulary/kind vocabularies
+  accum-dtype-widening every suite program streaming sub-fp32 floating
+                       operands declares an fp32+ accumulator (scratch or
+                       out stream) — the expanding-accumulation contract
 
 The ``check_*`` helpers are the public seam: rules call them over the
 live substrate, tests call them over seeded-bad inputs.
@@ -168,6 +171,24 @@ def check_program(program, *, budget_bytes: int | None = None):
     return problems
 
 
+def _suite_programs():
+    """Yield ``(suite_name, program)`` for every ``autotune.full_suite()``
+    case's StreamProgram at the registry's pristine default geometry —
+    the shared sweep of the vmem-budget and accum-dtype-widening rules
+    (``full_suite`` so the policy-scoped scaled-path programs are swept
+    too, under their ``op@policy`` suite names)."""
+    import numpy as np
+
+    from repro.kernels import registry
+    from repro.launch import autotune
+
+    rng = np.random.default_rng(0)
+    for name, factory in sorted(autotune.full_suite().items()):
+        case = factory(rng)
+        blocks = registry.block_defaults(case.op, overrides=False)
+        yield name, case.program(blocks)
+
+
 @register_rule("vmem-budget", tier="plan")
 def vmem_budget(ctx: Context) -> list[Finding]:
     """Default block geometry fits VMEM for every suite program.
@@ -178,20 +199,76 @@ def vmem_budget(ctx: Context) -> list[Finding]:
     make the autotuner's baseline un-measurable and the production default
     un-launchable on hardware.
     """
-    import numpy as np
-
-    from repro.kernels import registry
-    from repro.launch import autotune
-
     out = []
-    rng = np.random.default_rng(0)
-    for op, factory in sorted(autotune.DEFAULT_SUITE.items()):
-        case = factory(rng)
-        blocks = registry.block_defaults(op, overrides=False)
-        program = case.program(blocks)
+    for name, program in _suite_programs():
         for p in check_program(program):
             out.append(Finding(
-                "vmem-budget", f"repro.launch.autotune:{op}", 0, p,
+                "vmem-budget", f"repro.launch.autotune:{name}", 0, p,
+            ))
+    return out
+
+
+def check_accum_widening(program):
+    """Expanding-accumulation problems of one StreamProgram.
+
+    A program streaming sub-fp32 *floating* operands (fp8/bf16 values)
+    must carry the running sum at fp32 or wider — the paper's widening
+    sum-dot-product contract (C6/Fig. 10): narrow-format throughput is
+    only usable when the accumulator does not saturate. Structurally that
+    means at least one fp32+ floating landing site: a VMEM scratch (the
+    blocked kernels' accumulator) or an fp32+ out stream (single-pass
+    kernels that write widened results directly). Integer streams (index
+    operands) and full-width programs are exempt. Returns problem strings.
+    """
+    import jax.numpy as jnp
+
+    def _floating(dt):
+        return dt is not None and jnp.issubdtype(jnp.dtype(dt), jnp.floating)
+
+    def _width(dt):
+        return jnp.dtype(dt).itemsize
+
+    narrow = [
+        s for s in program.in_streams
+        if _floating(s.dtype) and _width(s.dtype) < 4
+    ]
+    if not narrow:
+        return []
+    wide_scratch = any(
+        _floating(getattr(s, "dtype", None)) and _width(s.dtype) >= 4
+        for s in program.scratch
+    )
+    wide_out = any(
+        _floating(s.dtype) and _width(s.dtype) >= 4
+        for s in program.out_streams
+    )
+    if wide_scratch or wide_out:
+        return []
+    widths = sorted({str(jnp.dtype(s.dtype)) for s in narrow})
+    return [
+        f"{program.name}: streams sub-fp32 floating operands ({', '.join(widths)}) "
+        f"but declares no fp32+ accumulator — no floating scratch or out "
+        f"stream is >= 4 bytes wide, so the expanding accumulation the "
+        f"narrow format requires has nowhere to live"
+    ]
+
+
+@register_rule("accum-dtype-widening", tier="plan")
+def accum_dtype_widening(ctx: Context) -> list[Finding]:
+    """Sub-fp32 suite programs declare a full-width accumulator.
+
+    Runs ``check_accum_widening`` over every ``autotune.full_suite()``
+    program (which includes the policy-scoped scaled-path cases): a
+    low-precision kernel whose StreamProgram carries neither an fp32+
+    scratch nor an fp32+ out stream would accumulate in the narrow format
+    and saturate — exactly the failure mode the precision ladder's
+    expanding accumulation exists to prevent.
+    """
+    out = []
+    for name, program in _suite_programs():
+        for p in check_accum_widening(program):
+            out.append(Finding(
+                "accum-dtype-widening", f"repro.launch.autotune:{name}", 0, p,
             ))
     return out
 

@@ -5,10 +5,24 @@ accumulation. TPU analogue: fp32 -> bf16 -> fp8 on the MXU, with
 ``preferred_element_type`` providing the expanding accumulate. FP64 has no MXU
 support (DESIGN.md §6.3): fp32 is the top precision and the Fig. 10 sweep maps
 to fp32/bf16/fp8.
+
+A ``Precision`` is a *policy*: compute dtype (stream/operand width), accum
+dtype (the expanding accumulator a kernel must carry at full width), flop
+multiplier (MXU throughput relative to bf16), and ``scale_block`` — the
+per-block scaling granularity for narrow formats. fp8's dynamic range is too
+small to carry raw activations, so fp8 policies quantize per contiguous block
+of ``scale_block`` elements along the contraction axis: operands travel as
+(values, fp32 per-block scales) and kernels rescale inside the fp32
+accumulator. bf16/fp32 set ``scale_block=0`` — unit scales, plain casts.
+
+Policies ride ``ops.*`` signatures as ``precision=None`` keywords (next to
+``impl=`` and block overrides); ``None`` is the exact legacy full-precision
+path. ``resolve`` is the single name->policy seam every consumer shares.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -22,20 +36,128 @@ class Precision:
     compute_dtype: jnp.dtype
     accum_dtype: jnp.dtype  # the EXPanding accumulator
     flop_multiplier: float  # MXU throughput relative to bf16
+    scale_block: int = 0  # per-block scale granularity; 0 = unit scales
 
 
 POLICIES = {
     # paper analogue:            FP64            FP32/FP16 EXP    FP8 EXP
     "fp32": Precision("fp32", jnp.float32, jnp.float32, 0.5),
     "bf16": Precision("bf16", jnp.bfloat16, jnp.float32, 1.0),
-    "fp8": Precision("fp8", jnp.float8_e4m3fn, jnp.float32, 2.0),
-    "fp8_e5m2": Precision("fp8_e5m2", jnp.float8_e5m2, jnp.float32, 2.0),
+    "fp8": Precision("fp8", jnp.float8_e4m3fn, jnp.float32, 2.0, 128),
+    "fp8_e5m2": Precision(
+        "fp8_e5m2", jnp.float8_e5m2, jnp.float32, 2.0, 128
+    ),
 }
+
+# which policies each op's low-precision path supports — the docgen source
+# for the op-reference "precisions" column. Ops absent here run fp32-only
+# (their kernels never grew a scaled path).
+SUPPORTED_OPS = {
+    "gemm": ("fp32", "bf16", "fp8", "fp8_e5m2"),
+    "flash_attention": ("fp32", "bf16", "fp8", "fp8_e5m2"),
+    "decode_attention": ("fp32", "bf16", "fp8", "fp8_e5m2"),
+}
+
+
+def supported_policies(op: str) -> tuple[str, ...]:
+    """Policy names ``op``'s kernels accept via ``precision=`` (fp32-only
+    ops — no scaled path — report just ``("fp32",)``)."""
+    return SUPPORTED_OPS.get(op, ("fp32",))
+
+
+def resolve(policy) -> Precision | None:
+    """Normalize a ``precision=`` argument: None passes through (the legacy
+    full-precision path), a name looks up ``POLICIES``, a ``Precision``
+    returns itself. Unknown names raise KeyError listing the known ones."""
+    if policy is None or isinstance(policy, Precision):
+        return policy
+    try:
+        return POLICIES[policy]
+    except KeyError:
+        raise KeyError(
+            f"unknown precision policy {policy!r}; known: {sorted(POLICIES)}"
+        ) from None
 
 
 def peak_flops(policy: str | Precision) -> float:
     p = POLICIES[policy] if isinstance(policy, str) else policy
     return PEAK_FLOPS_BF16 * p.flop_multiplier
+
+
+def quantize_blockwise(x, policy, *, axis: int = -1, block: int | None = None):
+    """Quantize ``x`` to (values, scales) with one fp32 scale per contiguous
+    ``block`` elements along ``axis`` (the contraction axis).
+
+    ``block`` defaults to the policy's ``scale_block`` (whole-axis when 0).
+    Policies with ``scale_block == 0`` (bf16/fp32) return unit scales — a
+    plain cast — so every consumer handles narrow and wide formats through
+    one code path. Scales are ``amax / finfo(compute).max`` per block
+    (zero-amax blocks get scale 1.0 so dequantization is exact on zeros);
+    values are ``x / scale`` cast to the compute dtype. ``scales`` has
+    ``x``'s shape with ``axis`` shrunk to ``ceil(n / block)``.
+    """
+    p = resolve(policy)
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    if block is None:
+        block = p.scale_block or n
+    block = max(1, min(block, n))
+    nb = math.ceil(n / block)
+    xf = jnp.asarray(x, jnp.float32)
+    pad = nb * block - n
+    if pad:
+        pad_widths = [(0, 0)] * x.ndim
+        pad_widths[axis] = (0, pad)
+        xpad = jnp.pad(xf, pad_widths)
+    else:
+        xpad = xf
+    grouped = jnp.moveaxis(xpad, axis, -1).reshape(
+        *[xpad.shape[d] for d in range(x.ndim) if d != axis], nb, block
+    )
+    if p.scale_block > 0:
+        amax = jnp.max(jnp.abs(grouped), axis=-1)
+        fmax = float(jnp.finfo(p.compute_dtype).max)
+        scales = jnp.where(amax > 0, amax / fmax, 1.0).astype(jnp.float32)
+    else:
+        scales = jnp.ones(grouped.shape[:-1], jnp.float32)
+    scaled = grouped / scales[..., None]
+    values = jnp.moveaxis(
+        scaled.reshape(*scales.shape[:-1], scales.shape[-1] * block),
+        -1, axis,
+    )
+    if pad:
+        values = jax.lax.slice_in_dim(values, 0, n, axis=axis)
+    values = values.astype(p.compute_dtype)
+    scales = jnp.moveaxis(scales, -1, axis)
+    return values, scales
+
+
+def dequantize_blockwise(values, scales, *, axis: int = -1,
+                         block: int | None = None):
+    """Inverse of ``quantize_blockwise``: fp32 reconstruction. Pass the
+    same ``block`` quantization used; when omitted it is inferred as
+    ``ceil(n / nb)`` — exact whenever the block count is 1 or divides the
+    axis, ambiguous otherwise (a ragged final block), so callers that
+    quantized with an explicit block must dequantize with it too."""
+    axis = axis % values.ndim
+    n = values.shape[axis]
+    nb = scales.shape[axis]
+    if block is None:
+        block = math.ceil(n / nb)
+    # element i reads scale block min(i // block, nb - 1)
+    idx = jnp.minimum(jnp.arange(n) // block, nb - 1)
+    expanded = jnp.take(scales, idx, axis=axis)
+    return values.astype(jnp.float32) * expanded
+
+
+def quantize_kv_cache(k, v, policy):
+    """Quantize a (B, K, S, D) KV cache per row over the head dimension:
+    fp8 values + fp32 (B, K, S, 1) scales — the serving-engine cache layout
+    where each cached token's key/value carries one scale."""
+    p = resolve(policy)
+    kq, ks = quantize_blockwise(k, p, axis=-1, block=k.shape[-1])
+    vq, vs = quantize_blockwise(v, p, axis=-1, block=v.shape[-1])
+    return kq, ks, vq, vs
 
 
 def cast_gemm_operands(a: jax.Array, b: jax.Array, policy: str | Precision):

@@ -55,11 +55,19 @@ def zigzag_inverse(S: int, d: int) -> np.ndarray:
 
 
 def _fa_kernel(
-    q_ref, k_ref, v_ref, o_ref, *refs,
+    q_ref, k_ref, v_ref, *refs,
     scale, causal, window, q_offset, sk, bq, bk, nk, return_lse,
+    scaled=False,
 ):
-    # refs is the (m, l, acc) scratch — preceded by the lse out-ref when
-    # the program was built with return_lse (out refs bind before scratch)
+    # scaled programs bind three per-row fp32 scale streams after v; then
+    # the o out-ref; refs ends with the (m, l, acc) scratch — preceded by
+    # the lse out-ref when the program was built with return_lse (out refs
+    # bind before scratch)
+    if scaled:
+        qs_ref, ks_ref, vs_ref, *refs = refs
+    else:
+        qs_ref = ks_ref = vs_ref = None
+    o_ref, *refs = refs
     lse_ref, (m_ref, l_ref, acc_ref) = (
         (refs[0], refs[1:]) if return_lse else (None, refs)
     )
@@ -86,8 +94,15 @@ def _fa_kernel(
         run = jnp.logical_and(run, in_window)
 
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32) * scale
+        # dequantize at use: narrow values ride the streams, the rescale
+        # happens inside the fp32 block compute (widening accumulation)
+        q = q_ref[0, 0].astype(jnp.float32)
+        if qs_ref is not None:
+            q = q * qs_ref[0, 0]
+        q = q * scale
         k = k_ref[0, 0].astype(jnp.float32)
+        if ks_ref is not None:
+            k = k * ks_ref[0, 0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (bq, bk)
@@ -103,9 +118,11 @@ def _fa_kernel(
         p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        vblk = v_ref[0, 0].astype(jnp.float32)
+        if vs_ref is not None:
+            vblk = vblk * vs_ref[0, 0]
         acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
-            p, v_ref[0, 0].astype(jnp.float32),
-            preferred_element_type=jnp.float32,
+            p, vblk, preferred_element_type=jnp.float32,
         )
         m_ref[...] = m_new
 
@@ -127,41 +144,60 @@ def _fa_kernel(
 
 def flash_attention_program(
     B, H, G, Sqp, D, nq, nk, bq, bk, dtype, k_dtype, v_dtype,
-    *, scale, causal, window, q_offset, sk, return_lse=False,
+    *, scale, causal, window, q_offset, sk, return_lse=False, scaled=False,
 ) -> StreamProgram:
     """FA-2 as a stream program: q/o stream over (b, h, iq); the k/v streams
     revisit the shared KV head h//G — the GQA index map. ``return_lse``
     adds a second (B, H, Sqp) fp32 output stream carrying the per-row
-    log-sum-exp (the ring-attention merge statistic)."""
+    log-sum-exp (the ring-attention merge statistic). ``scaled`` adds
+    three per-row fp32 scale streams (q, k, v) riding the same index maps
+    as their value streams — the quantized-operand path."""
     body = functools.partial(
         _fa_kernel, scale=scale, causal=causal, window=window,
         q_offset=q_offset, sk=sk, bq=bq, bk=bk, nk=nk, return_lse=return_lse,
+        scaled=scaled,
     )
     kv_stream = lambda dt: AffineStream(
         (1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0), dtype=dt
     )
-    out_streams = [
+    in_streams = [
         AffineStream(
             (1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0), dtype=dtype
         ),
+        kv_stream(k_dtype),
+        kv_stream(v_dtype),
     ]
-    out_shapes = [jax.ShapeDtypeStruct((B, H, Sqp, D), dtype)]
+    if scaled:
+        in_streams.append(AffineStream(
+            (1, 1, bq, 1), lambda b, h, i, j: (b, h, i, 0),
+            dtype=jnp.float32,
+        ))
+        in_streams.extend(
+            AffineStream(
+                (1, 1, bk, 1), lambda b, h, i, j: (b, h // G, j, 0),
+                dtype=jnp.float32,
+            )
+            for _ in range(2)
+        )
+    out_streams = [
+        AffineStream(
+            (1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0),
+            dtype=jnp.float32 if scaled else dtype
+        ),
+    ]
+    out_shapes = [jax.ShapeDtypeStruct(
+        (B, H, Sqp, D), jnp.float32 if scaled else dtype
+    )]
     if return_lse:
         out_streams.append(AffineStream(
             (1, 1, bq), lambda b, h, i, j: (b, h, i), dtype=jnp.float32
         ))
         out_shapes.append(jax.ShapeDtypeStruct((B, H, Sqp), jnp.float32))
     return StreamProgram(
-        name="flash_attention",
+        name="flash_attention_scaled" if scaled else "flash_attention",
         body=body,
         grid=(B, H, nq, nk),
-        in_streams=(
-            AffineStream(
-                (1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0), dtype=dtype
-            ),
-            kv_stream(k_dtype),
-            kv_stream(v_dtype),
-        ),
+        in_streams=tuple(in_streams),
         out_streams=tuple(out_streams),
         out_shapes=tuple(out_shapes),
         scratch=(
@@ -208,6 +244,61 @@ def flash_attention_pallas(
         return_lse=return_lse,
     )
     out = stream_compute(program, q, k, v, interpret=interpret)
+    if return_lse:
+        o, lse = out
+        return o[:, :, :Sq], lse[:, :, :Sq]
+    return out[:, :, :Sq]
+
+
+def flash_attention_scaled_pallas(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, K, Sk, D)
+    v: jax.Array,
+    precision,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    scale: float | None = None,
+    bq: int | None = None,
+    bk: int | None = None,
+    return_lse: bool = False,
+    interpret: bool = False,
+):
+    """Low-precision FA-2: operands quantized per row over D (one fp32
+    scale per (b, h, s) position — the KV-cache layout), values streamed
+    narrow, dequantized inside the fp32 block compute."""
+    from repro.core import precision as prec
+
+    p = prec.resolve(precision)
+    B, H, Sq, D = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    blocks = resolve_blocks("flash_attention", bq=bq, bk=bk)
+    bq = min(blocks["bq"], Sq)
+    bk = min(blocks["bk"], Sk)
+    pq, pk_ = (-Sq) % bq, (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk_:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk_), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk_), (0, 0)))
+    nq, nk = (Sq + pq) // bq, (Sk + pk_) // bk
+
+    qq, q_scale = prec.quantize_blockwise(q, p, axis=-1, block=D)
+    kq, k_scale = prec.quantize_blockwise(k, p, axis=-1, block=D)
+    vq, v_scale = prec.quantize_blockwise(v, p, axis=-1, block=D)
+
+    program = flash_attention_program(
+        B, H, G, Sq + pq, D, nq, nk, bq, bk,
+        p.compute_dtype, p.compute_dtype, p.compute_dtype,
+        scale=scale, causal=causal, window=window, q_offset=q_offset, sk=Sk,
+        return_lse=return_lse, scaled=True,
+    )
+    out = stream_compute(
+        program, qq, kq, vq, q_scale, k_scale, v_scale, interpret=interpret
+    )
     if return_lse:
         o, lse = out
         return o[:, :, :Sq], lse[:, :, :Sq]

@@ -91,3 +91,103 @@ def gemm_pallas(
     )
     out = stream_compute(program, a, b, interpret=interpret)
     return out[:M, :N]
+
+
+def _gemm_scaled_kernel(
+    a_ref, b_ref, as_ref, bs_ref, o_ref, acc_ref, *, nk: int
+):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # the narrow dot runs at compute-dtype MXU rate; per-block scales enter
+    # the fp32 accumulator as a rank-1 outer product (bm,1) x (1,bn)
+    part = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=acc_ref.dtype
+    )
+    acc_ref[...] += part * (as_ref[...] * bs_ref[...])
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm_scaled_program(
+    Mp: int, Np: int, Kp: int, bm: int, bn: int, bk: int,
+    *, compute_dtype, out_dtype, accum_dtype,
+) -> StreamProgram:
+    """Per-block scaled GEMM: the value streams carry the compute dtype and
+    two extra fp32 streams carry one scale per (row, K-block) of A and per
+    (K-block, col) of B — Occamy's narrow-operand path with the widening
+    accumulator holding the rescale."""
+    nk = Kp // bk
+    return StreamProgram(
+        name="gemm_scaled",
+        body=functools.partial(_gemm_scaled_kernel, nk=nk),
+        grid=(Mp // bm, Np // bn, nk),
+        in_streams=(
+            AffineStream((bm, bk), lambda i, j, k: (i, k),
+                         dtype=compute_dtype),
+            AffineStream((bk, bn), lambda i, j, k: (k, j),
+                         dtype=compute_dtype),
+            AffineStream((bm, 1), lambda i, j, k: (i, k),
+                         dtype=jnp.float32),
+            AffineStream((1, bn), lambda i, j, k: (k, j),
+                         dtype=jnp.float32),
+        ),
+        out_streams=(
+            AffineStream((bm, bn), lambda i, j, k: (i, j), dtype=out_dtype),
+        ),
+        out_shapes=(jax.ShapeDtypeStruct((Mp, Np), out_dtype),),
+        scratch=(pltpu.VMEM((bm, bn), accum_dtype),),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+    )
+
+
+def gemm_scaled_pallas(
+    a: jax.Array,  # (M, K)
+    b: jax.Array,  # (K, N)
+    precision,
+    *,
+    out_dtype=None,
+    accum_dtype=jnp.float32,
+    bm: int | None = None,
+    bk: int | None = None,
+    bn: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Low-precision GEMM: quantize per K-block of size ``bk`` (so one
+    scale covers exactly one streamed tile), run the scaled StreamProgram,
+    accumulate fp32."""
+    from repro.core import precision as prec
+
+    p = prec.resolve(precision)
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    out_dtype = out_dtype or jnp.float32
+    blocks = resolve_blocks("gemm", bm=bm, bk=bk, bn=bn)
+    bm = min(blocks["bm"], M)
+    bk = min(blocks["bk"], K)
+    bn = min(blocks["bn"], N)
+
+    pm, pk, pn = (-M) % bm, (-K) % bk, (-N) % bn
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    Mp, Kp, Np = M + pm, K + pk, N + pn
+
+    # quantize after padding: Kp % bk == 0 so scale blocks align with tiles
+    aq, a_scale = prec.quantize_blockwise(a, p, axis=1, block=bk)
+    bq, b_scale = prec.quantize_blockwise(b, p, axis=0, block=bk)
+
+    program = gemm_scaled_program(
+        Mp, Np, Kp, bm, bn, bk,
+        compute_dtype=p.compute_dtype, out_dtype=out_dtype,
+        accum_dtype=accum_dtype,
+    )
+    out = stream_compute(
+        program, aq, bq, a_scale, b_scale, interpret=interpret
+    )
+    return out[:M, :N]

@@ -75,20 +75,48 @@ unrolled_inner = registry.unroll_inner
 # ---------------------------------------------------------------------------
 
 
-def gemm(a, b, *, out_dtype=None, accum_dtype=jnp.float32, impl=None,
-         mesh=None, bm=None, bk=None, bn=None):
+def gemm(a, b, *, out_dtype=None, accum_dtype=jnp.float32, precision=None,
+         impl=None, mesh=None, bm=None, bk=None, bn=None):
+    """C = A @ B with widening accumulation.
+
+    ``precision`` selects a low-precision policy (``core.precision``): the
+    operands are quantized per K-block to the policy's compute dtype, the
+    narrow dot runs at the scaled MXU rate, and the per-block fp32 scales
+    rescale inside the fp32 accumulator. ``None`` is the exact legacy
+    full-precision path — byte-identical dispatch, no quantization."""
+    precision = _resolve_precision(precision)
     blocks = resolve_blocks("gemm", bm=bm, bk=bk, bn=bn)
     return _dispatch(
         "gemm", a, b, out_dtype=out_dtype, accum_dtype=accum_dtype,
-        mesh=mesh, impl=impl, **blocks,
+        mesh=mesh, impl=impl, **_precision_kwargs(precision), **blocks,
     )
+
+
+def _resolve_precision(precision):
+    if precision is None:
+        return None
+    from repro.core import precision as _prec
+
+    return _prec.resolve(precision)
+
+
+def _precision_kwargs(precision):
+    # precision rides dispatch only when set, so impls and rules without a
+    # scaled path never see the kwarg (the PLAN_KWARGS signature-filter
+    # discipline) and the None path stays byte-identical to the legacy one
+    return {} if precision is None else {"precision": precision}
 
 
 @registry.register_stream_kernel("gemm")
 def _gemm_stream(a, b, *, out_dtype=None, accum_dtype=jnp.float32,
-                 bm=None, bk=None, bn=None, interpret=False):
+                 precision=None, bm=None, bk=None, bn=None, interpret=False):
     from repro.kernels import gemm as _gemm
 
+    if precision is not None:
+        return _gemm.gemm_scaled_pallas(
+            a, b, precision, out_dtype=out_dtype, accum_dtype=accum_dtype,
+            bm=bm, bk=bk, bn=bn, interpret=interpret,
+        )
     return _gemm.gemm_pallas(
         a, b, out_dtype=out_dtype, accum_dtype=accum_dtype,
         bm=bm, bk=bk, bn=bn, interpret=interpret,
@@ -96,9 +124,24 @@ def _gemm_stream(a, b, *, out_dtype=None, accum_dtype=jnp.float32,
 
 
 @registry.register_kernel("gemm", impl="xla")
+def _gemm_xla(a, b, *, out_dtype=None, accum_dtype=jnp.float32,
+              precision=None, bm=None, bk=None, bn=None):
+    if precision is not None:
+        return _xla.gemm_scaled_xla(
+            a, b, precision, out_dtype=out_dtype, accum_dtype=accum_dtype,
+            bm=bm, bk=bk, bn=bn,
+        )
+    return _ref.gemm_ref(a, b, out_dtype=out_dtype, accum_dtype=accum_dtype)
+
+
 @registry.register_kernel("gemm", impl="ref")
 def _gemm_ref(a, b, *, out_dtype=None, accum_dtype=jnp.float32,
-              bm=None, bk=None, bn=None):
+              precision=None, bm=None, bk=None, bn=None):
+    if precision is not None:
+        return _ref.gemm_scaled_ref(
+            a, b, precision, out_dtype=out_dtype, accum_dtype=accum_dtype,
+            bk=bk,
+        )
     return _ref.gemm_ref(a, b, out_dtype=out_dtype, accum_dtype=accum_dtype)
 
 
@@ -108,9 +151,9 @@ def _gemm_ref(a, b, *, out_dtype=None, accum_dtype=jnp.float32,
 
 
 def flash_attention(
-    q, k, v, *, causal=True, window=0, q_offset=0, scale=None, impl=None,
-    mesh=None, bq=None, bk=None, block_k=None, return_lse=False,
-    overlap=True, zigzag=True, remote_copy=False,
+    q, k, v, *, causal=True, window=0, q_offset=0, scale=None,
+    precision=None, impl=None, mesh=None, bq=None, bk=None, block_k=None,
+    return_lse=False, overlap=True, zigzag=True, remote_copy=False,
 ):
     """q: (B,H,Sq,D); k,v: (B,K,Sk,D). Returns (B,H,Sq,D).
 
@@ -129,6 +172,11 @@ def flash_attention(
     TPU backends. ``overlap=False`` + ``zigzag=False`` is the synchronous
     contiguous-chunk oracle. Numerics are unchanged either way.
 
+    ``precision`` quantizes q/k/v per row over D (fp8/bf16 values + fp32
+    per-row scales); the scaled kernels dequantize inside the fp32 block
+    compute, so only the operand streams narrow. Scaled attention always
+    returns fp32.
+
     ``block_k`` is the historical spelling of ``bk``; both resolve through
     the registry, so an explicit argument and ``set_block_override`` reach
     the pallas and xla impls identically.
@@ -139,20 +187,27 @@ def flash_attention(
                 f"flash_attention: bk={bk} and its alias block_k={block_k} disagree"
             )
         bk = block_k
+    precision = _resolve_precision(precision)
     blocks = resolve_blocks("flash_attention", bq=bq, bk=bk)
     return _dispatch(
         "flash_attention", q, k, v, causal=causal, window=window,
         q_offset=q_offset, scale=scale, return_lse=return_lse, mesh=mesh,
         impl=impl, overlap=overlap, zigzag=zigzag, remote_copy=remote_copy,
-        **blocks,
+        **_precision_kwargs(precision), **blocks,
     )
 
 
 @registry.register_stream_kernel("flash_attention")
-def _fa_stream(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None,
-               return_lse=False, interpret=False):
+def _fa_stream(q, k, v, *, causal, window, q_offset, scale, precision=None,
+               bq=None, bk=None, return_lse=False, interpret=False):
     from repro.kernels import flash_attention as _fa
 
+    if precision is not None:
+        return _fa.flash_attention_scaled_pallas(
+            q, k, v, precision, causal=causal, window=window,
+            q_offset=q_offset, scale=scale, bq=bq, bk=bk,
+            return_lse=return_lse, interpret=interpret,
+        )
     return _fa.flash_attention_pallas(
         q, k, v, causal=causal, window=window, q_offset=q_offset,
         scale=scale, bq=bq, bk=bk, return_lse=return_lse, interpret=interpret,
@@ -160,8 +215,14 @@ def _fa_stream(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None,
 
 
 @registry.register_kernel("flash_attention", impl="xla")
-def _fa_xla(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None,
-            return_lse=False):
+def _fa_xla(q, k, v, *, causal, window, q_offset, scale, precision=None,
+            bq=None, bk=None, return_lse=False):
+    if precision is not None:
+        return _xla.flash_attention_scaled_xla(
+            q, k, v, precision, causal=causal, window=window,
+            q_offset=q_offset, scale=scale, bq=bq, bk=bk,
+            return_lse=return_lse,
+        )
     return _xla.flash_attention_xla(
         q, k, v, causal=causal, window=window, q_offset=q_offset,
         scale=scale, bq=bq, bk=bk, return_lse=return_lse,
@@ -169,28 +230,40 @@ def _fa_xla(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None,
 
 
 @registry.register_kernel("flash_attention", impl="ref")
-def _fa_ref(q, k, v, *, causal, window, q_offset, scale, bq=None, bk=None,
-            return_lse=False):
+def _fa_ref(q, k, v, *, causal, window, q_offset, scale, precision=None,
+            bq=None, bk=None, return_lse=False):
+    if precision is not None:
+        return _ref.mha_scaled_ref(
+            q, k, v, precision, causal=causal, window=window,
+            q_offset=q_offset, scale=scale, return_lse=return_lse,
+        )
     return _ref.mha_ref(
         q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale,
         return_lse=return_lse,
     )
 
 
-def decode_attention(q, k, v, position, *, window=0, scale=None, impl=None,
-                     mesh=None, bs=None):
-    """Single-token attention against a cache. Linear in cache length."""
+def decode_attention(q, k, v, position, *, window=0, scale=None,
+                     precision=None, impl=None, mesh=None, bs=None):
+    """Single-token attention against a cache. Linear in cache length.
+
+    ``precision`` holds the KV cache quantized — narrow values plus one
+    fp32 scale per cached row (``core.precision.quantize_kv_cache``) —
+    and dequantizes each streamed block at use: the serving path where the
+    cache dominates HBM footprint and decode is purely memory-bound."""
+    precision = _resolve_precision(precision)
     blocks = resolve_blocks("decode_attention", bs=bs)
     return _dispatch(
         "decode_attention", q, k, v, position, window=window, scale=scale,
-        mesh=mesh, impl=impl, **blocks,
+        mesh=mesh, impl=impl, **_precision_kwargs(precision), **blocks,
     )
 
 
 @registry.register_kernel("decode_attention", impl="xla")
-def _decode_xla(q, k, v, position, *, window, scale, bs=None):
+def _decode_xla(q, k, v, position, *, window, scale, precision=None, bs=None):
     return _xla.decode_attention_xla(
-        q, k, v, position, window=window, scale=scale, bs=bs
+        q, k, v, position, window=window, scale=scale, bs=bs,
+        precision=precision,
     )
 
 
@@ -199,7 +272,11 @@ def _decode_xla(q, k, v, position, *, window, scale, bs=None):
 @registry.register_kernel("decode_attention", impl="pallas")
 @registry.register_kernel("decode_attention", impl="interpret")
 @registry.register_kernel("decode_attention", impl="ref")
-def _decode_ref(q, k, v, position, *, window, scale, bs=None):
+def _decode_ref(q, k, v, position, *, window, scale, precision=None, bs=None):
+    if precision is not None:
+        return _ref.decode_attention_scaled_ref(
+            q, k, v, position, precision=precision, window=window, scale=scale
+        )
     return _ref.decode_attention_ref(q, k, v, position, window=window,
                                      scale=scale)
 

@@ -471,22 +471,40 @@ def _per_level_psum_costs(levels, shape, dtype) -> tuple:
 
 @register_partition_rule("gemm")
 def _gemm_rule(levels, a, b, *, impl=None, out_dtype=None,
-               accum_dtype=jnp.float32, **blocks):
+               accum_dtype=jnp.float32, precision=None, **blocks):
     """K-sharded GEMM with a hierarchical psum epilogue (the paper's split-K
     over the chiplet axis; on a multi-pod mesh the intra-pod psum runs
     before the cross-pod psum so the D2D link moves one buffer per pod);
-    M-row sharding when K resists; the level ladder handles the rest."""
+    M-row sharding when K resists; the level ladder handles the rest.
+
+    Each shard quantizes its own K-slab under a ``precision`` policy, so
+    the per-block scales compose with the sharding by construction (no
+    scale arrays cross the shard_map boundary). Sub-fp32 policies also
+    narrow the psum payload to bf16 — the ``optim/compression.py``
+    error-feedback reduction dtype — halving the D2D bytes the collective
+    moves (the intra-shard accumulate stays fp32; only the cross-device
+    partial rides narrow)."""
+    from repro.core import precision as _prec
+
+    precision = _prec.resolve(precision)
     M, K = a.shape
     N = b.shape[1]
-    out_dtype = out_dtype or a.dtype
+    out_dtype = out_dtype or (
+        jnp.float32 if precision is not None else a.dtype
+    )
     n = _ntot(levels)
     ax = _joint(levels)
+    pk = {} if precision is None else {"precision": precision}
+    reduce_dtype = accum_dtype
+    if (precision is not None
+            and jnp.dtype(precision.compute_dtype).itemsize < 4):
+        reduce_dtype = jnp.bfloat16
 
     if K % n == 0:
         def local(a_l, b_l):
             part = registry.kernel_call(
-                "gemm", a_l, b_l, out_dtype=accum_dtype,
-                accum_dtype=accum_dtype, impl=impl, **blocks,
+                "gemm", a_l, b_l, out_dtype=reduce_dtype,
+                accum_dtype=accum_dtype, impl=impl, **pk, **blocks,
             )
             return hierarchical_psum(part, levels).astype(out_dtype)
 
@@ -495,16 +513,18 @@ def _gemm_rule(levels, a, b, *, impl=None, out_dtype=None,
             in_specs=(P(None, ax), P(ax, None)),
             out_specs=P(None, None),
             local_fn=local,
-            collectives=_per_level_psum_costs(levels, (M, N), accum_dtype),
+            collectives=_per_level_psum_costs(levels, (M, N), reduce_dtype),
             note=f"k-sharded ({K}/{n} per device over {_levels_note(levels)})"
-                 ", psum epilogue",
+                 ", psum epilogue"
+                 + (f", {jnp.dtype(reduce_dtype).name} reduce"
+                    if reduce_dtype != accum_dtype else ""),
         )
 
     if M % n == 0:
         def local(a_l, b_l):
             return registry.kernel_call(
                 "gemm", a_l, b_l, out_dtype=out_dtype,
-                accum_dtype=accum_dtype, impl=impl, **blocks,
+                accum_dtype=accum_dtype, impl=impl, **pk, **blocks,
             )
 
         return PartitionPlan(
@@ -561,8 +581,8 @@ def _attn_head_ok(heads, count: int):
 
 @register_partition_rule("flash_attention", levels=attention_levels)
 def _flash_rule(levels, q, k, v, *, impl=None, causal=True, window=0,
-                q_offset=0, scale=None, return_lse=False, overlap=True,
-                zigzag=True, remote_copy=False, **blocks):
+                q_offset=0, scale=None, precision=None, return_lse=False,
+                overlap=True, zigzag=True, remote_copy=False, **blocks):
     """The attention family's composed rule: GQA head sharding × a ``data``
     level carrying either the batch or the sequence.
 
@@ -609,6 +629,10 @@ def _flash_rule(levels, q, k, v, *, impl=None, causal=True, window=0,
 
     B, H, Sq, _ = q.shape
     K, Sk = k.shape[1], k.shape[2]
+    # precision quantizes per shard (and per ring hop) inside the impls:
+    # each device scales its own rows over D, so no scale arrays ever
+    # cross the shard_map boundary and the composition is automatic
+    pk = {} if precision is None else {"precision": precision}
     heads, data, batch_ok = _attn_levels_split(levels, B)
     head_ok = _attn_head_ok(heads, K)
     if head_ok is None:
@@ -638,7 +662,7 @@ def _flash_rule(levels, q, k, v, *, impl=None, causal=True, window=0,
             return registry.kernel_call(
                 "flash_attention", q_l, k_l, v_l, causal=causal,
                 window=window, q_offset=q_offset, scale=scale,
-                return_lse=return_lse, impl=impl, **blocks,
+                return_lse=return_lse, impl=impl, **pk, **blocks,
             )
 
         if batch_ok:
@@ -682,7 +706,7 @@ def _flash_rule(levels, q, k, v, *, impl=None, causal=True, window=0,
                     o_t, lse_t = registry.kernel_call(
                         "flash_attention", q_l, k_b, v_b, causal=True,
                         window=0, q_offset=0, scale=scale,
-                        return_lse=True, impl=impl, **blocks,
+                        return_lse=True, impl=impl, **pk, **blocks,
                     )
                     return online_softmax_merge(o, lse, o_t, lse_t)
                 # hop t>0: the resident KV left rank s = me - t (mod d).
@@ -699,7 +723,7 @@ def _flash_rule(levels, q, k, v, *, impl=None, causal=True, window=0,
                 o_full, lse_full = registry.kernel_call(
                     "flash_attention", q_tail, k_head, v_head,
                     causal=False, window=0, q_offset=0, scale=scale,
-                    return_lse=True, impl=impl, **blocks,
+                    return_lse=True, impl=impl, **pk, **blocks,
                 )
                 o_sel, lse_sel = registry.kernel_call(
                     "flash_attention",
@@ -707,7 +731,7 @@ def _flash_rule(levels, q, k, v, *, impl=None, causal=True, window=0,
                     jnp.where(up, k_head, k_tail),
                     jnp.where(up, v_head, v_tail),
                     causal=False, window=0, q_offset=0, scale=scale,
-                    return_lse=True, impl=impl, **blocks,
+                    return_lse=True, impl=impl, **pk, **blocks,
                 )
                 # head rows: up-ranks take the sel partial, down-ranks none
                 o_h = jnp.where(up, o_sel.astype(jnp.float32), 0.0)
@@ -755,7 +779,7 @@ def _flash_rule(levels, q, k, v, *, impl=None, causal=True, window=0,
                 o_t, lse_t = registry.kernel_call(
                     "flash_attention", q_l, k_b, v_b, causal=causal,
                     window=window, q_offset=q_offset + t * c, scale=scale,
-                    return_lse=True, impl=impl, **blocks,
+                    return_lse=True, impl=impl, **pk, **blocks,
                 )
                 if bounded and t:
                     # ranks me < t hold a wrapped (future) KV chunk this

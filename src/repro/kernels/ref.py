@@ -23,6 +23,42 @@ def gemm_ref(a: jax.Array, b: jax.Array, out_dtype=None, accum_dtype=jnp.float32
     return acc.astype(out_dtype)
 
 
+def gemm_scaled_ref(a, b, precision, *, out_dtype=None,
+                    accum_dtype=jnp.float32, bk=None):
+    """Scaled-GEMM oracle: quantize both operands per K-block exactly as
+    the production kernels do, dequantize to fp32, and matmul — the ground
+    truth the blocked scaled impls (which never materialize the fp32
+    dequantized operands) must match bit-for-bit up to reassociation."""
+    from repro.core import precision as prec
+    from repro.kernels import registry
+
+    p = prec.resolve(precision)
+    K = a.shape[1]
+    bk = min(registry.resolve_blocks("gemm", bk=bk)["bk"], K)
+    af = prec.dequantize_blockwise(
+        *prec.quantize_blockwise(a, p, axis=1, block=bk), axis=1, block=bk
+    )
+    bf = prec.dequantize_blockwise(
+        *prec.quantize_blockwise(b, p, axis=0, block=bk), axis=0, block=bk
+    )
+    return gemm_ref(af, bf, out_dtype or jnp.float32, accum_dtype)
+
+
+def mha_scaled_ref(q, k, v, precision, **kwargs):
+    """Scaled-attention oracle: per-row quantize/dequantize of q/k/v over
+    the head dimension, then the exact softmax oracle ``mha_ref``."""
+    from repro.core import precision as prec
+
+    p = prec.resolve(precision)
+    deq = []
+    for x in (q, k, v):
+        vals, scales = prec.quantize_blockwise(
+            x, p, axis=-1, block=x.shape[-1]
+        )
+        deq.append(prec.dequantize_blockwise(vals, scales, axis=-1))
+    return mha_ref(*deq, **kwargs)
+
+
 # ---------------------------------------------------------------------------
 # Attention (paper Sec. V-C: FlashAttention-2 inside GPT-J)
 # ---------------------------------------------------------------------------
@@ -94,6 +130,17 @@ def decode_attention_ref(
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
     return o.reshape(B, H, D).astype(q.dtype)
+
+
+def decode_attention_scaled_ref(q, k, v, position, *, precision, **kwargs):
+    """Quantized-KV-cache decode oracle: quantize the cache per row exactly
+    as the serving path does, dequantize, and run the exact oracle."""
+    from repro.core import precision as prec
+
+    kq, ks, vq, vs = prec.quantize_kv_cache(k, v, precision)
+    kf = prec.dequantize_blockwise(kq, ks, axis=-1)
+    vf = prec.dequantize_blockwise(vq, vs, axis=-1)
+    return decode_attention_ref(q, kf, vf, position, **kwargs)
 
 
 # ---------------------------------------------------------------------------

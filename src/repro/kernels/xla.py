@@ -17,6 +17,54 @@ from repro.kernels import registry
 
 
 # ---------------------------------------------------------------------------
+# Per-block scaled GEMM (the narrow-precision path)
+# ---------------------------------------------------------------------------
+
+
+def gemm_scaled_xla(a, b, precision, *, out_dtype=None,
+                    accum_dtype=jnp.float32, bm=None, bk=None, bn=None):
+    """Blocked per-block scaled GEMM in jnp: the same (values, scales)
+    dataflow as ``gemm.gemm_scaled_pallas`` — quantize per K-block of size
+    ``bk``, run the narrow dot per block, rescale inside the fp32
+    accumulator — expressed as a scan over K blocks so it lowers anywhere.
+    """
+    from repro.core import precision as prec
+
+    p = prec.resolve(precision)
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    out_dtype = out_dtype or jnp.float32
+    bk = min(registry.resolve_blocks("gemm", bm=bm, bk=bk, bn=bn)["bk"], K)
+    pad = (-K) % bk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    Kp = K + pad
+    nk = Kp // bk
+
+    aq, a_scale = prec.quantize_blockwise(a, p, axis=1, block=bk)
+    bq, b_scale = prec.quantize_blockwise(b, p, axis=0, block=bk)
+    ab = jnp.moveaxis(aq.reshape(M, nk, bk), 1, 0)  # (nk, M, bk)
+    bb = bq.reshape(nk, bk, N)
+
+    def body(acc, xs):
+        ablk, bblk, asc, bsc = xs
+        part = jnp.dot(ablk, bblk, preferred_element_type=accum_dtype)
+        return acc + part * (asc[:, None] * bsc[None, :]), None
+
+    acc0 = jnp.zeros((M, N), accum_dtype)
+    xs = (ab, bb, jnp.moveaxis(a_scale, 1, 0), b_scale)
+    if registry.unroll_inner_enabled():
+        acc = acc0
+        for i in range(nk):
+            acc, _ = body(acc, jax.tree.map(lambda x: x[i], xs))
+    else:
+        acc, _ = jax.lax.scan(body, acc0, xs)
+    return acc.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
 # FlashAttention-2 (forward)
 # ---------------------------------------------------------------------------
 
@@ -154,7 +202,31 @@ def _flash_attention_xla_unrolled(q, k, v, *, causal, window, q_offset, scale,
     return o, lse
 
 
-def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None):
+def flash_attention_scaled_xla(q, k, v, precision, *, causal=True, window=0,
+                               q_offset=0, scale=None, bq=None, bk=None,
+                               return_lse=False):
+    """Low-precision FA-2 in jnp: per-row quantize/dequantize of q/k/v (one
+    fp32 scale per (b, h, s) row over D), then the unchanged blocked
+    online-softmax scan. The quantization error is in operand storage only
+    — the algorithm and its fp32 accumulation are identical to
+    ``flash_attention_xla``, matching the Pallas kernel's dequantize-at-use
+    dataflow."""
+    from repro.core import precision as prec
+
+    p = prec.resolve(precision)
+    deq = []
+    for x in (q, k, v):
+        vals, scales = prec.quantize_blockwise(x, p, axis=-1,
+                                               block=x.shape[-1])
+        deq.append(prec.dequantize_blockwise(vals, scales, axis=-1))
+    return flash_attention_xla(
+        deq[0], deq[1], deq[2], causal=causal, window=window,
+        q_offset=q_offset, scale=scale, bq=bq, bk=bk, return_lse=return_lse,
+    )
+
+
+def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None,
+                         precision=None):
     """Blocked single-token attention against a cache (online softmax over
     cache blocks, the memory-bound decode form GPT-J hits every step).
 
@@ -162,26 +234,47 @@ def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None):
     instead of the ref form's O(B*H*S) score matrix — mirroring the C4
     double-buffered cache-tile traffic. ``bs`` resolves through the registry
     (explicit > override > default) like every other block parameter.
+
+    ``precision`` enables the quantized-cache serving path: the KV cache is
+    held as narrow values plus one fp32 scale per cached (b, k, s) row
+    (``precision.quantize_kv_cache``), each streamed block is dequantized
+    at use inside the fp32 online softmax — the cache's HBM footprint and
+    stream traffic shrink by the compute dtype's width ratio.
     """
     B, H, D = q.shape
     K, S = k.shape[1], k.shape[2]
     G = H // K
     scale = scale if scale is not None else 1.0 / np.sqrt(D)
     bs = min(registry.resolve_blocks("decode_attention", bs=bs)["bs"], S)
+    k_scale = v_scale = None
+    if precision is not None:
+        from repro.core import precision as prec
+
+        k, k_scale, v, v_scale = prec.quantize_kv_cache(k, v, precision)
     pad = (-S) % bs
     if pad:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad), (0, 0)))
     nb = (S + pad) // bs
     qf = (q.astype(jnp.float32) * scale).reshape(B, K, G, D)
-    kb = jnp.moveaxis(k.reshape(B, K, nb, bs, D), 2, 0)
-    vb = jnp.moveaxis(v.reshape(B, K, nb, bs, D), 2, 0)
+    blk = lambda x, d: jnp.moveaxis(x.reshape(B, K, nb, bs, d), 2, 0)
+    kb, vb = blk(k, D), blk(v, D)
+    ksb = blk(k_scale, 1) if k_scale is not None else jnp.zeros((nb,))
+    vsb = blk(v_scale, 1) if v_scale is not None else jnp.zeros((nb,))
     NEG = jnp.float32(-1e30)
 
     def body(carry, xs):
         m, l, acc = carry
-        kblk, vblk, bidx = xs
-        s = jnp.einsum("bkgd,bksd->bkgs", qf, kblk.astype(jnp.float32))
+        kblk, vblk, ksblk, vsblk, bidx = xs
+        kf = kblk.astype(jnp.float32)
+        vf = vblk.astype(jnp.float32)
+        if k_scale is not None:  # dequantize the cache block at use
+            kf = kf * ksblk
+            vf = vf * vsblk
+        s = jnp.einsum("bkgd,bksd->bkgs", qf, kf)
         idx = bidx * bs + jnp.arange(bs)[None, :]  # (1, bs) absolute positions
         mask = (idx < S) & (idx <= position[:, None])
         if window:
@@ -192,9 +285,7 @@ def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None):
         p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
         corr = jnp.exp(m - m_new)
         l = l * corr + p.sum(axis=-1)
-        acc = acc * corr[..., None] + jnp.einsum(
-            "bkgs,bksd->bkgd", p, vblk.astype(jnp.float32)
-        )
+        acc = acc * corr[..., None] + jnp.einsum("bkgs,bksd->bkgd", p, vf)
         return (m_new, l, acc), None
 
     m0 = jnp.full((B, K, G), NEG)
@@ -203,11 +294,13 @@ def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None):
     if registry.unroll_inner_enabled():
         carry = (m0, l0, acc0)
         for i in range(nb):
-            carry, _ = body(carry, (kb[i], vb[i], jnp.int32(i)))
+            carry, _ = body(
+                carry, (kb[i], vb[i], ksb[i], vsb[i], jnp.int32(i))
+            )
         m, l, acc = carry
     else:
         (m, l, acc), _ = jax.lax.scan(
-            body, (m0, l0, acc0), (kb, vb, jnp.arange(nb))
+            body, (m0, l0, acc0), (kb, vb, ksb, vsb, jnp.arange(nb))
         )
     o = acc / jnp.maximum(l, 1e-30)[..., None]
     return o.reshape(B, H, D).astype(q.dtype)

@@ -75,7 +75,12 @@ class TuneCase:
     uses; ``plan_kwargs`` — extra keyword operands the op's PartitionRule
     needs to resolve a plan (e.g. ``num_rows`` for bsr_spmm, ``offsets`` /
     ``weights`` for stencil); ``mesh`` — the mesh the case is tuned under
-    (None for single-device tuning; set by ``autotune``, not by factories).
+    (None for single-device tuning; set by ``autotune``, not by factories);
+    ``precision`` — the ``core.precision`` policy NAME the case dispatches
+    under (None = the legacy full-precision path). Timings of the scaled
+    kernel are not evidence about the unscaled one (different stream
+    count, operand widths, and rescale epilogue), so the policy joins the
+    record key and gates ``apply_record``.
     """
 
     op: str
@@ -85,6 +90,7 @@ class TuneCase:
     program: Callable[[dict[str, int]], StreamProgram]
     plan_kwargs: dict = dataclasses.field(default_factory=dict)
     mesh: Any = None
+    precision: str | None = None
 
 
 def mesh_tag(mesh) -> str | None:
@@ -119,18 +125,25 @@ def local_case_shapes(case: TuneCase, impl: str) -> tuple:
     return partition.local_operand_structs(plan, case.mesh, case.args)
 
 
-def case_key(op: str, arrays, backend: str, impl: str) -> str:
-    """Record key for one tuning entry: ``op|shapes:dtypes|backend|impl``.
+def case_key(op: str, arrays, backend: str, impl: str,
+             precision: str | None = None) -> str:
+    """Record key for one tuning entry: ``op|shapes:dtypes|backend|impl``
+    (``|precision`` appended for policy-scoped entries).
 
     Args: ``op`` — op name; ``arrays`` — the operands whose shape/dtype
     identify the tuned kernel geometry (pass the *local shard* structs when
     tuning under a mesh — see ``local_case_shapes``); ``backend`` /
-    ``impl`` — the jax backend and registry impl the timings belong to.
+    ``impl`` — the jax backend and registry impl the timings belong to;
+    ``precision`` — the policy name for scaled-path cases. The dispatch
+    operands of a scaled case are the same fp32 arrays as the legacy case
+    (quantization happens inside the impl), so without the suffix the two
+    would collide on one record entry.
     """
     shapes = ",".join(
         f"{'x'.join(map(str, a.shape))}:{a.dtype}" for a in arrays
     )
-    return f"{op}|{shapes}|{backend}|{impl}"
+    key = f"{op}|{shapes}|{backend}|{impl}"
+    return key if precision is None else f"{key}|{precision}"
 
 
 def _time_call(fn, args, *, reps: int, warmup: int = 1) -> float:
@@ -259,6 +272,7 @@ def autotune_case(
             best = t
     return {
         "op": case.op,
+        "precision": case.precision,
         "blocks": best["blocks"] if best else defaults,
         "us_per_call": best["us_per_call"] if best else None,
         "default_blocks": defaults,
@@ -493,6 +507,56 @@ DEFAULT_SUITE: dict[str, Callable] = {
 }
 
 
+def _gemm_precision_case(policy: str) -> Callable:
+    """Factory-of-factory for the policy-scoped gemm cases: same operand
+    geometry as ``_gemm_case`` but dispatched with ``precision=policy``,
+    feasibility-probed through ``gemm_scaled_program`` (whose narrow value
+    streams plus fp32 scale streams give the analytic prune and the
+    roofline warm-start prior per-policy traffic, not fp32 traffic)."""
+
+    def factory(rng) -> TuneCase:
+        from repro.core import precision as prec
+        from repro.kernels.gemm import gemm_scaled_program
+
+        p = prec.resolve(policy)
+        m = k = n = 256
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+        def program(bl):
+            bm, bk, bn = min(bl["bm"], m), min(bl["bk"], k), min(bl["bn"], n)
+            return gemm_scaled_program(
+                m + (-m) % bm, n + (-n) % bn, k + (-k) % bk, bm, bn, bk,
+                compute_dtype=p.compute_dtype, out_dtype=jnp.float32,
+                accum_dtype=p.accum_dtype,
+            )
+
+        return TuneCase(
+            "gemm", (a, b),
+            lambda a, b, mesh=None: ops.gemm(a, b, precision=p, mesh=mesh),
+            [{"bm": s, "bk": s, "bn": s} for s in (64, 128, 256)], program,
+            plan_kwargs={"precision": p}, precision=p.name,
+        )
+
+    return factory
+
+
+# policy-scoped cases: the scaled gemm path tuned under fp8 and bf16. Kept
+# out of DEFAULT_SUITE so existing records and the CI smoke stay stable;
+# ``full_suite()`` is the merged table the analyzer sweeps.
+PRECISION_SUITE: dict[str, Callable] = {
+    "gemm@fp8": _gemm_precision_case("fp8"),
+    "gemm@bf16": _gemm_precision_case("bf16"),
+}
+
+
+def full_suite() -> dict[str, Callable]:
+    """DEFAULT_SUITE plus the policy-scoped PRECISION_SUITE cases — the
+    complete factory table the CLI searches and the ``repro.analysis``
+    plan rules (vmem-budget, accum-dtype-widening) sweep."""
+    return {**DEFAULT_SUITE, **PRECISION_SUITE}
+
+
 # ---------------------------------------------------------------------------
 # Record: search, persist, deterministic re-apply
 # ---------------------------------------------------------------------------
@@ -545,7 +609,8 @@ def autotune(
             case, budget_bytes=budget_bytes, reps=reps,
             trial_budget=trial_budget, time_candidate=time_candidate,
         )
-        key = case_key(case.op, local_case_shapes(case, impl), backend, impl)
+        key = case_key(case.op, local_case_shapes(case, impl), backend, impl,
+                       precision=case.precision)
         entries[key] = entry
     return {
         "version": RECORD_VERSION,
@@ -593,14 +658,21 @@ def record_matches_environment(record: dict, *, mesh: Any = None) -> bool:
 
 
 def apply_record(record: dict, *, force: bool = False,
-                 mesh: Any = None) -> dict[str, dict[str, int]]:
+                 mesh: Any = None,
+                 precision: str | None = None) -> dict[str, dict[str, int]]:
     """Write every recorded winner through ``registry.set_block_override``
     (deterministic: no timing, no search).
 
     Args: ``record`` — a dict from ``autotune``/``load_record``; ``force``
     — skip the environment check; ``mesh`` — the mesh this session
     dispatches kernels over (None for single-device), matched against the
-    record's tuned mesh. Returns {op: blocks} applied.
+    record's tuned mesh; ``precision`` — apply only entries tuned under
+    this policy name (None = the legacy full-precision entries). The
+    registry's block-override table has no precision axis, so a session
+    must pick which policy's winners drive it: an fp8-tuned geometry is
+    measured through the scaled kernel and is not evidence about the
+    unscaled one (and vice versa) — entries never cross-apply.
+    Returns {op: blocks} applied.
 
     Raises if the record was tuned for a different backend/impl/mesh than
     the one currently dispatching — applying it would silently mistune, the
@@ -616,6 +688,8 @@ def apply_record(record: dict, *, force: bool = False,
         )
     applied = {}
     for entry in record["entries"].values():
+        if entry.get("precision") != precision:
+            continue
         blocks = {k: int(v) for k, v in entry["blocks"].items()}
         registry.set_block_override(entry["op"], **blocks)
         applied[entry["op"]] = blocks
@@ -635,7 +709,10 @@ def record_deltas(record: dict) -> dict[str, dict]:
             if tuned is not None and default
             else None
         )
-        out[entry["op"]] = {
+        name = entry["op"]
+        if entry.get("precision"):
+            name = f"{name}@{entry['precision']}"
+        out[name] = {
             "blocks": entry["blocks"],
             "default_blocks": entry["default_blocks"],
             "us_per_call": tuned,
@@ -655,7 +732,9 @@ def main(argv=None) -> None:
     )
     ap.add_argument("--out", default="autotune_record.json")
     ap.add_argument("--ops", default=None,
-                    help=f"comma-separated subset of {sorted(DEFAULT_SUITE)}")
+                    help="comma-separated subset of "
+                         f"{sorted(full_suite())} (``op@policy`` names are "
+                         "the precision-scoped scaled-path cases)")
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--budget-bytes", type=int, default=VMEM_BUDGET_BYTES)
     ap.add_argument("--budget", type=int, default=None, metavar="N",
@@ -671,7 +750,7 @@ def main(argv=None) -> None:
     with registry.default_impl(args.impl):
         record = autotune(
             subset, budget_bytes=args.budget_bytes, reps=args.reps,
-            trial_budget=args.budget,
+            trial_budget=args.budget, suite=full_suite(),
         )
     save_record(record, args.out)
     print(f"wrote {args.out}")

@@ -78,6 +78,7 @@ def _overlap_cell(plan) -> str:
 
 def generate() -> str:
     """Render the op-reference markdown (deterministic; returns the text)."""
+    from repro.core import precision
     from repro.kernels import ops as _ops  # noqa: F401  (registers the ops)
     from repro.kernels import partition, registry
     from repro.launch.op_cases import op_roofline_cases
@@ -88,14 +89,23 @@ def generate() -> str:
 
     lines = [HEADER]
     lines.append("## Dispatch table\n")
-    lines.append("| op | impls | default blocks |")
-    lines.append("|---|---|---|")
+    lines.append("| op | impls | default blocks | precisions |")
+    lines.append("|---|---|---|---|")
     for op in registry.registered_ops():
         impls = ", ".join(registry.implementations(op))
         blocks = registry.resolve_blocks(op)
         blocks_s = ", ".join(f"{k}={v}" for k, v in sorted(blocks.items()))
-        lines.append(f"| `{op}` | {impls} | {blocks_s} |")
+        precs = ", ".join(precision.supported_policies(op))
+        lines.append(f"| `{op}` | {impls} | {blocks_s} | {precs} |")
     lines.append("")
+    lines.append(
+        "The precisions column lists the `core/precision.py` policies each "
+        "op's kernels accept via `precision=` (fp32 is the `precision=None` "
+        "legacy path; everything else dispatches the block-scaled "
+        "quantized kernels — see the precision ladder section in "
+        "[ARCHITECTURE.md](../ARCHITECTURE.md)). Ops listing only fp32 "
+        "have no scaled path.\n"
+    )
 
     for mesh, title, tag in (
         (single, "Partitioning on the single-pod mesh (`data=16, model=16`)",

@@ -329,7 +329,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     return result
 
 
-def op_roofline_cells(multi_pod: bool = False) -> list[dict]:
+def op_roofline_cells(multi_pod: bool = False, precision=None) -> list[dict]:
     """Per-op D2D-costed rooflines on the production mesh — the Fig. 13
     scaling story as numbers: each partitioned op's operational-intensity
     figures gain a ``topology.collective_seconds`` term for the collectives
@@ -343,21 +343,51 @@ def op_roofline_cells(multi_pod: bool = False) -> list[dict]:
     GPT-J geometry the cell reports d2d_s-dominant — the ring hop, not HBM,
     binds long-context scale-out.
 
+    ``precision`` names a ``core.precision`` policy and sweeps the same
+    cells down the width ladder (the Fig. 10 utilization-vs-width story):
+    for each op whose kernels grew a scaled path the case operands recast
+    to the policy's compute dtype (so ring-permute KV bytes shrink with
+    the storage width), the analytic HBM bytes reprice at the narrow width
+    plus one fp32 scale per ``scale_block`` elements, the compute ceiling
+    becomes ``precision.peak_flops`` (2x bf16 for fp8, 0.5x for fp32), and
+    the plan itself resolves under the policy — so the gemm cell's psum
+    epilogue prices at the bf16 reduce width. Ops without a scaled path
+    keep their full-precision cell and report ``precision: "fp32"``.
+
     Uses a device-free partition.MeshSpec: no devices are constructed, so
     this runs anywhere the dry-run runs.
     """
+    from repro.core import precision as prec
     from repro.kernels import partition
 
+    pol = prec.resolve(precision)
     shape = {"pod": 2, "data": 16, "model": 16} if multi_pod else \
         {"data": 16, "model": 16}
     mesh = partition.MeshSpec(shape)
     out = []
     for op, args, kwargs, flops, nbytes in op_roofline_cases():
+        peak = None
+        applied = pol is not None and pol.name in prec.supported_policies(op)
+        if applied:
+            orig_isz = jnp.dtype(args[0].dtype).itemsize
+            new_isz = jnp.dtype(pol.compute_dtype).itemsize
+            args = tuple(
+                jax.ShapeDtypeStruct(a.shape, pol.compute_dtype)
+                if jnp.issubdtype(a.dtype, jnp.floating) else a
+                for a in args
+            )
+            kwargs = dict(kwargs, precision=pol)
+            elems = nbytes / orig_isz
+            nbytes = elems * new_isz + (
+                (elems / pol.scale_block) * 4 if pol.scale_block else 0.0
+            )
+            peak = prec.peak_flops(pol)
         plan = partition.plan_for(op, mesh, *args, **kwargs)
         n = plan.n if plan else 1
         by_level = roofline.plan_collective_seconds_by_level(plan)
         d2d = sum(by_level.values())
-        terms = roofline.roofline_terms(flops / n, nbytes / n, 0.0, d2d_s=d2d)
+        terms = roofline.roofline_terms(flops / n, nbytes / n, 0.0, d2d_s=d2d,
+                                        peak_flops=peak)
         cell = {
             "op": op,
             "mesh": "x".join(str(s) for s in shape.values()),
@@ -373,11 +403,14 @@ def op_roofline_cells(multi_pod: bool = False) -> list[dict]:
             "roofline": terms,  # serial model: every transfer waits
             "overlappable": bool(plan and plan.overlappable),
         }
+        if pol is not None:
+            cell["precision"] = pol.name if applied else "fp32"
         if plan is not None and plan.overlappable and plan.hops > 1:
             # the overlapped cell beside the serial one: per-hop D2D hides
             # behind per-hop compute, only the exposed remainder binds
             ov = roofline.overlapped_terms(
-                flops / n, nbytes / n, 0.0, d2d, plan.hops
+                flops / n, nbytes / n, 0.0, d2d, plan.hops,
+                peak_flops=peak,
             )
             cell["roofline_overlapped"] = ov
             cell["overlap"] = {
@@ -402,10 +435,15 @@ def main():
                     help="skip roofline-cost extraction (compile proof only)")
     ap.add_argument("--op-roofline", action="store_true",
                     help="emit per-op D2D-costed roofline cells and exit")
+    ap.add_argument("--precision", default=None,
+                    choices=("fp32", "bf16", "fp8", "fp8_e5m2"),
+                    help="price --op-roofline cells under this "
+                         "core.precision policy (Fig. 10 width sweep)")
     args = ap.parse_args()
 
     if args.op_roofline:
-        for res in op_roofline_cells(multi_pod=args.multi_pod):
+        for res in op_roofline_cells(multi_pod=args.multi_pod,
+                                     precision=args.precision):
             line = json.dumps(res)
             print(line, flush=True)
             if args.out:

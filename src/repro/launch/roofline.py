@@ -25,6 +25,11 @@ LINK_BW = 50e9  # bytes/s per ICI link
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    # every fp8 spelling XLA emits (fn/fnuz/b11 variants and the bare
+    # f8e4m3/f8e3m4 aliases) is one byte; missing entries silently fell
+    # back to 4B and quadrupled low-precision collective bytes.
+    "f8e4m3": 1, "f8e3m4": 1, "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2fnuz": 1, "s4": 1, "u4": 1,
     "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4,
     "s64": 8, "u64": 8, "f64": 8, "c64": 8,
@@ -91,11 +96,15 @@ def collective_bytes(hlo_text: str) -> dict:
 
 
 def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
-                   d2d_s: float = 0.0) -> dict:
+                   d2d_s: float = 0.0,
+                   peak_flops: float | None = None) -> dict:
     """The roofline time terms; ``d2d_s`` (partition-plan collective time
     from ``op_collective_seconds`` / ``plan_collective_seconds``) joins the
-    dominance comparison so a D2D-bound sharded op reports as such."""
-    t_comp = flops / PEAK_FLOPS
+    dominance comparison so a D2D-bound sharded op reports as such.
+    ``peak_flops`` overrides the bf16 ceiling — pass
+    ``core.precision.peak_flops(policy)`` to price a low-precision sweep
+    cell against the MXU rate its compute dtype actually runs at."""
+    t_comp = flops / (peak_flops or PEAK_FLOPS)
     t_mem = hbm_bytes / HBM_BW
     t_coll = coll_bytes / LINK_BW
     terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
@@ -134,7 +143,8 @@ def overlapped_seconds(compute_s: float, d2d_s: float, hops: int) -> float:
 
 
 def overlapped_terms(flops: float, hbm_bytes: float, coll_bytes: float,
-                     d2d_s: float, hops: int) -> dict:
+                     d2d_s: float, hops: int,
+                     peak_flops: float | None = None) -> dict:
     """``roofline_terms`` under the overlapped schedule: the per-hop D2D
     time hides behind per-hop compute, so only the EXPOSED remainder joins
     the dominance comparison.
@@ -147,12 +157,13 @@ def overlapped_terms(flops: float, hbm_bytes: float, coll_bytes: float,
     plus ``serial_s`` / ``overlapped_s`` / ``d2d_exposed_s`` for the
     serial-vs-overlapped comparison the dry-run cells print.
     """
-    t_comp = flops / PEAK_FLOPS
+    t_comp = flops / (peak_flops or PEAK_FLOPS)
     t_mem = hbm_bytes / HBM_BW
     base = max(t_comp, t_mem)
     total = overlapped_seconds(base, d2d_s, hops)
     exposed = max(total - base, 0.0)
-    terms = roofline_terms(flops, hbm_bytes, coll_bytes, d2d_s=exposed)
+    terms = roofline_terms(flops, hbm_bytes, coll_bytes, d2d_s=exposed,
+                           peak_flops=peak_flops)
     terms["serial_s"] = base + d2d_s
     terms["overlapped_s"] = total
     terms["d2d_exposed_s"] = exposed

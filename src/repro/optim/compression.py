@@ -1,34 +1,59 @@
 """Gradient compression with error feedback (distributed-optimization trick).
 
 The pod-axis gradient all-reduce is the direct analogue of Occamy's D2D bulk
-traffic — the slowest link in the hierarchy. Casting gradients to bf16 for
-the reduction halves D2D bytes; fp32 error feedback (residual carried to the
-next step) keeps convergence unbiased. Enabled via cfg.grad_compression.
+traffic — the slowest link in the hierarchy. Compressing gradients for the
+reduction shrinks D2D bytes; fp32 error feedback (residual carried to the
+next step) keeps convergence unbiased: the round-trip values telescope, so
+the sum of compressed gradients over any window equals the sum of true
+gradients minus the final residual. Enabled via cfg.grad_compression.
+
+The compression width is a ``core.precision`` policy, not a hard-coded
+dtype: the default ``"bf16"`` reproduces the classic bf16 round-trip
+(scale_block == 0 — a plain cast), while block-scaled policies (``"fp8"``)
+quantize per ``scale_block`` elements of the trailing axis through the same
+(values, scales) machinery the scaled kernels use — one ladder, every
+consumer.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import precision as _prec
+
 
 def init_error_state(params):
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
-def compress_decompress(grads, err):
-    """Returns (grads_after_roundtrip_fp32, new_err). The bf16 cast happens
-    BEFORE the (jit-visible) gradient reduction, so the all-reduce moves bf16
-    bytes; error feedback accumulates what the cast lost."""
+def compress_decompress(grads, err, policy="bf16"):
+    """Returns (grads_after_roundtrip_fp32, new_err). The narrow cast
+    happens BEFORE the (jit-visible) gradient reduction, so the all-reduce
+    moves compressed bytes; error feedback accumulates what the cast lost.
+
+    Args: ``grads`` — the gradient pytree; ``err`` — the fp32 residual
+    pytree from the previous step (``init_error_state`` shape); ``policy``
+    — a ``core.precision`` policy name or ``Precision`` selecting the
+    round-trip width (default ``"bf16"``, the legacy behavior). Policies
+    with ``scale_block > 0`` round-trip through per-block (values, scales)
+    quantization over each leaf's trailing axis; scalar leaves and
+    unit-scale policies take the plain-cast path.
+    """
+    p = _prec.resolve(policy)
 
     def one(g, e):
         gf = g.astype(jnp.float32) + e
-        gc = gf.astype(jnp.bfloat16)
-        return gc.astype(jnp.float32), gf - gc.astype(jnp.float32)
+        if p.scale_block and gf.ndim:
+            blk = p.scale_block
+            gc = _prec.dequantize_blockwise(
+                *_prec.quantize_blockwise(gf, p, axis=-1, block=blk),
+                axis=-1, block=blk,
+            )
+        else:
+            gc = gf.astype(p.compute_dtype).astype(jnp.float32)
+        return gc, gf - gc
 
-    flat_g, treedef = jax.tree.flatten(grads)
-    flat_e = treedef.flatten_up_to(err)
-    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
-    return (
-        treedef.unflatten([o[0] for o in out]),
-        treedef.unflatten([o[1] for o in out]),
+    out = jax.tree.map(one, grads, err)
+    return jax.tree.transpose(
+        jax.tree.structure(grads), jax.tree.structure((0, 0)), out
     )

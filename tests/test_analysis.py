@@ -7,6 +7,7 @@ import pytest
 
 from repro.analysis import cli, registered_rules, run_rules
 from repro.analysis.plan_rules import (
+    check_accum_widening,
     check_hop_schedule,
     check_mesh_cases,
     check_plan,
@@ -210,6 +211,41 @@ def test_check_plan_flags_vocabulary_drift():
     assert any("not priceable" in p for p in problems)
     assert any("negative nbytes" in p for p in problems)
     assert any("hops=1" in p for p in problems)
+
+
+def test_check_accum_widening_requires_wide_landing_site():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.streams import AffineStream, StreamProgram
+
+    def prog(in_dt, out_dt, scratch=()):
+        st = lambda dt: AffineStream((8, 8), lambda i: (i, 0), dtype=dt)
+        return StreamProgram(
+            name="narrow", body=lambda *_: None, grid=(2,),
+            in_streams=(st(in_dt),), out_streams=(st(out_dt),),
+            out_shapes=(jax.ShapeDtypeStruct((16, 8), out_dt),),
+            scratch=scratch,
+        )
+
+    # fp8 streams in, fp8 stream out, no scratch: the accumulate would
+    # saturate in the narrow format — the seeded-bad case
+    problems = check_accum_widening(
+        prog(jnp.float8_e4m3fn, jnp.float8_e4m3fn)
+    )
+    assert any("no fp32+ accumulator" in p for p in problems), problems
+    # widening through an fp32 out stream satisfies the contract...
+    assert check_accum_widening(prog(jnp.bfloat16, jnp.float32)) == []
+    # ...as does an fp32 VMEM scratch accumulator (the blocked kernels)
+    assert check_accum_widening(prog(
+        jnp.float8_e5m2, jnp.float8_e5m2,
+        scratch=(jax.ShapeDtypeStruct((8, 8), jnp.float32),),
+    )) == []
+    # full-width programs and integer (index) streams are exempt
+    assert check_accum_widening(prog(jnp.float32, jnp.float32)) == []
+    assert check_accum_widening(prog(jnp.int8, jnp.int8)) == []
+    # the registered rule sweeps the full suite, scaled cases included
+    assert "accum-dtype-widening" in {r.name for r in registered_rules()}
 
 
 # ---------------------------------------------------------------------------

@@ -275,3 +275,45 @@ def test_record_matches_environment_is_mesh_aware(tmp_path):
     assert at.record_matches_environment(record, mesh=_mesh_2x4())
     at.apply_record(record, mesh=_mesh_2x4())  # applies cleanly when tuned
     assert not at.record_matches_environment(record)  # and not flat anymore
+
+
+# ---------------------------------------------------------------------------
+# Precision-scoped entries (the policy suite: gemm@fp8, gemm@bf16)
+# ---------------------------------------------------------------------------
+
+
+def test_precision_suite_entries_never_collide_with_legacy():
+    rec = at.autotune(["gemm", "gemm@fp8", "gemm@bf16"], suite=at.full_suite(),
+                      time_candidate=lambda c, b: 1.0)
+    keys = sorted(rec["entries"])
+    assert len(keys) == 3
+    legacy = [k for k in keys if not (k.endswith("|fp8")
+                                      or k.endswith("|bf16"))]
+    assert len(legacy) == 1
+    # the scaled cases dispatch the SAME fp32 operands as the legacy case
+    # (quantization happens inside the impl): everything up to the policy
+    # suffix is identical, and only the suffix keeps the entries apart
+    for k in keys:
+        if k not in legacy:
+            assert k.rsplit("|", 1)[0] == legacy[0], (k, legacy)
+    assert {e["precision"] for e in rec["entries"].values()} == \
+        {None, "fp8", "bf16"}
+    # reporting disambiguates the policy-scoped rows as op@policy
+    deltas = at.record_deltas(rec)
+    assert {"gemm", "gemm@fp8", "gemm@bf16"} <= set(deltas)
+
+
+def test_apply_record_never_cross_applies_policies():
+    rec = at.autotune(["gemm", "gemm@fp8", "gemm@bf16"], suite=at.full_suite(),
+                      time_candidate=lambda c, b: 1.0)
+    # force a distinct winner per policy so cross-application is observable
+    want = {None: 256, "fp8": 64, "bf16": 128}
+    for e in rec["entries"].values():
+        e["blocks"] = dict(e["blocks"], bm=want[e["precision"]])
+    for pol, bm in want.items():
+        registry.clear_block_overrides()
+        applied = at.apply_record(rec, precision=pol)
+        # exactly the matching entry applies: an fp8-tuned geometry is not
+        # evidence about the unscaled kernel (or bf16's), and vice versa
+        assert set(applied) == {"gemm"} and applied["gemm"]["bm"] == bm
+        assert registry.block_defaults("gemm")["bm"] == bm

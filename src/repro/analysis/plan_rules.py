@@ -416,3 +416,143 @@ def plan_collective_axes(ctx: Context) -> list[Finding]:
                     "plan-collective-axes", "repro.kernels.partition", 0, p,
                 ))
     return out
+
+
+def check_paged_coverage(scheduler, token_for, *, steps: int = 2000):
+    """Drive one continuous-batching ``scheduler`` to drain and audit the
+    paged-cache ledger invariants every step.
+
+    Args: ``scheduler`` — a ``serving.scheduler.ContinuousBatchingScheduler``
+    with requests already submitted; ``token_for(seq, step)`` — the
+    synthetic next-token function (the replay needs *a* stream, not a
+    model); ``steps`` — drain bound (a scheduler that cannot drain is
+    itself a finding).
+
+    Checked at every step (the properties the device gather relies on —
+    any violation means ``decode_attention``'s block-table gather reads
+    another sequence's pages or an unwritten one):
+
+      - live block ownership is disjoint across running sequences and
+        consistent with the allocator's ledger
+      - every running sequence's block list covers exactly the logical
+        blocks its cached positions occupy (prefix-coverage: entry j holds
+        positions [j*bs, (j+1)*bs))
+      - ``NULL_BLOCK`` never appears in a live block list
+      - the allocator's free+owned sets partition the pool (its own
+        ``check``)
+
+    and at drain: every submitted request finished, zero leaked blocks.
+    Returns problem strings (empty = invariants hold).
+    """
+    from repro.serving.scheduler import NULL_BLOCK
+
+    problems: list[str] = []
+    bs = scheduler.block_size
+    step = 0
+    while not scheduler.idle() and step < steps and not problems:
+        for seq in scheduler.admit(step):
+            scheduler.record_token(seq, token_for(seq, step))
+            if scheduler.should_retire(seq, None):
+                scheduler.retire(seq, step)
+        for slot in sorted(scheduler.running):
+            seq = scheduler.running.get(slot)
+            if seq is None or not scheduler.ensure_block(seq, step):
+                continue
+            scheduler.record_token(seq, token_for(seq, step))
+            if scheduler.should_retire(seq, None):
+                scheduler.retire(seq, step)
+
+        owned_all: dict[int, int] = {}
+        for seq in scheduler.running.values():
+            if NULL_BLOCK in seq.blocks:
+                problems.append(
+                    f"step {step}: rid {seq.rid} holds NULL_BLOCK in a "
+                    f"live block list"
+                )
+            need = seq.tokens_cached()
+            have = len(seq.blocks) * bs
+            if have < need:
+                problems.append(
+                    f"step {step}: rid {seq.rid} caches {need} positions "
+                    f"but its table covers only {have}"
+                )
+            if sorted(seq.blocks) != scheduler.allocator.owned_by(seq.rid):
+                problems.append(
+                    f"step {step}: rid {seq.rid} block list "
+                    f"{sorted(seq.blocks)} != allocator ledger "
+                    f"{scheduler.allocator.owned_by(seq.rid)}"
+                )
+            for b in seq.blocks:
+                if b in owned_all:
+                    problems.append(
+                        f"step {step}: block {b} owned by both rid "
+                        f"{owned_all[b]} and rid {seq.rid}"
+                    )
+                owned_all[b] = seq.rid
+        problems.extend(
+            f"step {step}: {p}" for p in scheduler.allocator.check()
+        )
+        step += 1
+
+    if not scheduler.idle() and not problems:
+        problems.append(
+            f"scheduler did not drain in {steps} steps "
+            f"(running={sorted(s.rid for s in scheduler.running.values())})"
+        )
+    if scheduler.idle():
+        leaked = scheduler.leaked_blocks()
+        if leaked:
+            problems.append(f"drained with {leaked} leaked blocks")
+        unfinished = scheduler._seen_rids - set(scheduler.finished)
+        if unfinished:
+            problems.append(
+                f"drained but requests never finished: {sorted(unfinished)}"
+            )
+    return problems
+
+
+@register_rule("paged-gather-coverage", tier="plan")
+def paged_gather_coverage(ctx: Context) -> list[Finding]:
+    """The serving scheduler's block ledger upholds the gather contract.
+
+    Replays seeded synthetic workloads — including a pool tight enough to
+    force preemption and a mixed-priority mix — through the real
+    ``ContinuousBatchingScheduler`` (pure Python, device-free) and runs
+    ``check_paged_coverage`` on each: the device-side block-table gather
+    in paged ``decode_attention`` is only correct if ownership stays
+    disjoint, tables prefix-cover the cached positions, and NULL_BLOCK
+    stays out of live prefixes. A violation here is a cross-sequence KV
+    read waiting to happen.
+    """
+    import random
+
+    from repro.serving.scheduler import ContinuousBatchingScheduler, Request
+
+    def token_for(seq, step):
+        return (seq.generated[-1] * 31 + 7) % 97 if seq.generated else 1
+
+    out = []
+    scenarios = {
+        "tight-pool": dict(num_blocks=7, block_size=4, max_slots=3,
+                           max_blocks_per_seq=5),
+        "roomy-pool": dict(num_blocks=64, block_size=8, max_slots=8,
+                           max_blocks_per_seq=None),
+    }
+    for name, kw in scenarios.items():
+        rng = random.Random(name)
+        sched = ContinuousBatchingScheduler(**kw)
+        for rid in range(24):
+            sched.submit(Request(
+                rid=rid,
+                prompt=tuple(rng.randrange(1, 97)
+                             for _ in range(rng.randrange(1, 9))),
+                max_new_tokens=rng.randrange(1, 10),
+                priority=rng.randrange(0, 3),
+                arrival=rng.randrange(0, 12),
+            ))
+        for p in check_paged_coverage(sched, token_for):
+            out.append(Finding(
+                "paged-gather-coverage", "repro.serving.scheduler", 0,
+                f"[{name}] {p}",
+            ))
+    return out

@@ -244,26 +244,73 @@ def _fa_ref(q, k, v, *, causal, window, q_offset, scale, precision=None,
 
 
 def decode_attention(q, k, v, position, *, window=0, scale=None,
-                     precision=None, impl=None, mesh=None, bs=None):
+                     precision=None, impl=None, mesh=None, bs=None,
+                     paged=False, block_table=None, k_scale=None,
+                     v_scale=None, pos_offset=0, return_lse=False):
     """Single-token attention against a cache. Linear in cache length.
 
     ``precision`` holds the KV cache quantized — narrow values plus one
     fp32 scale per cached row (``core.precision.quantize_kv_cache``) —
     and dequantizes each streamed block at use: the serving path where the
-    cache dominates HBM footprint and decode is purely memory-bound."""
+    cache dominates HBM footprint and decode is purely memory-bound.
+
+    ``paged=True`` switches k/v to the serving engine's block-pool layout:
+    ``(P, K, bs, D)`` physical pages plus a ``(B, NB)`` int32
+    ``block_table`` mapping each sequence's logical cache block to its
+    pool slot (``serving.paged_cache``). The gathered pages stream through
+    the same online-softmax body as the contiguous cache, so the two
+    layouts are bitwise-equal at matching geometry; ``k_scale``/``v_scale``
+    pass a pre-quantized pool's per-row fp32 scales. ``pos_offset`` is the
+    absolute position of logical block 0 (nonzero for ring-decode cache
+    shards) and ``return_lse=True`` adds the (B, H) fp32 log-sum-exp the
+    per-shard ``online_softmax_merge`` fold consumes. All paged kwargs
+    ride dispatch only when set, so the legacy contiguous path stays
+    byte-identical."""
     precision = _resolve_precision(precision)
-    blocks = resolve_blocks("decode_attention", bs=bs)
+    if paged and block_table is None:
+        raise TypeError("decode_attention: paged=True requires block_table")
+    if block_table is not None and not paged:
+        raise TypeError("decode_attention: block_table requires paged=True")
+    if paged:
+        if k.ndim != 4 or k.shape[:3] != v.shape[:3]:
+            raise ValueError(
+                f"decode_attention(paged): pools must be (P, K, bs, D), got "
+                f"k={k.shape} v={v.shape}"
+            )
+        paged_kwargs = {"block_table": block_table}
+        if k_scale is not None:
+            paged_kwargs.update(k_scale=k_scale, v_scale=v_scale)
+        blocks = {}  # the pool's page extent pins bs; no registry tile
+    else:
+        if k_scale is not None or v_scale is not None:
+            raise TypeError(
+                "decode_attention: k_scale/v_scale are pool scales for the "
+                "paged path; the contiguous path quantizes via precision="
+            )
+        paged_kwargs = {}
+        blocks = resolve_blocks("decode_attention", bs=bs)
+    extra = {}
+    # pos_offset may be a traced per-shard scalar; ride only when set so the
+    # legacy kwarg surface (and its dispatch bytes) stay unchanged
+    if not (isinstance(pos_offset, int) and pos_offset == 0):
+        extra["pos_offset"] = pos_offset
+    if return_lse:
+        extra["return_lse"] = True
     return _dispatch(
         "decode_attention", q, k, v, position, window=window, scale=scale,
-        mesh=mesh, impl=impl, **_precision_kwargs(precision), **blocks,
+        mesh=mesh, impl=impl, **_precision_kwargs(precision),
+        **paged_kwargs, **extra, **blocks,
     )
 
 
 @registry.register_kernel("decode_attention", impl="xla")
-def _decode_xla(q, k, v, position, *, window, scale, precision=None, bs=None):
+def _decode_xla(q, k, v, position, *, window, scale, precision=None, bs=None,
+                block_table=None, k_scale=None, v_scale=None, pos_offset=0,
+                return_lse=False):
     return _xla.decode_attention_xla(
         q, k, v, position, window=window, scale=scale, bs=bs,
-        precision=precision,
+        precision=precision, block_table=block_table, k_scale=k_scale,
+        v_scale=v_scale, pos_offset=pos_offset, return_lse=return_lse,
     )
 
 
@@ -272,13 +319,23 @@ def _decode_xla(q, k, v, position, *, window, scale, precision=None, bs=None):
 @registry.register_kernel("decode_attention", impl="pallas")
 @registry.register_kernel("decode_attention", impl="interpret")
 @registry.register_kernel("decode_attention", impl="ref")
-def _decode_ref(q, k, v, position, *, window, scale, precision=None, bs=None):
+def _decode_ref(q, k, v, position, *, window, scale, precision=None, bs=None,
+                block_table=None, k_scale=None, v_scale=None, pos_offset=0,
+                return_lse=False):
+    if block_table is not None:
+        return _ref.decode_attention_paged_ref(
+            q, k, v, block_table, position, window=window, scale=scale,
+            precision=precision, k_scale=k_scale, v_scale=v_scale,
+            pos_offset=pos_offset, return_lse=return_lse,
+        )
     if precision is not None:
         return _ref.decode_attention_scaled_ref(
-            q, k, v, position, precision=precision, window=window, scale=scale
+            q, k, v, position, precision=precision, window=window,
+            scale=scale, pos_offset=pos_offset, return_lse=return_lse,
         )
     return _ref.decode_attention_ref(q, k, v, position, window=window,
-                                     scale=scale)
+                                     scale=scale, pos_offset=pos_offset,
+                                     return_lse=return_lse)
 
 
 # ---------------------------------------------------------------------------

@@ -829,6 +829,10 @@ def _decode_rule(levels, q, k, v, position, *, impl=None, **kwargs):
     the non-``data`` levels, B (queries AND their cache/position rows) over
     ``data`` when it divides. No sequence ring — decode is one query token
     against a resident cache."""
+    if kwargs.get("block_table") is not None:
+        # paged pools carry no batch dim and shard by cache pages, not by
+        # B/heads — the serving layer's ring_decode owns that distribution
+        return None
     B, K = q.shape[0], k.shape[1]
     heads, data, batch_ok = _attn_levels_split(levels, B)
     head_ok = _attn_head_ok(heads, K)

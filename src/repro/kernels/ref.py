@@ -115,21 +115,33 @@ def decode_attention_ref(
     *,
     window: int = 0,
     scale: float | None = None,
+    pos_offset=0,
+    return_lse: bool = False,
 ) -> jax.Array:
+    """Decode oracle. ``pos_offset`` is the absolute position of cache row
+    0 (a cache *shard*'s base in ring decode); ``return_lse=True`` adds the
+    (B, H) fp32 log-sum-exp the per-shard online-softmax merge consumes
+    (floored at -1e30 so fully-masked shards merge as exact no-ops)."""
     B, H, D = q.shape
     K, S = k.shape[1], k.shape[2]
     G = H // K
     scale = scale if scale is not None else 1.0 / np.sqrt(D)
     qf = q.reshape(B, K, G, D).astype(jnp.float32)
     s = jnp.einsum("bkgd,bksd->bkgs", qf, k.astype(jnp.float32)) * scale
-    idx = jnp.arange(S)[None, :]
+    idx = jnp.arange(S)[None, :] + pos_offset
     mask = idx <= position[:, None]
     if window:
         mask &= idx > (position[:, None] - window)
     s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows (empty shards)
     o = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
-    return o.reshape(B, H, D).astype(q.dtype)
+    o = o.reshape(B, H, D).astype(q.dtype)
+    if not return_lse:
+        return o
+    lse = jax.scipy.special.logsumexp(s, axis=-1)
+    lse = jnp.maximum(lse, -1e30).reshape(B, H)
+    return o, lse
 
 
 def decode_attention_scaled_ref(q, k, v, position, *, precision, **kwargs):
@@ -141,6 +153,42 @@ def decode_attention_scaled_ref(q, k, v, position, *, precision, **kwargs):
     kf = prec.dequantize_blockwise(kq, ks, axis=-1)
     vf = prec.dequantize_blockwise(vq, vs, axis=-1)
     return decode_attention_ref(q, kf, vf, position, **kwargs)
+
+
+def decode_attention_paged_ref(
+    q,  # (B, H, D)
+    k,  # (P, K, bs, D) physical block pool
+    v,  # (P, K, bs, D)
+    block_table,  # (B, NB) int32 pool slots per logical cache block
+    position,  # (B,)
+    *,
+    window: int = 0,
+    scale: float | None = None,
+    precision=None,
+    k_scale=None,  # (P, K, bs, 1) fp32 pool scales (pre-quantized cache)
+    v_scale=None,
+    pos_offset=0,
+    return_lse: bool = False,
+):
+    """Paged-cache oracle: gather each sequence's pages back into the
+    contiguous (B, K, NB*bs, D) layout and run the exact contiguous oracle
+    — the ground truth the blocked gather path must match bitwise."""
+    from repro.core import precision as prec
+
+    if precision is not None and k_scale is None:
+        k, k_scale, v, v_scale = prec.quantize_kv_cache(k, v, precision)
+    if k_scale is not None:
+        k = prec.dequantize_blockwise(k, k_scale, axis=-1)
+        v = prec.dequantize_blockwise(v, v_scale, axis=-1)
+    B, nb = block_table.shape
+    K, bs, D = k.shape[1], k.shape[2], k.shape[3]
+    gather = lambda pool: jnp.moveaxis(pool[block_table], 1, 2).reshape(
+        B, K, nb * bs, D
+    )
+    return decode_attention_ref(
+        q, gather(k), gather(v), position, window=window, scale=scale,
+        pos_offset=pos_offset, return_lse=return_lse,
+    )
 
 
 # ---------------------------------------------------------------------------

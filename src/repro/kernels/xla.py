@@ -226,7 +226,8 @@ def flash_attention_scaled_xla(q, k, v, precision, *, causal=True, window=0,
 
 
 def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None,
-                         precision=None):
+                         precision=None, block_table=None, k_scale=None,
+                         v_scale=None, pos_offset=0, return_lse=False):
     """Blocked single-token attention against a cache (online softmax over
     cache blocks, the memory-bound decode form GPT-J hits every step).
 
@@ -240,30 +241,56 @@ def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None,
     (``precision.quantize_kv_cache``), each streamed block is dequantized
     at use inside the fp32 online softmax — the cache's HBM footprint and
     stream traffic shrink by the compute dtype's width ratio.
+
+    ``block_table`` switches the cache operands to the *paged* layout: k/v
+    are physical block pools ``(P, K, bs, D)`` and ``block_table`` is a
+    ``(B, NB)`` int32 map from each sequence's logical cache block to its
+    pool slot. The pool's own block extent pins ``bs`` (the page size is
+    the stream tile), the gathered blocks stream through the *same* online
+    softmax body as the contiguous path — so the two layouts are bitwise
+    equal whenever the contiguous length is ``NB * bs``. Table entries past
+    a sequence's ``position`` may point anywhere valid (the mask makes
+    those blocks exact no-ops). ``k_scale``/``v_scale`` pass pre-quantized
+    pool scales (``(P, K, bs, 1)``) so a cache held narrow by the serving
+    engine skips the quantize-at-use step. ``pos_offset`` shifts the
+    absolute position of logical block 0 (the cache-shard offset ring
+    decode folds over); ``return_lse`` additionally returns the (B, H)
+    fp32 log-sum-exp the per-shard online-softmax merge consumes.
     """
     B, H, D = q.shape
-    K, S = k.shape[1], k.shape[2]
+    K = k.shape[1]
     G = H // K
     scale = scale if scale is not None else 1.0 / np.sqrt(D)
-    bs = min(registry.resolve_blocks("decode_attention", bs=bs)["bs"], S)
-    k_scale = v_scale = None
-    if precision is not None:
+    paged = block_table is not None
+    if precision is not None and k_scale is None:
         from repro.core import precision as prec
 
         k, k_scale, v, v_scale = prec.quantize_kv_cache(k, v, precision)
-    pad = (-S) % bs
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        if k_scale is not None:
-            k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad), (0, 0)))
-            v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    nb = (S + pad) // bs
+    if paged:
+        bs = k.shape[2]  # the pool's page size IS the stream tile
+        nb = block_table.shape[1]
+        S = nb * bs
+        # gather pool pages into the (nb, B, K, bs, d) stream the scan eats
+        blk = lambda x: jnp.moveaxis(x[block_table], 1, 0)
+        kb, vb = blk(k), blk(v)
+        ksb = blk(k_scale) if k_scale is not None else jnp.zeros((nb,))
+        vsb = blk(v_scale) if v_scale is not None else jnp.zeros((nb,))
+    else:
+        S = k.shape[2]
+        bs = min(registry.resolve_blocks("decode_attention", bs=bs)["bs"], S)
+        pad = (-S) % bs
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            if k_scale is not None:
+                k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        nb = (S + pad) // bs
+        blk = lambda x, d: jnp.moveaxis(x.reshape(B, K, nb, bs, d), 2, 0)
+        kb, vb = blk(k, D), blk(v, D)
+        ksb = blk(k_scale, 1) if k_scale is not None else jnp.zeros((nb,))
+        vsb = blk(v_scale, 1) if v_scale is not None else jnp.zeros((nb,))
     qf = (q.astype(jnp.float32) * scale).reshape(B, K, G, D)
-    blk = lambda x, d: jnp.moveaxis(x.reshape(B, K, nb, bs, d), 2, 0)
-    kb, vb = blk(k, D), blk(v, D)
-    ksb = blk(k_scale, 1) if k_scale is not None else jnp.zeros((nb,))
-    vsb = blk(v_scale, 1) if v_scale is not None else jnp.zeros((nb,))
     NEG = jnp.float32(-1e30)
 
     def body(carry, xs):
@@ -275,8 +302,10 @@ def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None,
             kf = kf * ksblk
             vf = vf * vsblk
         s = jnp.einsum("bkgd,bksd->bkgs", qf, kf)
-        idx = bidx * bs + jnp.arange(bs)[None, :]  # (1, bs) absolute positions
-        mask = (idx < S) & (idx <= position[:, None])
+        # absolute positions of this block's rows (paged pools shift by the
+        # shard offset; the gathered page's rows stay block-contiguous)
+        idx = pos_offset + bidx * bs + jnp.arange(bs)[None, :]
+        mask = (idx < pos_offset + S) & (idx <= position[:, None])
         if window:
             mask &= idx > position[:, None] - window
         mask = mask[:, None, None, :]  # (B, 1, 1, bs)
@@ -291,7 +320,7 @@ def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None,
     m0 = jnp.full((B, K, G), NEG)
     l0 = jnp.zeros((B, K, G))
     acc0 = jnp.zeros((B, K, G, D))
-    if registry.unroll_inner_enabled():
+    if registry.unroll_inner_enabled() and not paged:
         carry = (m0, l0, acc0)
         for i in range(nb):
             carry, _ = body(
@@ -303,7 +332,11 @@ def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None,
             body, (m0, l0, acc0), (kb, vb, ksb, vsb, jnp.arange(nb))
         )
     o = acc / jnp.maximum(l, 1e-30)[..., None]
-    return o.reshape(B, H, D).astype(q.dtype)
+    o = o.reshape(B, H, D).astype(q.dtype)
+    if not return_lse:
+        return o
+    lse = (m + jnp.log(jnp.maximum(l, 1e-30))).reshape(B, H)
+    return o, lse
 
 
 # ---------------------------------------------------------------------------

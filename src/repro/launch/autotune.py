@@ -80,7 +80,12 @@ class TuneCase:
     under (None = the legacy full-precision path). Timings of the scaled
     kernel are not evidence about the unscaled one (different stream
     count, operand widths, and rescale epilogue), so the policy joins the
-    record key and gates ``apply_record``.
+    record key and gates ``apply_record``. ``consumer`` — the call-site
+    shape class the timings are evidence about (``"prefill"`` = batched
+    B x S operands, ``"decode"`` = single-position B x 1 operands). An
+    attention geometry tuned at prefill shape says nothing about the
+    decode step's one-row grid (and vice versa), so the consumer tag joins
+    the record key and gates ``apply_record`` exactly like the policy.
     """
 
     op: str
@@ -91,6 +96,7 @@ class TuneCase:
     plan_kwargs: dict = dataclasses.field(default_factory=dict)
     mesh: Any = None
     precision: str | None = None
+    consumer: str | None = None
 
 
 def mesh_tag(mesh) -> str | None:
@@ -126,9 +132,11 @@ def local_case_shapes(case: TuneCase, impl: str) -> tuple:
 
 
 def case_key(op: str, arrays, backend: str, impl: str,
-             precision: str | None = None) -> str:
+             precision: str | None = None,
+             consumer: str | None = None) -> str:
     """Record key for one tuning entry: ``op|shapes:dtypes|backend|impl``
-    (``|precision`` appended for policy-scoped entries).
+    (``|precision`` appended for policy-scoped entries, ``#consumer`` for
+    consumer-scoped ones).
 
     Args: ``op`` — op name; ``arrays`` — the operands whose shape/dtype
     identify the tuned kernel geometry (pass the *local shard* structs when
@@ -137,13 +145,19 @@ def case_key(op: str, arrays, backend: str, impl: str,
     ``precision`` — the policy name for scaled-path cases. The dispatch
     operands of a scaled case are the same fp32 arrays as the legacy case
     (quantization happens inside the impl), so without the suffix the two
-    would collide on one record entry.
+    would collide on one record entry. ``consumer`` — the call-site shape
+    class (``"prefill"``/``"decode"``); it rides the key so a serving
+    session can hold BOTH a prefill-tuned and a decode-tuned entry for the
+    same op without one clobbering the other, even when a suite probes
+    them at overlapping operand geometry.
     """
     shapes = ",".join(
         f"{'x'.join(map(str, a.shape))}:{a.dtype}" for a in arrays
     )
     key = f"{op}|{shapes}|{backend}|{impl}"
-    return key if precision is None else f"{key}|{precision}"
+    if precision is not None:
+        key = f"{key}|{precision}"
+    return key if consumer is None else f"{key}#{consumer}"
 
 
 def _time_call(fn, args, *, reps: int, warmup: int = 1) -> float:
@@ -273,6 +287,7 @@ def autotune_case(
     return {
         "op": case.op,
         "precision": case.precision,
+        "consumer": case.consumer,
         "blocks": best["blocks"] if best else defaults,
         "us_per_call": best["us_per_call"] if best else None,
         "default_blocks": defaults,
@@ -550,11 +565,75 @@ PRECISION_SUITE: dict[str, Callable] = {
 }
 
 
+def _flash_attention_consumer_case(consumer: str) -> Callable:
+    """Factory-of-factory for the consumer-scoped flash cases: the same op
+    probed at the shape each serving call site actually dispatches —
+    ``prefill`` runs the batched B x S geometry, ``decode`` a one-query-row
+    B x 1 geometry (speculative / chunked single-step flash). The two grids
+    share no tiling evidence: a bk that wins when 256 query rows amortize
+    each K tile streams the whole cache per single row at decode."""
+
+    def factory(rng) -> TuneCase:
+        from repro.kernels.flash_attention import flash_attention_program
+
+        B, H, S, D = 1, 4, 256, 64
+        sq = S if consumer == "prefill" else 1
+        q = jnp.asarray(rng.standard_normal((B, H, sq, D)), jnp.float32)
+        k, v = (
+            jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+            for _ in range(2)
+        )
+        q_offset = 0 if consumer == "prefill" else S - 1
+
+        def program(bl):
+            bq, bk = min(bl["bq"], sq), min(bl["bk"], S)
+            nq, nk = -(-sq // bq), -(-S // bk)
+            return flash_attention_program(
+                B, H, 1, nq * bq, D, nq, nk, bq, bk, q.dtype, k.dtype,
+                v.dtype, scale=1.0, causal=True, window=0,
+                q_offset=q_offset, sk=S,
+            )
+
+        return TuneCase(
+            "flash_attention", (q, k, v),
+            lambda q, k, v, mesh=None: ops.flash_attention(
+                q, k, v, causal=True, q_offset=q_offset, mesh=mesh),
+            [{"bk": s} for s in (32, 64, 128, 256)], program,
+            consumer=consumer,
+        )
+
+    return factory
+
+
+def _decode_attention_consumer_case() -> Callable:
+    """``decode_attention`` tagged with its (only) consumer class, so the
+    serving engine's ``apply_record(consumer="decode")`` picks it up and an
+    untagged legacy record entry for the same geometry cannot collide."""
+
+    def factory(rng) -> TuneCase:
+        case = _decode_attention_case(rng)
+        case.consumer = "decode"
+        return case
+
+    return factory
+
+
+# consumer-scoped cases: the attention ops probed per call-site shape
+# class (prefill B x S vs decode B x 1). Same record-stability reasoning
+# as PRECISION_SUITE for keeping them out of DEFAULT_SUITE.
+CONSUMER_SUITE: dict[str, Callable] = {
+    "flash_attention#prefill": _flash_attention_consumer_case("prefill"),
+    "flash_attention#decode": _flash_attention_consumer_case("decode"),
+    "decode_attention#decode": _decode_attention_consumer_case(),
+}
+
+
 def full_suite() -> dict[str, Callable]:
-    """DEFAULT_SUITE plus the policy-scoped PRECISION_SUITE cases — the
-    complete factory table the CLI searches and the ``repro.analysis``
-    plan rules (vmem-budget, accum-dtype-widening) sweep."""
-    return {**DEFAULT_SUITE, **PRECISION_SUITE}
+    """DEFAULT_SUITE plus the policy-scoped PRECISION_SUITE and the
+    consumer-scoped CONSUMER_SUITE cases — the complete factory table the
+    CLI searches and the ``repro.analysis`` plan rules (vmem-budget,
+    accum-dtype-widening) sweep."""
+    return {**DEFAULT_SUITE, **PRECISION_SUITE, **CONSUMER_SUITE}
 
 
 # ---------------------------------------------------------------------------
@@ -610,7 +689,7 @@ def autotune(
             trial_budget=trial_budget, time_candidate=time_candidate,
         )
         key = case_key(case.op, local_case_shapes(case, impl), backend, impl,
-                       precision=case.precision)
+                       precision=case.precision, consumer=case.consumer)
         entries[key] = entry
     return {
         "version": RECORD_VERSION,
@@ -659,7 +738,8 @@ def record_matches_environment(record: dict, *, mesh: Any = None) -> bool:
 
 def apply_record(record: dict, *, force: bool = False,
                  mesh: Any = None,
-                 precision: str | None = None) -> dict[str, dict[str, int]]:
+                 precision: str | None = None,
+                 consumer: str | None = None) -> dict[str, dict[str, int]]:
     """Write every recorded winner through ``registry.set_block_override``
     (deterministic: no timing, no search).
 
@@ -672,7 +752,12 @@ def apply_record(record: dict, *, force: bool = False,
     must pick which policy's winners drive it: an fp8-tuned geometry is
     measured through the scaled kernel and is not evidence about the
     unscaled one (and vice versa) — entries never cross-apply.
-    Returns {op: blocks} applied.
+    ``consumer`` — likewise for the call-site shape axis: apply only
+    entries tuned for this consumer class (None = untagged legacy
+    entries). A serving engine applies the ``"decode"`` winners before its
+    decode loop and the ``"prefill"`` winners around admission prefill;
+    a prefill-tuned geometry never leaks into the decode step's one-row
+    grid through a shared record. Returns {op: blocks} applied.
 
     Raises if the record was tuned for a different backend/impl/mesh than
     the one currently dispatching — applying it would silently mistune, the
@@ -689,6 +774,8 @@ def apply_record(record: dict, *, force: bool = False,
     applied = {}
     for entry in record["entries"].values():
         if entry.get("precision") != precision:
+            continue
+        if entry.get("consumer") != consumer:
             continue
         blocks = {k: int(v) for k, v in entry["blocks"].items()}
         registry.set_block_override(entry["op"], **blocks)
@@ -712,6 +799,8 @@ def record_deltas(record: dict) -> dict[str, dict]:
         name = entry["op"]
         if entry.get("precision"):
             name = f"{name}@{entry['precision']}"
+        if entry.get("consumer"):
+            name = f"{name}#{entry['consumer']}"
         out[name] = {
             "blocks": entry["blocks"],
             "default_blocks": entry["default_blocks"],

@@ -16,6 +16,28 @@ from repro.configs.base import SHAPES, get_config
 from repro.models import registry, transformer, multimodal
 
 
+def scan_prefill(params, cfg, cache, tokens):
+    """Prompt prefill for recurrent-cache families (ssm/hybrid/audio):
+    scan ``registry.decode_step`` over the prompt inside one jit. Returns
+    (last-token logits (B, V_pad), cache after the full prompt)."""
+    B, S0 = tokens.shape
+
+    def run(params, cache, tokens):
+        def body(c, xs):
+            tok, t = xs
+            lg, c = registry.decode_step(
+                params, cfg, c,
+                {"token": tok, "position": jnp.full((B,), t, jnp.int32)},
+            )
+            return c, lg
+
+        xs = (tokens.T, jnp.arange(S0, dtype=jnp.int32))
+        cache, logits = jax.lax.scan(body, cache, xs)
+        return logits[-1], cache
+
+    return jax.jit(run, donate_argnums=(1,))(params, cache, tokens)
+
+
 def generate(cfg, params, tokens, gen_len: int, max_len: int,
              extra_batch: dict | None = None, greedy: bool = True):
     """tokens: (B, S0) prompt; returns (B, S0+gen_len)."""
@@ -27,20 +49,18 @@ def generate(cfg, params, tokens, gen_len: int, max_len: int,
         logits, cache = transformer.prefill_step(params, cfg, batch, max_len)
         pos0 = S0 + (cfg.num_patches if cfg.family == "vlm" else 0)
     else:
-        # ssm / hybrid / audio: feed the prompt through decode_step
+        # ssm / hybrid / audio: feed the prompt through decode_step — as ONE
+        # jitted lax.scan over the prompt axis, not a per-token Python loop
+        # (the old loop retraced/dispatched decode_step S0 times un-jitted;
+        # the scan traces the body once, so prefill cost is one compile +
+        # one device launch regardless of prompt length)
         cache = registry.init_cache(cfg, B, max_len)
         if cfg.family == "audio" and extra_batch:
             ck, cv = multimodal.build_cross_cache(
                 params, cfg, extra_batch["frames"]
             )
             cache["cross_k"], cache["cross_v"] = ck, cv
-        logits = None
-        for t in range(S0):
-            logits, cache = registry.decode_step(
-                params, cfg, cache,
-                {"token": tokens[:, t],
-                 "position": jnp.full((B,), t, jnp.int32)},
-            )
+        logits, cache = scan_prefill(params, cfg, cache, tokens)
         logits = logits[:, None, :]
         pos0 = S0
 

@@ -394,3 +394,128 @@ def _ffn_decode(p, cfg, x):
         return M.moe_mlp_decode(p, x, cfg)
     out = L.mlp(_mlp_p(p), x[:, None, :], cfg.activation)[:, 0]
     return out, 0.0
+
+
+# ---------------------------------------------------------------------------
+# paged decode (serving engine: block-table KV cache)
+# ---------------------------------------------------------------------------
+
+
+def attention_decode_paged(p, cfg, x, cos, sin, k_pool, v_pool, k_scale,
+                           v_scale, block_table, position, *, window=0,
+                           policy=None, attn_fn=None):
+    """One layer's decode against a paged KV pool.
+
+    ``k_pool``/``v_pool``: (P, K, bs, hd) physical pages (+ per-row fp32
+    scales when ``policy`` holds the cache narrow); ``block_table``:
+    (B, NB) int32 pool slots per sequence; ``position``: (B,). The new
+    token's K/V is written into page ``block_table[b, pos // bs]`` at row
+    ``pos % bs`` (quantized per row under ``policy`` — the same
+    quantization ``precision.quantize_kv_cache`` applies), then attention
+    runs through the registered paged ``decode_attention`` — or through
+    ``attn_fn(q, k_pool, v_pool, k_scale, v_scale, block_table, position,
+    window)`` when the serving layer injects a distribution (ring decode).
+    Every row writes every step: inactive slots point at the shared
+    scratch page, which live prefixes never reference."""
+    B, d = x.shape
+    hd = cfg.resolved_head_dim()
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    bs = k_pool.shape[2]
+
+    q = (x @ p["wq"]).astype(x.dtype)
+    k = (x @ p["wk"]).astype(x.dtype)
+    v = (x @ p["wv"]).astype(x.dtype)
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, H, hd)
+    k = k.reshape(B, K, hd)
+    v = v.reshape(B, K, hd)
+    if "q_norm" in p:
+        q = L.head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cos is not None:
+        q = L.apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
+        k = L.apply_rope(k[:, None], cos[:, None], sin[:, None])[:, 0]
+
+    phys = jnp.take_along_axis(block_table, (position // bs)[:, None],
+                               axis=1)[:, 0]
+    offset = position % bs
+    heads = jnp.arange(K)[None, :]
+    at = lambda pool: pool.at[phys[:, None], heads, offset[:, None]]
+    if policy is not None:
+        from repro.core import precision as prec
+
+        kq, ks, vq, vs = prec.quantize_kv_cache(k, v, policy)
+        k_pool = at(k_pool).set(kq.astype(k_pool.dtype))
+        v_pool = at(v_pool).set(vq.astype(v_pool.dtype))
+        k_scale = at(k_scale).set(ks)
+        v_scale = at(v_scale).set(vs)
+    else:
+        k_pool = at(k_pool).set(k.astype(k_pool.dtype))
+        v_pool = at(v_pool).set(v.astype(v_pool.dtype))
+
+    if attn_fn is None:
+        o = ops.decode_attention(
+            q, k_pool, v_pool, position, paged=True, block_table=block_table,
+            k_scale=k_scale, v_scale=v_scale, window=window,
+        )
+    else:
+        o = attn_fn(q, k_pool, v_pool, k_scale, v_scale, block_table,
+                    position, window)
+    o = o.reshape(B, H * hd)
+    o = jnp.einsum(
+        "bh,hd->bd", o, p["wo"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    return o, k_pool, v_pool, k_scale, v_scale
+
+
+def decode_step_paged(params, cfg, cache, batch, *, attn_fn=None):
+    """Paged twin of ``decode_step``: batch additionally carries the
+    (B, NB) int32 ``block_table``; ``cache`` is a
+    ``serving.paged_cache.PagedKVCache`` (duck-typed — only its pools,
+    scales, and static policy are touched, so this module stays below the
+    serving layer). Returns (logits (B, V_pad), updated cache)."""
+    import dataclasses as _dc
+
+    tokens, position = batch["token"], batch["position"]
+    block_table = batch["block_table"]
+    h = jnp.take(params["embed"], tokens, axis=0)
+    hd = cfg.resolved_head_dim()
+    cos, sin = (
+        L.rope_cos_sin(position, hd, cfg.rope_theta)
+        if cfg.rope_theta
+        else (None, None)
+    )
+
+    def body(h, xs):
+        lp, kp, vp, ks, vs = xs
+        n = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        a, kp, vp, ks, vs = attention_decode_paged(
+            lp, cfg, n, cos, sin, kp, vp, ks, vs, block_table, position,
+            window=cfg.sliding_window, policy=cache.policy, attn_fn=attn_fn,
+        )
+        if cfg.parallel_block:
+            m, _ = _ffn_decode(lp, cfg, n)
+            h = h + a + m
+        else:
+            h = h + a
+            n = L.rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+            m, _ = _ffn_decode(lp, cfg, n)
+            h = h + m
+        return h, (kp, vp, ks, vs)
+
+    h, (kp, vp, ks, vs) = jax.lax.scan(
+        body, h,
+        (params["layers"], cache.k_pool, cache.v_pool,
+         cache.k_scale, cache.v_scale),
+        unroll=cfg.scan_unroll,
+    )
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum(
+        "bd,dv->bv", h, head, preferred_element_type=jnp.float32
+    )
+    cache = _dc.replace(cache, k_pool=kp, v_pool=vp, k_scale=ks, v_scale=vs)
+    return logits, cache

@@ -287,3 +287,77 @@ def test_cli_list(capsys):
     out = capsys.readouterr().out
     for r in registered_rules():
         assert r.name in out
+
+
+# ---------------------------------------------------------------------------
+# check_paged_coverage: the serving ledger audit flags seeded corruption
+# ---------------------------------------------------------------------------
+
+
+def _serving_sched(**kw):
+    from repro.serving.scheduler import ContinuousBatchingScheduler, Request
+
+    defaults = dict(num_blocks=9, block_size=4, max_slots=3,
+                    max_blocks_per_seq=6)
+    defaults.update(kw)
+    sched = ContinuousBatchingScheduler(**defaults)
+    for rid in range(6):
+        sched.submit(Request(rid=rid, prompt=(1, 2, 3),
+                             max_new_tokens=5, arrival=rid % 3))
+    return sched
+
+
+def _tok(seq, step):
+    return (seq.generated[-1] + 1) % 17 if seq.generated else 1
+
+
+def test_check_paged_coverage_clean_on_honest_scheduler():
+    from repro.analysis.plan_rules import check_paged_coverage
+
+    assert check_paged_coverage(_serving_sched(), _tok) == []
+
+
+def test_check_paged_coverage_flags_missing_growth():
+    from repro.analysis.plan_rules import check_paged_coverage
+
+    sched = _serving_sched()
+    sched.ensure_block = lambda seq, step: True  # never grows the table
+    problems = check_paged_coverage(sched, _tok)
+    assert any("covers only" in p for p in problems), problems
+
+
+def test_check_paged_coverage_flags_null_block_in_live_prefix():
+    from repro.analysis.plan_rules import check_paged_coverage
+    from repro.serving.scheduler import NULL_BLOCK
+
+    sched = _serving_sched()
+    orig = sched.allocator.alloc
+
+    def corrupt(rid, n):
+        got = orig(rid, n)
+        if got and rid == 2:
+            got[0] = NULL_BLOCK  # hand the scratch page to a live prefix
+        return got
+
+    sched.allocator.alloc = corrupt
+    problems = check_paged_coverage(sched, _tok)
+    assert any("NULL_BLOCK" in p for p in problems), problems
+
+
+def test_check_paged_coverage_flags_double_ownership():
+    from repro.analysis.plan_rules import check_paged_coverage
+
+    sched = _serving_sched()
+    orig_admit = sched.admit
+
+    def alias_admit(step):
+        admitted = orig_admit(step)
+        running = list(sched.running.values())
+        if len(running) >= 2:
+            running[1].blocks[0] = running[0].blocks[0]  # alias a page
+        return admitted
+
+    sched.admit = alias_admit
+    problems = check_paged_coverage(sched, _tok)
+    assert any("owned by both" in p or "!= allocator ledger" in p
+               for p in problems), problems

@@ -317,3 +317,70 @@ def test_apply_record_never_cross_applies_policies():
         # evidence about the unscaled kernel (or bf16's), and vice versa
         assert set(applied) == {"gemm"} and applied["gemm"]["bm"] == bm
         assert registry.block_defaults("gemm")["bm"] == bm
+
+
+# ---------------------------------------------------------------------------
+# Consumer-scoped entries (the shape-class suite: flash_attention#prefill,
+# flash_attention#decode, decode_attention#decode)
+# ---------------------------------------------------------------------------
+
+
+def test_consumer_suite_entries_never_collide():
+    rec = at.autotune(
+        ["decode_attention", "decode_attention#decode",
+         "flash_attention#prefill", "flash_attention#decode"],
+        suite=at.full_suite(), time_candidate=lambda c, b: 1.0)
+    keys = sorted(rec["entries"])
+    assert len(keys) == 4
+    # decode_attention probes the SAME operand geometry tagged and
+    # untagged: only the #consumer suffix keeps the entries apart
+    da = [k for k in keys if k.startswith("decode_attention")]
+    assert len(da) == 2
+    tagged = next(k for k in da if k.endswith("#decode"))
+    untagged = next(k for k in da if not k.endswith("#decode"))
+    assert tagged == untagged + "#decode"
+    # the two flash consumers differ in BOTH the tag and the q geometry
+    # (prefill B x S rows vs decode's single row)
+    fa = [k for k in keys if k.startswith("flash_attention")]
+    assert {k.rsplit("#", 1)[1] for k in fa} == {"prefill", "decode"}
+    assert {e.get("consumer") for e in rec["entries"].values()} == \
+        {None, "prefill", "decode"}
+    # reporting disambiguates the consumer-scoped rows as op#consumer
+    deltas = at.record_deltas(rec)
+    assert {"decode_attention", "decode_attention#decode",
+            "flash_attention#prefill", "flash_attention#decode"} <= \
+        set(deltas)
+
+
+def test_apply_record_never_cross_applies_consumers():
+    rec = at.autotune(
+        ["decode_attention", "decode_attention#decode"],
+        suite=at.full_suite(), time_candidate=lambda c, b: 1.0)
+    # force a distinct winner per consumer so cross-application shows
+    want = {None: 1024, "decode": 128}
+    for e in rec["entries"].values():
+        e["blocks"] = dict(e["blocks"], bs=want[e["consumer"]])
+    for consumer, bs in want.items():
+        registry.clear_block_overrides()
+        applied = at.apply_record(rec, consumer=consumer)
+        # exactly the matching entry applies: a prefill-shape geometry is
+        # not evidence about the decode step's one-row grid, and a legacy
+        # untagged entry never leaks into a consumer-scoped session
+        assert set(applied) == {"decode_attention"}
+        assert applied["decode_attention"]["bs"] == bs
+        assert registry.block_defaults("decode_attention")["bs"] == bs
+    registry.clear_block_overrides()
+
+
+def test_legacy_records_without_consumer_field_apply_as_untagged():
+    # records written before the consumer axis lack the key entirely:
+    # entry.get("consumer") is None, so they match consumer=None only
+    rec = at.autotune(["decode_attention"], suite=at.full_suite(),
+                      time_candidate=lambda c, b: 1.0)
+    for e in rec["entries"].values():
+        del e["consumer"]  # simulate a pre-consumer-axis record
+    registry.clear_block_overrides()
+    assert set(at.apply_record(rec)) == {"decode_attention"}
+    registry.clear_block_overrides()
+    assert at.apply_record(rec, consumer="decode") == {}
+    registry.clear_block_overrides()

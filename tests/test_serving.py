@@ -1,0 +1,349 @@
+"""Serving battery: scheduler policy, block ledger, preempt/resume
+round-trips, interleaving equivalence, and the serve.py prefill trace
+regression.
+
+Most of the battery drives the engine with ``StubModel`` — a deterministic
+host-only token recurrence — so the scheduler properties run in
+milliseconds with no compilation. Two tests go through the real paged
+transformer to pin the device-side halves (bitwise preempt/resume and
+interleaving invariance) at model scale.
+
+The interleaving property (any admission-order interleaving yields token
+streams identical to isolated decoding) runs under ``hypothesis`` when the
+package is present and falls back to a seeded randomized sweep of the same
+property otherwise — the container image does not ship hypothesis.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving.engine import Request, ServingEngine, StubModel
+from repro.serving.scheduler import (
+    NULL_BLOCK,
+    BlockAllocator,
+    ContinuousBatchingScheduler,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container image has no hypothesis; seeded sweep below
+    HAVE_HYPOTHESIS = False
+
+
+def _random_requests(seed, n, *, vocab=251, max_prompt=8, max_new=12,
+                     max_arrival=10, priorities=2):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=rid,
+            prompt=tuple(int(x) for x in
+                         rng.integers(1, vocab,
+                                      int(rng.integers(1, max_prompt + 1)))),
+            max_new_tokens=int(rng.integers(1, max_new + 1)),
+            priority=int(rng.integers(0, priorities)),
+            arrival=int(rng.integers(0, max_arrival + 1)),
+        )
+        for rid in range(n)
+    ]
+
+
+def _engine(reqs, *, num_blocks=9, block_size=4, max_slots=3,
+            max_blocks_per_seq=6):
+    eng = ServingEngine(StubModel(), num_blocks=num_blocks,
+                        block_size=block_size, max_slots=max_slots,
+                        max_blocks_per_seq=max_blocks_per_seq)
+    for r in reqs:
+        eng.submit(r)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# Allocator ledger
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_basic_ledger():
+    a = BlockAllocator(8)
+    assert a.available() == 7  # NULL_BLOCK reserved
+    got = a.alloc(1, 3)
+    assert got is not None and NULL_BLOCK not in got
+    assert a.owned_by(1) == sorted(got)
+    assert a.alloc(2, 5) is None  # short: nothing popped
+    assert a.available() == 4
+    a.release(1, got)
+    assert a.available() == 7 and a.owned_by(1) == []
+    assert a.check() == []
+
+
+def test_allocator_release_wrong_owner_raises():
+    a = BlockAllocator(8)
+    got = a.alloc(1, 2)
+    with pytest.raises(RuntimeError, match="not owned"):
+        a.release(2, got)
+
+
+def test_allocator_fifo_determinism():
+    a, b = BlockAllocator(16), BlockAllocator(16)
+    for alloc in (a, b):
+        x = alloc.alloc(1, 5)
+        alloc.release(1, x[::-1])
+        alloc.alloc(2, 3)
+    assert list(a.free) == list(b.free)
+    assert a.owned_by(2) == b.owned_by(2)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler policy
+# ---------------------------------------------------------------------------
+
+
+def test_fcfs_within_priority_class():
+    sched = ContinuousBatchingScheduler(num_blocks=32, block_size=4,
+                                        max_slots=2)
+    for rid, arrival in [(0, 5), (1, 2), (2, 2), (3, 0)]:
+        sched.submit(Request(rid=rid, prompt=(1,), max_new_tokens=4,
+                             arrival=arrival))
+    admitted = sched.admit(10)
+    # two slots: earliest arrivals first, rid breaks the tie at arrival 2
+    assert [s.rid for s in admitted] == [3, 1]
+
+
+def test_priority_classes_served_highest_first():
+    sched = ContinuousBatchingScheduler(num_blocks=32, block_size=4,
+                                        max_slots=2)
+    sched.submit(Request(rid=0, prompt=(1,), max_new_tokens=4, priority=0,
+                         arrival=0))
+    sched.submit(Request(rid=1, prompt=(1,), max_new_tokens=4, priority=5,
+                         arrival=3))
+    assert [s.rid for s in sched.admit(10)] == [1, 0]
+
+
+def test_head_of_line_blocks_no_skip():
+    # rid 9 holds one block; rid 0 then needs 3 of the 2 remaining, and
+    # rid 1 needs only 1 — FCFS means rid 1 must NOT jump the queue
+    sched = ContinuousBatchingScheduler(num_blocks=4, block_size=4,
+                                        max_slots=3)
+    sched.submit(Request(rid=9, prompt=(1,), max_new_tokens=2, arrival=0))
+    assert [s.rid for s in sched.admit(0)] == [9]
+    sched.submit(Request(rid=0, prompt=tuple(range(1, 10)),
+                         max_new_tokens=2, arrival=1))
+    sched.submit(Request(rid=1, prompt=(1,), max_new_tokens=2, arrival=2))
+    assert sched.admit(5) == []
+    assert len(sched.admission_trace()) == 1  # only rid 9 ever admitted
+
+
+def test_unsatisfiable_request_rejected_at_submit():
+    sched = ContinuousBatchingScheduler(num_blocks=4, block_size=4,
+                                        max_slots=2)
+    with pytest.raises(ValueError, match="never fit"):
+        sched.submit(Request(rid=0, prompt=tuple(range(1, 14)),
+                             max_new_tokens=8, arrival=0))
+    with pytest.raises(ValueError, match="duplicate"):
+        sched.submit(Request(rid=1, prompt=(1,), max_new_tokens=1))
+        sched.submit(Request(rid=1, prompt=(1,), max_new_tokens=1))
+
+
+def test_admission_trace_is_seed_deterministic():
+    t1 = _engine(_random_requests(11, 20))
+    t2 = _engine(_random_requests(11, 20))
+    t1.run()
+    t2.run()
+    assert t1.scheduler.admission_trace() == t2.scheduler.admission_trace()
+    assert t1.completed == t2.completed
+
+
+# ---------------------------------------------------------------------------
+# No starvation / leaks
+# ---------------------------------------------------------------------------
+
+
+def test_no_starvation_under_tight_pool():
+    # pool tight enough that preemption is constant; every request must
+    # still finish, and nothing may be preempted unboundedly
+    eng = _engine(_random_requests(5, 30, max_prompt=4, max_new=8),
+                  num_blocks=7, block_size=2,
+                  max_blocks_per_seq=None, max_slots=3)
+    out = eng.run(max_steps=20_000)
+    assert len(out) == 30
+    preempts = sum(1 for e in eng.scheduler.events if e[0] == "preempt")
+    assert preempts > 0, "scenario must actually exercise preemption"
+    worst = max(s.preemptions for s in eng.scheduler.finished.values())
+    assert worst <= 10, f"a request was preempted {worst} times"
+    assert eng.leaked_blocks() == 0
+
+
+def test_no_block_leak_after_1k_requests():
+    eng = _engine(_random_requests(99, 1000, max_arrival=400, max_new=6),
+                  num_blocks=17, block_size=4, max_slots=5,
+                  max_blocks_per_seq=4)
+    out = eng.run(max_steps=100_000)
+    assert len(out) == 1000
+    assert eng.leaked_blocks() == 0
+    assert eng.scheduler.allocator.check() == []
+    # every block release is accounted: grows+admits == retires+preempts
+    ev = eng.scheduler.events
+    allocated = sum(len(e[4]) for e in ev if e[0] == "admit") + \
+        sum(1 for e in ev if e[0] == "grow")
+    freed = sum(len(e[4]) for e in ev if e[0] in ("retire", "preempt"))
+    assert allocated == freed
+
+
+# ---------------------------------------------------------------------------
+# Preempt/resume + interleaving equivalence (Stub level)
+# ---------------------------------------------------------------------------
+
+
+def test_preempt_resume_roundtrip_bitwise_stub():
+    reqs = _random_requests(21, 14, max_prompt=4, max_new=8)
+    tight = _engine(reqs, num_blocks=7, block_size=2, max_slots=3)
+    roomy = _engine([dataclasses.replace(r) for r in reqs],
+                    num_blocks=64, block_size=2, max_slots=3)
+    out_t, out_r = tight.run(max_steps=20_000), roomy.run(max_steps=20_000)
+    assert sum(1 for e in tight.scheduler.events if e[0] == "preempt") > 0
+    assert sum(1 for e in roomy.scheduler.events if e[0] == "preempt") == 0
+    assert out_t == out_r  # token streams survive preemption bit-for-bit
+
+
+def _check_interleaving_matches_isolated(seed):
+    """The property: whatever admission interleaving a workload produces,
+    each request's token stream equals its isolated-decode stream."""
+    reqs = _random_requests(seed, 10, max_new=8, max_arrival=6)
+    eng = _engine(reqs, num_blocks=11, block_size=2, max_slots=4,
+                  max_blocks_per_seq=8)
+    out = eng.run(max_steps=20_000)
+    assert eng.leaked_blocks() == 0
+    for r in reqs:
+        solo = _engine([dataclasses.replace(r, arrival=0, priority=0)],
+                       num_blocks=11, block_size=2, max_slots=4,
+                       max_blocks_per_seq=8)
+        assert solo.run()[r.rid] == out[r.rid], r.rid
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_interleaving_equivalent_to_isolated_decode(seed):
+        _check_interleaving_matches_isolated(seed)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(25))
+    def test_interleaving_equivalent_to_isolated_decode(seed):
+        _check_interleaving_matches_isolated(seed)
+
+
+# ---------------------------------------------------------------------------
+# Real paged model: engine-level bitwise invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.models import registry as mreg
+
+    cfg = get_config("gemma-2b", reduced=True)
+    return cfg, mreg.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _real_engine(cfg, params, reqs, *, num_blocks, block_size=4,
+                 max_slots=3, max_blocks_per_seq=6):
+    eng = ServingEngine.with_model(
+        cfg, params, num_blocks=num_blocks, block_size=block_size,
+        max_slots=max_slots, max_blocks_per_seq=max_blocks_per_seq)
+    for r in reqs:
+        eng.submit(r)
+    return eng
+
+
+@pytest.mark.slow
+def test_real_model_interleaving_and_preemption_bitwise(dense_model):
+    cfg, params = dense_model
+    rng = np.random.default_rng(17)
+    reqs = [
+        Request(rid=rid,
+                prompt=tuple(int(x) for x in
+                             rng.integers(1, cfg.vocab_size, 4 + rid % 4)),
+                max_new_tokens=6, arrival=rid // 2)
+        for rid in range(5)
+    ]
+    tight = _real_engine(cfg, params, reqs, num_blocks=8)
+    out = tight.run(max_steps=500)
+    assert sum(1 for e in tight.scheduler.events if e[0] == "preempt") > 0
+    assert tight.leaked_blocks() == 0
+
+    roomy = _real_engine(cfg, params,
+                         [dataclasses.replace(r) for r in reqs],
+                         num_blocks=40)
+    out_roomy = roomy.run(max_steps=500)
+    assert out == out_roomy  # preempt/resume round-trip is bitwise
+
+    solo = _real_engine(cfg, params,
+                        [dataclasses.replace(reqs[2], arrival=0)],
+                        num_blocks=40)
+    assert solo.run(max_steps=500)[2] == out[2]  # interleaving-invariant
+
+
+@pytest.mark.slow
+def test_real_model_fp8_cache_serves(dense_model):
+    cfg, params = dense_model
+    rng = np.random.default_rng(23)
+    reqs = [
+        Request(rid=rid,
+                prompt=tuple(int(x) for x in
+                             rng.integers(1, cfg.vocab_size, 5)),
+                max_new_tokens=4, arrival=0)
+        for rid in range(2)
+    ]
+    eng = ServingEngine.with_model(
+        cfg, params, num_blocks=16, block_size=4, max_slots=2,
+        max_blocks_per_seq=6, precision="fp8")
+    assert eng.model.cache.quantized
+    for r in reqs:
+        eng.submit(r)
+    out = eng.run(max_steps=200)
+    assert len(out) == 2 and all(len(v) == 4 for v in out.values())
+    assert eng.leaked_blocks() == 0
+
+
+# ---------------------------------------------------------------------------
+# serve.py prefill regression: the prompt loop must be one jitted scan
+# ---------------------------------------------------------------------------
+
+
+def test_serve_recurrent_prefill_traces_once(monkeypatch):
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_config
+    from repro.launch import serve
+    from repro.models import registry as mreg
+
+    cfg = get_config("rwkv6-3b", reduced=True)
+    params = mreg.init_params(cfg, __import__("jax").random.PRNGKey(0))
+
+    calls = {"n": 0}
+    real = mreg.decode_step
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(mreg, "decode_step", counting)
+    B, S0, gen = 2, 8, 3
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(1, cfg.vocab_size, (B, S0)),
+        jnp.int32)
+    out = serve.generate(cfg, params, tokens, gen, S0 + gen + 1)
+    assert out.shape == (B, S0 + gen)
+    # one trace for the scanned prefill + one for the jitted decode step;
+    # the old per-token Python loop called it S0 (=8) times for the prompt
+    assert calls["n"] <= 3, (
+        f"decode_step entered Python {calls['n']} times for S0={S0}: the "
+        f"prompt loop is not a single jitted scan"
+    )

@@ -28,7 +28,6 @@ def run():
     # Fig. 10 sweep: numerics at each precision + projected TPU peak
     exact = np.asarray(a32 @ b32)
     for pol in ("fp32", "bf16", "fp8"):
-        p = precision.POLICIES[pol]
         out = precision.expanding_gemm(a32, b32, pol, impl="ref")
         rel = float(np.linalg.norm(np.asarray(out, np.float32) - exact)
                     / np.linalg.norm(exact))

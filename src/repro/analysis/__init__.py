@@ -1,7 +1,7 @@
 """Static checker for substrate invariants and overlap-schedule hazards.
 
-Two tiers behind one rule registry (``base.register_rule``, mirroring the
-kernel registry's idiom):
+Three tiers behind one rule registry (``base.register_rule``, mirroring
+the kernel registry's idiom):
 
   - **AST rules** (``ast_rules``): parse the source tree and enforce the
     syntactic invariants the substrate depends on — single pallas_call
@@ -12,12 +12,20 @@ kernel registry's idiom):
     devices — ring schedules for double-buffer aliasing and DMA-wait
     ordering, StreamPrograms against the VMEM budget, partition plans for
     ladder dead-ends and vocabulary drift on the production meshes.
+  - **Model rules** (``model_rules`` over the ``explore`` engine):
+    exhaustively explore bounded state spaces — every scheduler action
+    interleaving, every legal DMA landing order of the ring schedules,
+    and the dtype/scale dataflow of every suite StreamProgram — so the
+    checked property holds in all reachable states, not one replayed
+    trace. Explorations run under an explicit ``--budget``; exhaustion
+    is its own exit code (3), never a silent pass.
 
 Drive it as ``python -m repro.analysis`` (see ``cli``); CI gates on a
-clean run, and tests/test_analysis.py proves every rule fires on the
-seeded violations in tests/analysis_fixtures. Import cost is deliberate:
-this ``__init__`` pulls only the stdlib-based registry; the plan tier
-imports jax lazily inside each rule.
+clean run, and tests/test_analysis.py + tests/test_explore.py prove every
+rule fires on the seeded violations in tests/analysis_fixtures. Import
+cost is deliberate: this ``__init__`` pulls only the stdlib-based
+registry; the plan and model tiers import jax lazily inside each rule
+(the scheduler model checker needs no jax at all).
 """
 from repro.analysis.base import (  # noqa: F401
     Context,

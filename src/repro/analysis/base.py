@@ -2,7 +2,7 @@
 
 Mirrors the ``kernels/registry.py`` idiom: rules register themselves into a
 module-level table via a decorator, callers select by name, and unknown
-names fail loudly with the known-name list. Two tiers share the table:
+names fail loudly with the known-name list. Three tiers share the table:
 
   - ``ast`` rules parse the source tree (no repro imports, no jax) and
     check syntactic invariants — the grep-style assertions that used to
@@ -10,6 +10,11 @@ names fail loudly with the known-name list. Two tiers share the table:
   - ``plan`` rules import the live substrate and check *resolved
     artifacts* — ring schedules, StreamPrograms, partition plans — on
     device-free MeshSpecs, so they run anywhere the tests run.
+  - ``model`` rules exhaustively explore bounded *state spaces*
+    (``analysis.explore``): scheduler action interleavings, DMA landing
+    orders, dtype dataflow — checking every reachable state, not one
+    trace. They honor ``Context.budget`` and report exploration stats
+    through ``Context.record_stats``.
 
 Every rule takes a ``Context`` and returns ``Finding`` records; an empty
 run is the green state CI gates on.
@@ -35,12 +40,16 @@ class Finding:
     rules, which check resolved objects rather than files, use a module
     path like ``repro.kernels.partition``); ``line`` — 1-based source line
     (0 when no source location applies); ``message`` — what is wrong and
-    why it matters."""
+    why it matters; ``kind`` — ``"violation"`` for real findings, or
+    ``"budget-exhausted"`` when a model-tier exploration was truncated
+    (the state space is unchecked, which the CLI maps to its own exit
+    code rather than pass or fail)."""
 
     rule: str
     path: str
     line: int
     message: str
+    kind: str = "violation"
 
     def format(self) -> str:
         """Render as the one-line ``rule: path:line: message`` CLI form."""
@@ -66,14 +75,24 @@ class Context:
 
     Files are loaded lazily on first access and cached; files that fail to
     parse become ``parse_errors`` findings (reported once per run) instead
-    of aborting the sweep. Plan-tier rules ignore the tree entirely —
-    they exist in the same Context so one CLI invocation runs both tiers.
+    of aborting the sweep. Plan/model rules ignore the tree entirely —
+    they exist in the same Context so one CLI invocation runs every tier.
+    Model-tier rules additionally read ``budget`` (an ``explore.Budget``
+    or None for the default) and report per-exploration counters through
+    ``record_stats``; the accumulated ``stats`` mapping is what the CLI
+    surfaces as the finding summary / ``--format json`` stats block.
     """
 
-    def __init__(self, root: pathlib.Path):
+    def __init__(self, root: pathlib.Path, *, budget=None):
         self.root = pathlib.Path(root)
         self._files: list[SourceFile] | None = None
         self.parse_errors: list[Finding] = []
+        self.budget = budget
+        self.stats: dict[str, dict] = {}  # rule -> {tag: Stats.as_dict()}
+
+    def record_stats(self, rule: str, tag: str, stats) -> None:
+        """Record one exploration's counters (an ``explore.Stats``)."""
+        self.stats.setdefault(rule, {})[tag] = stats.as_dict()
 
     @property
     def files(self) -> list[SourceFile]:
@@ -106,9 +125,10 @@ class Context:
 @dataclasses.dataclass(frozen=True)
 class Rule:
     """A registered check. Fields: ``name`` — kebab-case id used on the
-    CLI; ``tier`` — ``"ast"`` (source-tree lint) or ``"plan"`` (resolved
-    schedule/plan check); ``fn`` — ``fn(ctx) -> list[Finding]``; ``doc``
-    — the one-line summary shown by ``--list``."""
+    CLI; ``tier`` — ``"ast"`` (source-tree lint), ``"plan"`` (resolved
+    schedule/plan check) or ``"model"`` (exhaustive bounded exploration);
+    ``fn`` — ``fn(ctx) -> list[Finding]``; ``doc`` — the one-line summary
+    shown by ``--list``."""
 
     name: str
     tier: str
@@ -123,11 +143,12 @@ def register_rule(name: str, *, tier: str) -> Callable:
     """Decorator: ``@register_rule("single-pallas-site", tier="ast")``.
 
     Args: ``name`` — the rule's CLI id (must be unique); ``tier`` — one of
-    ``"ast"`` / ``"plan"``. The decorated function's first docstring line
-    becomes the rule's ``--list`` summary.
+    ``"ast"`` / ``"plan"`` / ``"model"``. The decorated function's first
+    docstring line becomes the rule's ``--list`` summary.
     """
-    if tier not in ("ast", "plan"):
-        raise ValueError(f"unknown tier {tier!r}; one of ('ast', 'plan')")
+    if tier not in ("ast", "plan", "model"):
+        raise ValueError(
+            f"unknown tier {tier!r}; one of ('ast', 'plan', 'model')")
 
     def deco(fn: Callable) -> Callable:
         if name in _RULES:
@@ -143,13 +164,16 @@ def _ensure_rule_modules() -> None:
     # rules live in sibling modules and register on import; importing them
     # here (not in __init__) keeps `from repro.analysis import Finding`
     # cheap while making registered_rules()/run_rules() self-sufficient
-    from repro.analysis import ast_rules, plan_rules  # noqa: F401
+    from repro.analysis import ast_rules, model_rules, plan_rules  # noqa: F401
+
+TIER_ORDER = ("ast", "plan", "model")
 
 
 def registered_rules() -> list[Rule]:
-    """Every registered rule, sorted ast-tier first then by name."""
+    """Every registered rule, ast tier first, then plan, then model."""
     _ensure_rule_modules()
-    return sorted(_RULES.values(), key=lambda r: (r.tier, r.name))
+    return sorted(_RULES.values(),
+                  key=lambda r: (TIER_ORDER.index(r.tier), r.name))
 
 
 def default_root() -> pathlib.Path:
@@ -159,13 +183,17 @@ def default_root() -> pathlib.Path:
     return pathlib.Path(__file__).resolve().parents[3]
 
 
-def run_rules(rules=None, root=None) -> list[Finding]:
+def run_rules(rules=None, root=None, *, budget=None,
+              stats=None) -> list[Finding]:
     """Run the selected rules and return every finding.
 
     Args: ``rules`` — iterable of rule names (None = all registered;
     unknown names raise KeyError listing the known ones); ``root`` — the
-    source tree AST rules scan (None = ``default_root()``; plan rules
-    check the installed substrate regardless). Parse failures in the tree
+    source tree AST rules scan (None = ``default_root()``; plan and model
+    rules check the installed substrate regardless); ``budget`` — an
+    ``explore.Budget`` for model-tier explorations (None = each rule's
+    default); ``stats`` — optional dict the per-exploration counters are
+    merged into (``rule -> tag -> counters``). Parse failures in the tree
     are returned as ``parse-error`` findings alongside rule findings.
     """
     table = {r.name: r for r in registered_rules()}
@@ -178,8 +206,11 @@ def run_rules(rules=None, root=None) -> list[Finding]:
                 f"unknown rules {unknown}; known: {sorted(table)}"
             )
         selected = [table[n] for n in rules]
-    ctx = Context(pathlib.Path(root) if root else default_root())
+    ctx = Context(pathlib.Path(root) if root else default_root(),
+                  budget=budget)
     findings: list[Finding] = []
     for rule in selected:
         findings.extend(rule.fn(ctx))
+    if stats is not None:
+        stats.update(ctx.stats)
     return list(ctx.parse_errors) + findings

@@ -2,7 +2,14 @@
 
 Runs the selected rules over the tree and prints findings one per line
 (or as a JSON report with ``--format json`` — the form the CI lint job
-parses). Exit status: 0 clean, 1 findings, 2 usage error (unknown rule).
+parses; model-tier exploration stats ride along in its ``stats`` block).
+Exit status: 0 clean, 1 findings, 2 usage error (unknown rule / bad
+budget), 3 exploration budget exhausted with no other findings — an
+unchecked state space is an unknown, never a silent pass.
+
+``--list`` and usage errors stay import-light: rule bodies import the
+substrate (jax) lazily, so listing rules or mistyping a name never pays
+for — or requires — a working accelerator stack.
 """
 from __future__ import annotations
 
@@ -10,7 +17,6 @@ import argparse
 import json
 import sys
 
-from repro.analysis import ast_rules, plan_rules  # noqa: F401  (register)
 from repro.analysis.base import registered_rules, run_rules
 
 
@@ -18,47 +24,79 @@ def main(argv=None) -> int:
     """Entry point; ``argv`` defaults to sys.argv. Returns the exit code."""
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="two-tier static checker: AST lint over the source "
-        "tree plus plan/schedule checks on the resolved substrate",
+        description="three-tier static checker: AST lint over the source "
+        "tree, plan/schedule checks on the resolved substrate, and "
+        "bounded model checking of the scheduler and overlap schedules",
     )
     ap.add_argument("--rules", default=None,
                     help="comma-separated rule names (default: all)")
     ap.add_argument("--root", default=None,
                     help="source tree for AST rules (default: the repo "
-                    "root; plan rules always check the installed package)")
+                    "root; plan/model rules always check the installed "
+                    "package)")
+    ap.add_argument("--budget", default=None, metavar="STATES[,DEPTH]",
+                    help="model-tier exploration ceiling: max distinct "
+                    "states and optional max DFS depth per exploration "
+                    "(default: explore.Budget(); exhaustion exits 3)")
     ap.add_argument("--format", choices=("text", "json"), default="text")
     ap.add_argument("--list", action="store_true",
-                    help="list registered rules and exit")
+                    help="list registered rules (name, tier, summary) "
+                    "and exit")
     args = ap.parse_args(argv)
 
     if args.list:
         for rule in registered_rules():
-            print(f"{rule.name:32s} [{rule.tier}]  {rule.doc}")
+            print(f"{rule.name:32s} [{rule.tier:5s}]  {rule.doc}")
         return 0
 
+    budget = None
+    if args.budget is not None:
+        from repro.analysis.explore import Budget
+
+        try:
+            budget = Budget.parse(args.budget)
+        except ValueError as e:
+            print(e.args[0], file=sys.stderr)
+            return 2
+
     names = args.rules.split(",") if args.rules else None
+    stats: dict = {}
     try:
-        findings = run_rules(names, root=args.root)
+        findings = run_rules(names, root=args.root, budget=budget,
+                             stats=stats)
     except KeyError as e:
         print(e.args[0], file=sys.stderr)
         return 2
 
+    violations = [f for f in findings if f.kind == "violation"]
+    exhausted = [f for f in findings if f.kind == "budget-exhausted"]
+    explored = sum(s["states"] for per_rule in stats.values()
+                   for s in per_rule.values())
     if args.format == "json":
         print(json.dumps({
             "rules": names or [r.name for r in registered_rules()],
             "count": len(findings),
             "findings": [
                 {"rule": f.rule, "path": f.path, "line": f.line,
-                 "message": f.message}
+                 "message": f.message, "kind": f.kind}
                 for f in findings
             ],
+            "stats": stats,
         }, indent=2))
     else:
         for f in findings:
             print(f.format())
+        if stats:
+            print(f"explored {explored} distinct states across "
+                  f"{sum(len(v) for v in stats.values())} model-tier "
+                  f"exploration(s)", file=sys.stderr)
         if findings:
-            print(f"{len(findings)} finding(s)", file=sys.stderr)
-    return 1 if findings else 0
+            print(f"{len(findings)} finding(s)"
+                  + (f" ({len(exhausted)} budget-exhausted)"
+                     if exhausted else ""), file=sys.stderr)
+    if violations:
+        return 1
+    return 3 if exhausted else 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,303 @@
+"""Tier-C rules: exhaustive bounded model checking over live substrate.
+
+Where the plan tier checks one resolved artifact or replays one trace,
+these rules enumerate *state spaces* with ``analysis.explore`` and check
+every reached state — the interleavings a single trace or test seed never
+visits:
+
+  scheduler-model        explore ALL submit/admit/decode interleavings of
+                         the continuous-batching scheduler's abstract twin
+                         on small bounded configs; block-ledger safety +
+                         bounded-liveness (starvation) in every state
+  overlap-interleavings  explore ALL legal DMA-landing timings of every
+                         ring hop schedule (hops 1-8 x overlap x
+                         remote_copy, plus the plan-derived zigzag/plain
+                         ring schedules) — a race detector, not a replay
+  dtype-dataflow         abstract interpretation of (dtype, scale-carried)
+                         lattice values through every autotune suite
+                         StreamProgram and the paged KV pools: narrowing
+                         without a scale, fp8 folded outside an fp32
+                         accumulator, quantized-pool reads without per-row
+                         scales
+
+The ``check_*`` helpers and ``explore.*Model`` classes are the public
+seam: rules sweep the live substrate, tests feed the same helpers
+seeded-bad fixtures (``tests/analysis_fixtures/``). Rule functions import
+jax lazily so ``--list``/usage-error CLI paths stay import-light; the
+scheduler-model rule needs no jax at all.
+"""
+from __future__ import annotations
+
+from repro.analysis import explore
+from repro.analysis.base import Context, Finding, register_rule
+
+
+def _explored_findings(rule: str, path: str, tag: str, problems, stats,
+                       ctx: Context) -> list:
+    """Wrap one exploration's problems as findings, record its stats, and
+    surface budget exhaustion as a distinct ``budget-exhausted`` finding
+    (never a silent pass — the CLI maps it to exit code 3)."""
+    ctx.record_stats(rule, tag, stats)
+    out = [Finding(rule, path, 0, f"{tag}: {p}") for p in problems]
+    if stats.truncated:
+        out.append(Finding(
+            rule, path, 0,
+            f"{tag}: exploration truncated at {stats.states} states / "
+            f"depth {stats.max_depth} — budget exhausted, the remaining "
+            f"state space is UNCHECKED (raise --budget)",
+            kind="budget-exhausted",
+        ))
+    return out
+
+
+@register_rule("scheduler-model", tier="model")
+def scheduler_model(ctx: Context) -> list[Finding]:
+    """Exhaustively model-check the continuous-batching scheduler.
+
+    Explores every submit/admit/decode interleaving of
+    ``explore.SchedulerModel`` (the abstract twin the bisimulation test
+    locks to ``serving.scheduler``) over the bounded
+    ``explore.SCHEDULER_CONFIGS``, checking the block-ledger safety
+    invariants in every reached state — no double alloc/free, no
+    NULL_BLOCK ownership, slot cap, prefix coverage, rid lifecycle
+    disjointness — plus starvation bounds and clean drains at every leaf.
+    Pure Python: no jax anywhere on this path.
+    """
+    out = []
+    for tag, config in explore.SCHEDULER_CONFIGS:
+        problems, stats = explore.explore(
+            explore.SchedulerModel(config), ctx.budget)
+        out.extend(_explored_findings(
+            "scheduler-model", "repro.serving.scheduler", tag, problems,
+            stats, ctx))
+    return out
+
+
+@register_rule("overlap-interleavings", tier="model")
+def overlap_interleavings(ctx: Context) -> list[Finding]:
+    """Race-check ring schedules under ALL legal DMA timings.
+
+    The plan tier's ``overlap-schedule`` replays each ``ring_schedule``
+    event list once, in program order. This rule explores every
+    interleaving the schedule actually permits — an RDMA copy lands
+    whenever the fabric delivers it, so ``explore_hop_interleavings``
+    schedules each landing nondeterministically and flags any ordering
+    where a fold (or a later transfer) touches a buffer whose copy has
+    not landed. Sweeps hops 1..8 x {overlap, sync} x {ppermute,
+    remote_copy}, plus the hop counts of the production flash-attention
+    ring plans resolved with zigzag on and off — the schedule checked is
+    the schedule ``ring_scan`` executes.
+    """
+    import warnings
+
+    from repro.parallel.collectives import ring_schedule
+
+    out = []
+    sweeps = {(hops, overlap, remote): "ring_schedule"
+              for hops in range(1, 9)
+              for overlap in (False, True)
+              for remote in (False, True)}
+
+    # the executed artifact: production-mesh ring plans, zigzag on/off
+    from repro.kernels import ops as _ops  # noqa: F401  (registers rules)
+    from repro.kernels import partition
+    from repro.launch.op_cases import op_roofline_cases
+
+    case = next(c for c in op_roofline_cases() if c[0] == "flash_attention")
+    _op, args, kwargs = case[0], case[1], case[2]
+    mesh = partition.MeshSpec({"data": 16, "model": 16})
+    for zig in (False, True):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            plan = partition.plan_for(
+                "flash_attention", mesh, *args, **kwargs, zigzag=zig)
+        if plan is None or plan.hops < 2:
+            out.append(Finding(
+                "overlap-interleavings", "repro.kernels.partition", 0,
+                f"flash_attention ring plan (zigzag={zig}) did not resolve "
+                f"with >= 2 hops — its schedule cannot be race-checked"))
+            continue
+        for overlap in (False, True):
+            for remote in (False, True):
+                sweeps.setdefault(
+                    (plan.hops, overlap, remote), f"ring plan zigzag={zig}")
+
+    for (hops, overlap, remote), origin in sorted(
+            sweeps.items(), key=lambda kv: kv[0]):
+        events = ring_schedule(hops, overlap=overlap, remote_copy=remote)
+        problems, stats = explore.explore_hop_interleavings(
+            events, hops, ctx.budget)
+        tag = (f"{origin}(hops={hops}, overlap={overlap}, "
+               f"remote_copy={remote})")
+        out.extend(_explored_findings(
+            "overlap-interleavings", "repro.parallel.collectives", tag,
+            problems, stats, ctx))
+    return out
+
+
+# -- dtype dataflow -----------------------------------------------------------
+
+
+def check_dtype_dataflow(program, policy=None):
+    """Abstract-interpret one StreamProgram's dtype/scale dataflow.
+
+    Each stream carries a lattice value ``(class, width, scaled?)`` where
+    class is integer or floating and ``scaled?`` marks narrow value
+    streams accompanied by an fp32 scale stream (an fp32 in-stream with an
+    extent-1 block dimension — the ``gemm_scaled_program`` layout, where
+    per-block scales ride (bm, 1)/(1, bn) panels next to the values).
+    Propagation: value streams meet at the widest floating landing site
+    (scratch accumulator or out stream). Flagged, per the paper's widening
+    sum-dot-product contract (C6/Fig. 10) and the block-scaling scheme:
+
+    - fp8 value streams folding into a sub-fp32 accumulator (saturation:
+      expanding accumulation has nowhere to live) — generalizes the plan
+      tier's ``accum-dtype-widening`` to any narrow float, with the
+      accumulator *width* named
+    - narrowing without a scale: fp8 value streams (in or out) with no
+      scale stream beside them — the narrow format's dynamic range is
+      unusable without the per-block scale factors
+    - a block-scaled ``policy`` (``scale_block > 0``) whose program
+      streams no scales at all
+
+    ``policy`` is a resolved ``core.precision.Precision`` or None.
+    Returns problem strings.
+    """
+    import jax.numpy as jnp
+
+    def lattice(dt):
+        if dt is None:
+            return None
+        d = jnp.dtype(dt)
+        if jnp.issubdtype(d, jnp.floating):
+            return ("f", d.itemsize)
+        return ("i", d.itemsize)
+
+    def floats(streams):
+        out = []
+        for s in streams:
+            v = lattice(getattr(s, "dtype", None))
+            if v and v[0] == "f":
+                out.append((s, v[1]))
+        return out
+
+    in_f = floats(program.in_streams)
+    scale_streams = [
+        s for s, w in in_f
+        if w >= 4 and any(int(b) == 1 for b in s.block_shape)
+    ]
+    value_in = [(s, w) for s, w in in_f if s not in scale_streams]
+    narrow_in = [(s, w) for s, w in value_in if w == 1]
+    out_f = floats(program.out_streams)
+    narrow_out = [(s, w) for s, w in out_f if w == 1]
+    acc_widths = [w for _s, w in floats(program.scratch)]
+    acc_widths += [w for _s, w in out_f]
+    acc = max(acc_widths, default=None)
+
+    problems = []
+    if narrow_in:
+        n = len(narrow_in)
+        if acc is None:
+            problems.append(
+                f"{program.name}: {n} fp8 value stream(s) but no floating "
+                f"accumulator site at all (no scratch, no float out)")
+        elif acc < 4:
+            problems.append(
+                f"{program.name}: {n} fp8 value stream(s) fold into a "
+                f"{acc}-byte accumulator — the expanding accumulation "
+                f"needs an fp32+ scratch or out stream")
+    if (narrow_in or narrow_out) and not scale_streams:
+        where = "in" if narrow_in else "out"
+        problems.append(
+            f"{program.name}: fp8 {where}-stream(s) carry no fp32 scale "
+            f"stream — narrowing without a scale loses the dynamic range "
+            f"block scaling exists to keep")
+    if (policy is not None and policy.scale_block > 0
+            and lattice(policy.compute_dtype)[1] < 2 and not scale_streams):
+        problems.append(
+            f"{program.name}: policy {policy.name!r} block-scales every "
+            f"{policy.scale_block} elements but the program streams no "
+            f"scales")
+    return problems
+
+
+def check_quantized_pool(cache):
+    """Scale-coverage problems of one ``PagedKVCache``.
+
+    A pool holding sub-fp16 floating values is only readable through its
+    per-row scales: ``decode_attention``'s gather dequantizes each cached
+    row as ``value * scale``. Flags pools whose values are narrow but
+    whose ``k_scale``/``v_scale`` is missing, mis-shaped (must be the pool
+    shape with a trailing extent-1 scale-per-row dim), or non-fp32.
+    Returns problem strings.
+    """
+    import jax.numpy as jnp
+
+    problems = []
+    for side in ("k", "v"):
+        pool = getattr(cache, f"{side}_pool")
+        scale = getattr(cache, f"{side}_scale")
+        d = jnp.dtype(pool.dtype)
+        narrow = jnp.issubdtype(d, jnp.floating) and d.itemsize < 2
+        if not narrow:
+            continue
+        if scale is None:
+            problems.append(
+                f"{side}_pool holds {d.name} values but {side}_scale is "
+                f"None — quantized reads bypass the per-row scales")
+            continue
+        want = tuple(pool.shape[:-1]) + (1,)
+        if tuple(scale.shape) != want:
+            problems.append(
+                f"{side}_scale shape {tuple(scale.shape)} is not per-row "
+                f"{want} — gathered rows dequantize with the wrong scale")
+        if jnp.dtype(scale.dtype) != jnp.dtype(jnp.float32):
+            problems.append(
+                f"{side}_scale dtype {jnp.dtype(scale.dtype).name} is not "
+                f"float32")
+    return problems
+
+
+@register_rule("dtype-dataflow", tier="model")
+def dtype_dataflow(ctx: Context) -> list[Finding]:
+    """Dtype/scale dataflow holds across every suite program and KV pool.
+
+    Runs ``check_dtype_dataflow`` over every ``autotune.full_suite()``
+    case's StreamProgram (at pristine default geometry, each under its
+    case's resolved precision policy) and ``check_quantized_pool`` over
+    paged KV pools initialized under each quantizing policy — so an fp8
+    path that drops its scales or narrows its accumulator is a lint
+    finding, not a silent numerics regression.
+    """
+    import numpy as np
+
+    from repro.core import precision as prec
+    from repro.kernels import registry
+    from repro.launch import autotune
+    from repro.serving import paged_cache
+
+    out = []
+    rng = np.random.default_rng(0)
+    for name, factory in sorted(autotune.full_suite().items()):
+        case = factory(rng)
+        blocks = registry.block_defaults(case.op, overrides=False)
+        policy = prec.resolve(case.precision) if case.precision else None
+        for p in check_dtype_dataflow(case.program(blocks), policy):
+            out.append(Finding(
+                "dtype-dataflow", f"repro.launch.autotune:{name}", 0, p))
+
+    class _PoolCfg:
+        num_layers, num_kv_heads, dtype = 1, 2, "float32"
+
+        def resolved_head_dim(self):
+            return 8
+
+    for pol in [None] + [n for n, p in sorted(prec.POLICIES.items())
+                         if p.scale_block > 0]:
+        cache = paged_cache.init_paged_cache(
+            _PoolCfg(), num_blocks=3, block_size=2, policy=pol)
+        for p in check_quantized_pool(cache):
+            out.append(Finding(
+                "dtype-dataflow",
+                f"repro.serving.paged_cache:policy={pol}", 0, p))
+    return out

@@ -8,8 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

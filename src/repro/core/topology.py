@@ -14,8 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
 # task-spec hardware constants (TPU v5e class)
 PEAK_FLOPS_BF16 = 197e12
 HBM_BW = 819e9

@@ -157,9 +157,10 @@ def flash_attention_program(
         q_offset=q_offset, sk=sk, bq=bq, bk=bk, nk=nk, return_lse=return_lse,
         scaled=scaled,
     )
-    kv_stream = lambda dt: AffineStream(
-        (1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0), dtype=dt
-    )
+    def kv_stream(dt):
+        return AffineStream(
+            (1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0), dtype=dt
+        )
     in_streams = [
         AffineStream(
             (1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0), dtype=dtype

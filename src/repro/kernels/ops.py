@@ -42,8 +42,8 @@ from repro.kernels.registry import (  # re-exported: the public dispatch API
     kernel_call,
     resolve_blocks,
     resolve_impl,
-    set_default_impl,
 )
+from repro.kernels.registry import set_default_impl  # noqa: F401  (re-export)
 
 
 def _dispatch(op, *args, mesh=None, impl=None, **kwargs):

@@ -546,8 +546,8 @@ def _attn_levels_split(levels, batch: int):
     offered (else None), and whether ``batch`` divides it (B-over-``data``
     composition is legal).
     """
-    heads = tuple(l for l in levels if l[0] != "data")
-    data = next((l for l in levels if l[0] == "data"), None)
+    heads = tuple(lv for lv in levels if lv[0] != "data")
+    data = next((lv for lv in levels if lv[0] == "data"), None)
     batch_ok = data is not None and batch % data[1] == 0
     return heads, data, batch_ok
 
@@ -556,8 +556,8 @@ def _attn_used(levels, head_ok: bool, data_used: bool):
     """The subset of ``levels`` a composed attention plan actually shards
     over, preserving mesh (outer→inner) order."""
     return tuple(
-        l for l in levels
-        if (l[0] == "data" and data_used) or (l[0] != "data" and head_ok)
+        lv for lv in levels
+        if (lv[0] == "data" and data_used) or (lv[0] != "data" and head_ok)
     )
 
 

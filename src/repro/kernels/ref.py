@@ -182,9 +182,8 @@ def decode_attention_paged_ref(
         v = prec.dequantize_blockwise(v, v_scale, axis=-1)
     B, nb = block_table.shape
     K, bs, D = k.shape[1], k.shape[2], k.shape[3]
-    gather = lambda pool: jnp.moveaxis(pool[block_table], 1, 2).reshape(
-        B, K, nb * bs, D
-    )
+    def gather(pool):
+        return jnp.moveaxis(pool[block_table], 1, 2).reshape(B, K, nb * bs, D)
     return decode_attention_ref(
         q, gather(k), gather(v), position, window=window, scale=scale,
         pos_offset=pos_offset, return_lse=return_lse,

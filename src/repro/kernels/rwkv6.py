@@ -83,12 +83,11 @@ def linear_attention_program(
     """Chunked decay scan as a stream program: r/k/v/w chunk streams advance
     with the sequential chunk grid; u and the initial state are resident."""
     nc = Tp // chunk
-    chunk_stream = lambda w, dt: AffineStream(
-        (1, chunk, w), lambda b, c: (b, c, 0), dtype=dt
-    )
-    resident = lambda shape, dt: AffineStream(
-        shape, lambda b, c: (b, 0, 0), dtype=dt
-    )
+    def chunk_stream(w, dt):
+        return AffineStream((1, chunk, w), lambda b, c: (b, c, 0), dtype=dt)
+
+    def resident(shape, dt):
+        return AffineStream(shape, lambda b, c: (b, 0, 0), dtype=dt)
     return StreamProgram(
         name="linear_attention",
         body=functools.partial(_la_kernel, ssd=ssd, nc=nc, chunk=chunk),
@@ -125,12 +124,16 @@ def linear_attention_pallas(
     chunk = resolve_blocks("linear_attention", chunk=chunk)["chunk"]
     pad = (-T) % chunk
     if pad:
-        zp = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        def zp(x):
+            return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
         r, k, v, w_log = zp(r), zp(k), zp(v), zp(w_log)
     Tp = T + pad
     BH = B * H
 
-    flat = lambda x: x.reshape(BH, Tp, x.shape[-1])
+    def flat(x):
+        return x.reshape(BH, Tp, x.shape[-1])
+
     rf, kf, vf, wf = flat(r), flat(k), flat(v), flat(w_log)
     uf = (
         jnp.zeros((BH, 1, N), jnp.float32)

@@ -39,9 +39,9 @@ def _ell_kernel(values_ref, cols_ref, dense_ref, o_ref, *, L):
     vals = values_ref[...]  # (bm, L)
     cols = cols_ref[...]  # (bm, L)
     acc = jnp.zeros_like(o_ref, dtype=jnp.float32)
-    for l in range(L):  # static unroll: L is the padded nnz/row
-        rows = dense_ref[cols[:, l]]  # (bm, F) gather from VMEM
-        acc += vals[:, l : l + 1].astype(jnp.float32) * rows.astype(jnp.float32)
+    for j in range(L):  # static unroll: L is the padded nnz/row
+        rows = dense_ref[cols[:, j]]  # (bm, F) gather from VMEM
+        acc += vals[:, j : j + 1].astype(jnp.float32) * rows.astype(jnp.float32)
     o_ref[...] = acc.astype(o_ref.dtype)
 
 

@@ -33,8 +33,11 @@ def spmspm_program(Rp, Cp, La, Lb, bm, bn, a_dtype, b_dtype,
                    idx_dtype=jnp.int32) -> StreamProgram:
     """Blocked intersection as a stream program: the A value/index streams
     advance with the row grid, the B streams with the column grid."""
-    a_row = lambda i, j: (i, 0)
-    b_col = lambda i, j: (j, 0)
+    def a_row(i, j):
+        return (i, 0)
+
+    def b_col(i, j):
+        return (j, 0)
     return StreamProgram(
         name="spmspm",
         body=_spmspm_kernel,

@@ -42,9 +42,10 @@ def stencil_program(X, Y, Z, bx, offsets, weights, dtype) -> StreamProgram:
         _stencil_kernel, offsets=np.asarray(offsets),
         weights=np.asarray(weights), bx=bx,
     )
-    view = lambda shift: AffineStream(
-        (bx, Y, Z), lambda i: ((i + shift) % nb, 0, 0), dtype=dtype
-    )
+    def view(shift):
+        return AffineStream(
+            (bx, Y, Z), lambda i: ((i + shift) % nb, 0, 0), dtype=dtype
+        )
     return StreamProgram(
         name="stencil",
         body=body,

@@ -109,7 +109,7 @@ def flash_attention_xla(q, k, v, *, causal=True, window=0, q_offset=0,
     NEG = jnp.float32(-1e30)
 
     def body(carry, xs):
-        m, l, acc = carry
+        m, denom, acc = carry
         kblk, vblk, bidx = xs
         s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kblk.astype(jnp.float32))
         k_pos = bidx * block_k + jnp.arange(block_k)
@@ -123,23 +123,23 @@ def flash_attention_xla(q, k, v, *, causal=True, window=0, q_offset=0,
         # fully-masked rows: exp(NEG - NEG) == 1, so zero by mask explicitly
         p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
         corr = jnp.exp(m - m_new)
-        l = l * corr + p.sum(axis=-1)
+        denom = denom * corr + p.sum(axis=-1)
         acc = acc * corr[..., None] + jnp.einsum(
             "bkgqs,bksd->bkgqd", p, vblk.astype(jnp.float32)
         )
-        return (m_new, l, acc), None
+        return (m_new, denom, acc), None
 
     m0 = jnp.full((B, K, G, Sq), NEG)
     l0 = jnp.zeros((B, K, G, Sq))
     acc0 = jnp.zeros((B, K, G, Sq, D))
-    (m, l, acc), _ = jax.lax.scan(
+    (m, denom, acc), _ = jax.lax.scan(
         body, (m0, l0, acc0), (kb, vb, jnp.arange(nb))
     )
-    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = acc / jnp.maximum(denom, 1e-30)[..., None]
     o = o.reshape(B, H, Sq, D).astype(q.dtype)
     if not return_lse:
         return o
-    lse = (m + jnp.log(jnp.maximum(l, 1e-30))).reshape(B, H, Sq)
+    lse = (m + jnp.log(jnp.maximum(denom, 1e-30))).reshape(B, H, Sq)
     return o, lse
 
 
@@ -167,7 +167,7 @@ def _flash_attention_xla_unrolled(q, k, v, *, causal, window, q_offset, scale,
         qi = qf[:, :, :, i]  # (B,K,G,bq,D)
         q_lo, q_hi = q_offset + i * bq, q_offset + (i + 1) * bq - 1
         m = jnp.full((B, K, G, bq), NEG)
-        l = jnp.zeros((B, K, G, bq))
+        denom = jnp.zeros((B, K, G, bq))
         acc = jnp.zeros((B, K, G, bq, D))
         for j in range(nk):
             k_lo, k_hi = j * bk, (j + 1) * bk - 1
@@ -189,11 +189,11 @@ def _flash_attention_xla_unrolled(q, k, v, *, causal, window, q_offset, scale,
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
             corr = jnp.exp(m - m_new)
-            l = l * corr + p.sum(axis=-1)
+            denom = denom * corr + p.sum(axis=-1)
             acc = acc * corr[..., None] + jnp.einsum("bkgqs,bksd->bkgqd", p, vj)
             m = m_new
-        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
-        lses.append(m + jnp.log(jnp.maximum(l, 1e-30)))
+        outs.append(acc / jnp.maximum(denom, 1e-30)[..., None])
+        lses.append(m + jnp.log(jnp.maximum(denom, 1e-30)))
     o = jnp.concatenate(outs, axis=3).reshape(B, H, Sq + pq, D)[:, :, :Sq]
     o = o.astype(q.dtype)
     if not return_lse:
@@ -271,7 +271,9 @@ def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None,
         nb = block_table.shape[1]
         S = nb * bs
         # gather pool pages into the (nb, B, K, bs, d) stream the scan eats
-        blk = lambda x: jnp.moveaxis(x[block_table], 1, 0)
+        def blk(x):
+            return jnp.moveaxis(x[block_table], 1, 0)
+
         kb, vb = blk(k), blk(v)
         ksb = blk(k_scale) if k_scale is not None else jnp.zeros((nb,))
         vsb = blk(v_scale) if v_scale is not None else jnp.zeros((nb,))
@@ -286,7 +288,9 @@ def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None,
                 k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad), (0, 0)))
                 v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad), (0, 0)))
         nb = (S + pad) // bs
-        blk = lambda x, d: jnp.moveaxis(x.reshape(B, K, nb, bs, d), 2, 0)
+        def blk(x, d):
+            return jnp.moveaxis(x.reshape(B, K, nb, bs, d), 2, 0)
+
         kb, vb = blk(k, D), blk(v, D)
         ksb = blk(k_scale, 1) if k_scale is not None else jnp.zeros((nb,))
         vsb = blk(v_scale, 1) if v_scale is not None else jnp.zeros((nb,))
@@ -294,7 +298,7 @@ def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None,
     NEG = jnp.float32(-1e30)
 
     def body(carry, xs):
-        m, l, acc = carry
+        m, denom, acc = carry
         kblk, vblk, ksblk, vsblk, bidx = xs
         kf = kblk.astype(jnp.float32)
         vf = vblk.astype(jnp.float32)
@@ -313,9 +317,9 @@ def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None,
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
         corr = jnp.exp(m - m_new)
-        l = l * corr + p.sum(axis=-1)
+        denom = denom * corr + p.sum(axis=-1)
         acc = acc * corr[..., None] + jnp.einsum("bkgs,bksd->bkgd", p, vf)
-        return (m_new, l, acc), None
+        return (m_new, denom, acc), None
 
     m0 = jnp.full((B, K, G), NEG)
     l0 = jnp.zeros((B, K, G))
@@ -326,16 +330,16 @@ def decode_attention_xla(q, k, v, position, *, window=0, scale=None, bs=None,
             carry, _ = body(
                 carry, (kb[i], vb[i], ksb[i], vsb[i], jnp.int32(i))
             )
-        m, l, acc = carry
+        m, denom, acc = carry
     else:
-        (m, l, acc), _ = jax.lax.scan(
+        (m, denom, acc), _ = jax.lax.scan(
             body, (m0, l0, acc0), (kb, vb, ksb, vsb, jnp.arange(nb))
         )
-    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = acc / jnp.maximum(denom, 1e-30)[..., None]
     o = o.reshape(B, H, D).astype(q.dtype)
     if not return_lse:
         return o
-    lse = (m + jnp.log(jnp.maximum(l, 1e-30))).reshape(B, H)
+    lse = (m + jnp.log(jnp.maximum(denom, 1e-30))).reshape(B, H)
     return o, lse
 
 
@@ -350,16 +354,19 @@ def linear_attention_xla(r, k, v, w_log, u=None, s0=None, *, chunk=None):
     M = v.shape[-1]
     pad = (-T) % chunk
     if pad:
-        zr = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        def zr(x):
+            return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
         r, k, v, w_log = zr(r), zr(k), zr(v), zr(w_log)
     Tp = T + pad
     nc = Tp // chunk
     ssd = u is None
 
     # (nc, B, H, C, ...) for scan over chunks
-    cs = lambda x: jnp.moveaxis(
-        x.astype(jnp.float32).reshape(B, H, nc, chunk, -1), 2, 0
-    )
+    def cs(x):
+        return jnp.moveaxis(
+            x.astype(jnp.float32).reshape(B, H, nc, chunk, -1), 2, 0
+        )
     rc, kc, vc, wc = cs(r), cs(k), cs(v), cs(w_log)
 
     def body(S, xs):

@@ -225,7 +225,6 @@ def min_bytes_per_device(cfg, shape, n_dev: int, tp: int = 16) -> float:
         acts = 2 * L_ * B * S * d * bf2  # boundary save + bwd read
         logits = 2 * B * S * cfg.vocab_size * bf2
         return (param_traffic + acts + logits) / n_dev
-    p_active = cfg.num_active_params()
     tp_eff = n_dev if cfg.weights_2d_tp else tp
     if shape.kind == "prefill":
         acts = L_ * B * S * d * bf2

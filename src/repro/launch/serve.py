@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import SHAPES, get_config
+from repro.configs.base import get_config
 from repro.models import registry, transformer, multimodal
 
 

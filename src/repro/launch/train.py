@@ -12,7 +12,6 @@ import argparse
 import jax
 
 from repro.configs.base import SHAPES, get_config
-from repro.launch.mesh import host_device_mesh
 from repro.runtime import train_loop
 from repro.runtime.fault_tolerance import FailureInjector
 

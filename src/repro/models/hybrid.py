@@ -41,7 +41,6 @@ def init_params(cfg, rng):
     H, K = cfg.num_heads, cfg.num_kv_heads
     di, N = cfg.resolved_d_inner(), cfg.ssm_state
     nh = ssm_heads(cfg)
-    fm = 2 if L.is_gated(cfg.activation) else 1
     vp = L.padded_vocab(cfg.vocab_size)
 
     layers = {
@@ -116,7 +115,9 @@ def mamba_path(p, cfg, x, state=None):
 
 def block(p, cfg, h, cos, sin, is_global):
     n = L.rms_norm(h, p["attn_norm"], cfg.norm_eps)
-    attn = lambda w: T.attention(p, cfg, n, cos, sin, window=w)
+    def attn(w):
+        return T.attention(p, cfg, n, cos, sin, window=w)
+
     a = jax.lax.cond(
         is_global,
         lambda: attn(0),

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
+from repro.kernels import ops  # noqa: F401  (imports register kernel impls)
 
 VOCAB_PAD_MULTIPLE = 128  # embeddings padded so the vocab dim shards cleanly
 

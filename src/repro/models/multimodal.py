@@ -7,7 +7,6 @@ positional encoding are unified to RMSNorm+RoPE (DESIGN.md §6).
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
@@ -175,7 +174,9 @@ def build_cross_cache(params, cfg, frames):
         v = enc @ lp["cwv"]
         if "cbk" in lp:
             k, v = k + lp["cbk"], v + lp["cbv"]
-        to = lambda t: t.reshape(B, Te, K, hd).transpose(0, 2, 1, 3)
+        def to(t):
+            return t.reshape(B, Te, K, hd).transpose(0, 2, 1, 3)
+
         return to(k.astype(enc.dtype)), to(v.astype(enc.dtype))
 
     ks, vs = jax.lax.map(per_layer, params["layers"])

@@ -134,7 +134,10 @@ def time_mix(p, cfg, x, x_prev, state=None):
     Returns (out, final_state)."""
     N = cfg.resolved_head_dim()
     H = _num_heads(cfg)
-    mix = lambda mu: x * mu + x_prev * (1.0 - mu)
+
+    def mix(mu):
+        return x * mu + x_prev * (1.0 - mu)
+
     r = mix(p["mu_r"]) @ p["wr_t"]
     k = mix(p["mu_k"]) @ p["wk_t"]
     v = mix(p["mu_v"]) @ p["wv_t"]
@@ -155,7 +158,9 @@ def time_mix(p, cfg, x, x_prev, state=None):
 
 
 def channel_mix(p, cfg, x, x_prev):
-    mix = lambda mu: x * mu + x_prev * (1.0 - mu)
+    def mix(mu):
+        return x * mu + x_prev * (1.0 - mu)
+
     kk = jnp.square(
         jax.nn.relu(
             jnp.einsum("bsd,df->bsf", mix(p["mu_ck"]), p["wk_c"],
@@ -238,7 +243,9 @@ def decode_step(params, cfg, cache, batch):
     def body(h, xs):
         lp, S, ts1, ts2 = xs
         x = L.rms_norm(h, lp["tm_norm"], cfg.norm_eps)
-        mix = lambda mu, xp: x * mu + xp * (1.0 - mu)
+        def mix(mu, xp):
+            return x * mu + xp * (1.0 - mu)
+
         r = mix(lp["mu_r"], ts1) @ lp["wr_t"]
         k = mix(lp["mu_k"], ts1) @ lp["wk_t"]
         v = mix(lp["mu_v"], ts1) @ lp["wv_t"]
@@ -247,7 +254,9 @@ def decode_step(params, cfg, cache, batch):
             lp["w0"]
             + jnp.tanh(mix(lp["mu_w"], ts1) @ lp["w_lora_a"]) @ lp["w_lora_b"]
         )
-        hv = lambda t: t.reshape(-1, H, N)
+        def hv(t):
+            return t.reshape(-1, H, N)
+
         o, S = ops.linear_attention_step(
             hv(r), hv(k), hv(v), hv(wl), lp["u"], S
         )
@@ -257,7 +266,9 @@ def decode_step(params, cfg, cache, batch):
         h = h + o @ lp["wo_t"]
         ts1_new = x
         x2 = L.rms_norm(h, lp["cm_norm"], cfg.norm_eps)
-        mix2 = lambda mu: x2 * mu + ts2 * (1.0 - mu)
+        def mix2(mu):
+            return x2 * mu + ts2 * (1.0 - mu)
+
         kk = jnp.square(jax.nn.relu(mix2(lp["mu_ck"]) @ lp["wk_c"])).astype(h.dtype)
         out = kk @ lp["wv_c"]
         rr = jax.nn.sigmoid(mix2(lp["mu_cr"]) @ lp["wr_c"]).astype(h.dtype)

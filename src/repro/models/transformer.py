@@ -441,7 +441,9 @@ def attention_decode_paged(p, cfg, x, cos, sin, k_pool, v_pool, k_scale,
                                axis=1)[:, 0]
     offset = position % bs
     heads = jnp.arange(K)[None, :]
-    at = lambda pool: pool.at[phys[:, None], heads, offset[:, None]]
+    def at(pool):
+        return pool.at[phys[:, None], heads, offset[:, None]]
+
     if policy is not None:
         from repro.core import precision as prec
 

@@ -12,7 +12,9 @@ import jax.numpy as jnp
 
 
 def init_state(params, dtype=jnp.float32):
-    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, dtype)
+
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

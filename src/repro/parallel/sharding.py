@@ -11,7 +11,6 @@ the software analogue of the D2D channel allocator's graceful degradation.
 """
 from __future__ import annotations
 
-import re
 from contextlib import contextmanager
 
 import jax

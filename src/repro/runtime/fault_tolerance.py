@@ -16,7 +16,6 @@ traffic over the survivors with linear degradation. The framework analogue:
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import numpy as np

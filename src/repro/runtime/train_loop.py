@@ -22,7 +22,9 @@ def train_state_struct(cfg):
     """ShapeDtypeStructs for the train state (dry-run: no allocation)."""
     params = registry.param_shapes(cfg)
     opt_dt = jnp.dtype(cfg.optimizer_dtype)
-    like = lambda p: jax.ShapeDtypeStruct(p.shape, opt_dt)
+    def like(p):
+        return jax.ShapeDtypeStruct(p.shape, opt_dt)
+
     return {
         "params": params,
         "opt": {
@@ -123,7 +125,6 @@ def run_training(
             start_step = last
             log_fn(f"[restore] resumed from step {last}")
 
-    specs = None
     ctx = None
     step_fn = make_train_step(cfg, microbatches, grad_compression)
     if mesh is not None:

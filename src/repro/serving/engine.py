@@ -154,9 +154,10 @@ class PagedModel:
                 logits, kv = tr.prefill_step(params, cfg, {"tokens": tokens},
                                              max_len=sb)
                 nl, _, K, _, hd = kv["k"].shape
-                rows = lambda x: jnp.moveaxis(
-                    x[:, 0].reshape(nl, K, nbp, self.block_size, hd), 2, 1
-                )  # (nl, nbp, K, bs, hd)
+                def rows(x):  # (nl, nbp, K, bs, hd)
+                    return jnp.moveaxis(
+                        x[:, 0].reshape(nl, K, nbp, self.block_size, hd), 2, 1
+                    )
                 cache = cache.write_prompt(block_ids, rows(kv["k"]),
                                            rows(kv["v"]))
                 first = jnp.argmax(

@@ -343,3 +343,94 @@ class ContinuousBatchingScheduler:
         return tuple(
             (e[1], e[2], e[3]) for e in self.events if e[0] == "admit"
         )
+
+
+# -- first-class transitions (tier-C model-checking seam) ---------------------
+#
+# The engine drives the scheduler through fine-grained method calls
+# (submit / admit / ensure_block / record_token / retire). For exhaustive
+# exploration those calls are regrouped into three *atomic actions* — the
+# smallest steps whose interleavings are externally schedulable:
+#
+#   ("submit", rid)   submit request ``rid`` with arrival = current step
+#   ("admit",)        one admission pass (arrivals -> queues -> slots)
+#   ("decode", slot)  one decode step for the sequence in ``slot``:
+#                     ensure_block (may preempt, possibly itself) then
+#                     record_token and retire when max_new_tokens is hit
+#
+# ``apply_action`` applies one action to a live scheduler; ``canonical_state``
+# hashes the resulting ledger into the same tuple shape the abstract model in
+# ``analysis.explore`` uses, so the bisimulation test can assert, transition
+# by transition, that the checked model never drifts from this class.
+
+ACTIONS = ("submit", "admit", "decode")
+
+
+def default_token(seq: Sequence) -> int:
+    """Deterministic token stream for model checking: 1, 2, 3, … per
+    sequence. Token *values* never influence scheduling (eos is disabled),
+    so any fixed stream explores the full reachable ledger space."""
+    return len(seq.generated) + 1
+
+
+def apply_action(sched: ContinuousBatchingScheduler, action: tuple,
+                 step: int, *, requests, token_for=default_token):
+    """Apply one atomic ``(state, action) -> state`` transition.
+
+    ``requests`` maps rid -> :class:`Request` template; submits stamp the
+    template's arrival to ``step`` so the request is immediately
+    admissible. Returns the admitted ``(rid, slot)`` pairs for an admit
+    action (the bisimulation test compares these against the abstract
+    model's), else an empty list.
+    """
+    kind = action[0]
+    if kind == "submit":
+        req = requests[action[1]]
+        sched.submit(dataclasses.replace(req, arrival=step))
+        return []
+    if kind == "admit":
+        return [(seq.rid, seq.slot) for seq in sched.admit(step)]
+    if kind == "decode":
+        seq = sched.running[action[1]]
+        if not sched.ensure_block(seq, step):
+            return []  # preempted itself: the engine skips its decode
+        sched.record_token(seq, token_for(seq))
+        if sched.should_retire(seq, None):
+            sched.retire(seq, step)
+        return []
+    raise ValueError(f"unknown action {action!r}")
+
+
+def canonical_state(sched: ContinuousBatchingScheduler):
+    """Hashable canonical ledger state, absolute time abstracted away.
+
+    ``admitted_at`` steps are compressed to dense ranks over the running
+    set (ties — same admit call — share a rank), which preserves the
+    ``_pick_victim`` ordering while letting states reached at different
+    wall-steps merge. Shape matches ``analysis.explore.SchedulerModel``'s
+    ``ledger_view`` exactly::
+
+        (queues, running, pending, free, finished)
+        queues  = ((priority, (seq, …)), …)    nonempty, ascending priority
+        running = ((slot, seq), …)             ascending slot
+        seq     = (rid, n_generated, preemptions, adm_rank, blocks)
+    """
+    ranks = {at: i for i, at in enumerate(
+        sorted({s.admitted_at for s in sched.running.values()}))}
+
+    def seq_t(s: Sequence, rank: int):
+        return (s.rid, len(s.generated), s.preemptions, rank,
+                tuple(s.blocks))
+
+    queues = tuple(
+        (prio, tuple(seq_t(s, -1) for s in sched.queues[prio]))
+        for prio in sorted(sched.queues) if sched.queues[prio]
+    )
+    running = tuple(
+        (slot, seq_t(s, ranks[s.admitted_at]))
+        for slot, s in sorted(sched.running.items())
+    )
+    pending = tuple(r.rid for r in
+                    sorted(sched.pending, key=lambda r: (r.arrival, r.rid)))
+    return (queues, running, pending, tuple(sched.allocator.free),
+            tuple(sorted(sched.finished)))

@@ -1,0 +1,53 @@
+"""Seeded-bad precision dataflow: fp8 streams, fp16 accumulator, no scales.
+
+``make_program()`` builds a StreamProgram that streams fp8 values but
+accumulates in float16 and carries no fp32 scale streams — both halves of
+the block-scaling contract broken at once (saturating accumulation AND
+narrowing without a scale), so ``check_dtype_dataflow`` must report
+exactly two problems. ``make_pool()`` builds a PagedKVCache whose value
+pools are fp8 with ``k_scale``/``v_scale`` dropped — the quantized-pool
+bypass ``check_quantized_pool`` must flag once per pool side.
+
+Imported by ``tests/test_explore.py`` (needs jax for the dtypes; fixture
+factories are functions so importing the module stays cheap).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.streams import AffineStream, StreamProgram
+from repro.serving.paged_cache import PagedKVCache
+
+BM = BN = BK = 8
+
+
+def make_program() -> StreamProgram:
+    """fp8 gemm tile with a float16 accumulator and no scale streams."""
+    f8 = jnp.float8_e4m3fn
+    return StreamProgram(
+        name="bad_fp8_gemm",
+        body=lambda a, b, o, acc: None,
+        grid=(2, 2, 2),
+        in_streams=(
+            AffineStream((BM, BK), lambda i, j, k: (i, k), dtype=f8),
+            AffineStream((BK, BN), lambda i, j, k: (k, j), dtype=f8),
+        ),
+        out_streams=(
+            AffineStream((BM, BN), lambda i, j, k: (i, j),
+                         dtype=jnp.float16),
+        ),
+        out_shapes=(jax.ShapeDtypeStruct((2 * BM, 2 * BN), jnp.float16),),
+        scratch=(jax.ShapeDtypeStruct((BM, BN), jnp.float16),),  # BUG
+    )
+
+
+def make_pool() -> PagedKVCache:
+    """fp8 KV pools whose per-row scales were dropped."""
+    shape = (1, 3, 2, 2, 4)  # (nl, P, K, bs, hd)
+    return PagedKVCache(
+        k_pool=jnp.zeros(shape, jnp.float8_e4m3fn),
+        v_pool=jnp.zeros(shape, jnp.float8_e4m3fn),
+        k_scale=None,  # BUG: quantized reads bypass the scales
+        v_scale=None,
+        block_size=2,
+        policy="fp8",
+    )

@@ -24,11 +24,12 @@ FIXTURES = pathlib.Path(__file__).parent / "analysis_fixtures"
 
 def test_rule_inventory():
     rules = registered_rules()
-    by_tier = {"ast": [], "plan": []}
+    by_tier = {"ast": [], "plan": [], "model": []}
     for r in rules:
         by_tier[r.tier].append(r.name)
     assert len(by_tier["ast"]) >= 5, by_tier
     assert len(by_tier["plan"]) >= 3, by_tier
+    assert len(by_tier["model"]) >= 3, by_tier
     assert len(rules) == len({r.name for r in rules})  # unique names
     assert all(r.doc for r in rules), "every rule carries a --list summary"
 
@@ -220,7 +221,9 @@ def test_check_accum_widening_requires_wide_landing_site():
     from repro.core.streams import AffineStream, StreamProgram
 
     def prog(in_dt, out_dt, scratch=()):
-        st = lambda dt: AffineStream((8, 8), lambda i: (i, 0), dtype=dt)
+        def st(dt):
+            return AffineStream((8, 8), lambda i: (i, 0), dtype=dt)
+
         return StreamProgram(
             name="narrow", body=lambda *_: None, grid=(2,),
             in_streams=(st(in_dt),), out_streams=(st(out_dt),),

@@ -7,7 +7,6 @@ import subprocess
 import sys
 import textwrap
 
-import jax
 import pytest
 
 from repro.configs.base import all_arch_ids
@@ -77,7 +76,7 @@ def test_sharding_rules_and_multidevice_compile():
         capture_output=True, text=True, env=env, timeout=900,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT:")][-1]
     out = json.loads(line[len("RESULT:"):])
     assert set(out["specs_ok"]) == set(all_arch_ids())
     assert out["lowered"] == ["qwen3-14b", "grok-1-314b", "rwkv6-3b"]

@@ -1,6 +1,5 @@
 """Per-kernel allclose vs the pure-jnp oracles (interpret mode), with
 shape/dtype sweeps as required for every Pallas kernel."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

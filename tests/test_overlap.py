@@ -160,7 +160,7 @@ def test_overlap_equivalence_8dev():
         capture_output=True, text=True, env=env, timeout=900,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT:")][-1]
     out = json.loads(line[len("RESULT:"):])
     # every mask x impl combination matched the single-device reference AND
     # agreed bitwise (o and lse) with its synchronous oracle

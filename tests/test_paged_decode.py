@@ -22,7 +22,7 @@ import pytest
 
 from repro.core import precision as prec
 from repro.kernels import ops
-from repro.serving.paged_cache import NULL_BLOCK, PagedKVCache, init_paged_cache
+from repro.serving.paged_cache import NULL_BLOCK, init_paged_cache
 from repro.serving.ring_decode import ring_decode_reference
 
 
@@ -356,8 +356,8 @@ def test_ring_decode_8dev_bitwise_vs_reference():
         capture_output=True, text=True, env=env, timeout=900,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines()
-            if l.startswith("RESULT:")][-1]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT:")][-1]
     out = json.loads(line[len("RESULT:"):])
     assert out["ring_vs_ref_bitwise"], out
     assert out["overlap_invariant"], out

@@ -620,7 +620,7 @@ def test_sharded_equivalence_all_ops():
         capture_output=True, text=True, env=env, timeout=900,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT:")][-1]
     out = json.loads(line[len("RESULT:"):])
     # every partitioned op x impl combination ran and matched
     for op_tag in ("gemm", "flash", "linattn_rwkv", "linattn_ssd", "spmm",
@@ -761,7 +761,7 @@ def test_sharded_equivalence_all_ops_three_axis():
         capture_output=True, text=True, env=env, timeout=900,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT:")][-1]
     out = json.loads(line[len("RESULT:"):])
     for op_tag in ("gemm", "flash", "linattn_rwkv", "linattn_ssd", "spmm",
                    "bsr_spmm", "spmspm", "stencil"):
@@ -1025,7 +1025,7 @@ def test_ring_and_batch_attention_equivalence_8dev():
         capture_output=True, text=True, env=env, timeout=900,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT:")][-1]
     out = json.loads(line[len("RESULT:"):])
     # every mask x GQA x impl ring combination ran and matched
     for tag in ("gqa", "hostile"):

@@ -243,7 +243,7 @@ def test_docgen_dispatch_table_lists_precisions():
     assert "| precisions |" in text
     assert "| `gemm` | " in text and "fp32, bf16, fp8, fp8_e5m2" in text
     # fp32-only ops say so (no scaled path advertised)
-    line = next(l for l in text.splitlines() if l.startswith("| `stencil`"))
+    line = next(ln for ln in text.splitlines() if ln.startswith("| `stencil`"))
     assert line.rstrip().endswith("| fp32 |")
 
 
@@ -363,7 +363,7 @@ def test_sharded_fp8_equivalence_subprocess():
         capture_output=True, text=True, env=env, timeout=900,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT:")][-1]
     out = json.loads(line[len("RESULT:"):])
     for impl in ("xla", "interpret"):
         assert f"gemm_fp8[{impl}]" in out["ok"]

@@ -131,7 +131,9 @@ def test_adamw_descends_quadratic(seed):
     rng = np.random.default_rng(seed)
     params = {"w": jnp.asarray(rng.standard_normal((8,)), jnp.float32)}
     opt = adamw.init_state(params)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
     l0 = float(loss(params))
     for _ in range(30):
         g = jax.grad(loss)(params)

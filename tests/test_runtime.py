@@ -118,8 +118,9 @@ def test_microbatched_grads_match_full_batch():
     params = registry.init_params(CFG, jax.random.PRNGKey(0))
     batch = registry.make_batch(CFG, SHAPES["train_4k"], batch_override=4,
                                 seq_override=16)
-    lg = lambda p, b: jax.value_and_grad(
-        lambda q: registry.loss_fn(q, CFG, b))(p)
+    def lg(p, b):
+        return jax.value_and_grad(lambda q: registry.loss_fn(q, CFG, b))(p)
+
     l_full, g_full = lg(params, batch)
     l_micro, g_micro = microbatched(lg, 2)(params, batch)
     np.testing.assert_allclose(float(l_full), float(l_micro), rtol=1e-5)
